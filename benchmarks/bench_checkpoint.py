@@ -1,0 +1,214 @@
+"""Checkpoint I/O benchmarks — analogues of the paper's Tables 6.1–6.5.
+
+The container has one spindle-less local FS, so absolute numbers are not
+ARCHER2's; the *shapes* of the experiments match the paper: write-buffer
+("stripe size") and writer-count sweeps, weak scaling of the save/load
+phases, same-count exact reload, and time-series appends against a
+section saved once.
+"""
+
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core.chunk_layout import ArraySpec, StateLayout
+from repro.core.comm import Comm
+from repro.core.resharder import reshard
+from repro.core.star_forest import partition_sizes
+from repro.core.store import DatasetStore
+from repro.core.tensor_ckpt import (
+    TensorCheckpoint,
+    balanced_chunk_partition,
+    shards_from_arrays,
+)
+from repro.distrib.sharding import canonical_regions
+
+
+def _mk_state(nranks: int, elems_per_rank: int, seed: int = 0):
+    """One fp64 array, one chunk per rank (the paper's per-process Vec)."""
+    total = nranks * elems_per_rank
+    layout = StateLayout((ArraySpec("vec", (total,), "float64",
+                                    (elems_per_rank,)),))
+    rng = np.random.default_rng(seed)
+    arrays = {"vec": rng.normal(size=total)}
+    ownership = balanced_chunk_partition(layout, nranks)
+    return layout, arrays, shards_from_arrays(layout, arrays, ownership)
+
+
+def _save(tmpdir, layout, per_rank, comm, buffer_rows=None, steps=(0,)):
+    store = DatasetStore(tmpdir, "w", buffer_rows=buffer_rows)
+    ck = TensorCheckpoint(store)
+    ck.save_layout(layout)
+    for s in steps:
+        ck.save_state(per_rank, comm, s)
+    return store, ck
+
+
+def stripe_sweep(elems_per_rank: int = 1 << 17) -> list[dict]:
+    """Table 6.1/6.2 analogue: write bandwidth vs write-buffer size
+    ("stripe size") x writer count."""
+    rows = []
+    for nranks in (2, 4, 8):
+        for buf_rows in (1 << 12, 1 << 15, 1 << 18):
+            layout, _, per_rank = _mk_state(nranks, elems_per_rank)
+            comm = Comm(nranks)
+            tmp = tempfile.mkdtemp(prefix="stripe_")
+            t0 = time.perf_counter()
+            store, _ = _save(tmp, layout, per_rank, comm,
+                             buffer_rows=buf_rows)
+            dt = time.perf_counter() - t0
+            gib = store.stats.bytes_written / 2 ** 30
+            rows.append({"ranks": nranks,
+                         "buffer_MiB": buf_rows * 8 / 2 ** 20,
+                         "GiB": round(gib, 3),
+                         "seconds": round(dt, 3),
+                         "GiB_per_s": round(gib / dt, 2)})
+            shutil.rmtree(tmp)
+    return rows
+
+
+def weak_scaling_save(elems_per_rank: int = 1 << 17) -> list[dict]:
+    """Table 6.3 analogue: per-phase save times (Layout~Topology,
+    Section, Vec) at fixed per-rank data as rank count grows."""
+    rows = []
+    for nranks in (1, 2, 4, 8):
+        layout, _, per_rank = _mk_state(nranks, elems_per_rank)
+        comm = Comm(nranks)
+        tmp = tempfile.mkdtemp(prefix="weak_save_")
+        store = DatasetStore(tmp, "w")
+        ck = TensorCheckpoint(store)
+        t0 = time.perf_counter()
+        ck.save_layout(layout)
+        t_layout = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        ck.save_state(per_rank, comm, 0)       # section + vec
+        t_first = time.perf_counter() - t1
+        t2 = time.perf_counter()
+        ck.save_state(per_rank, comm, 1)       # vec only (same epoch)
+        t_vec = time.perf_counter() - t2
+        vec_bytes = nranks * elems_per_rank * 8
+        rows.append({
+            "ranks": nranks,
+            "layout_s": round(t_layout, 4),
+            "section_s": round(max(t_first - t_vec, 0.0), 4),
+            "vec_s": round(t_vec, 4),
+            "vec_GiB_per_s": round(vec_bytes / 2 ** 30 / max(t_vec, 1e-9),
+                                   2),
+        })
+        shutil.rmtree(tmp)
+    return rows
+
+
+def weak_scaling_load(elems_per_rank: int = 1 << 17) -> list[dict]:
+    """Table 6.4 analogue: N-to-M load with redistribution (M != N)."""
+    rows = []
+    for nranks in (2, 4, 8):
+        layout, arrays, per_rank = _mk_state(nranks, elems_per_rank)
+        comm = Comm(nranks)
+        tmp = tempfile.mkdtemp(prefix="weak_load_")
+        store, ck = _save(tmp, layout, per_rank, comm)
+        m = {2: 3, 4: 3, 8: 5}.get(nranks, nranks + 1)  # != N
+        comm_m = Comm(m)
+        plan = [{"vec": regs} for regs in
+                canonical_regions((len(arrays["vec"]),), m)]
+        t0 = time.perf_counter()
+        out = ck.load_state(plan, comm_m, 0)
+        dt = time.perf_counter() - t0
+        got = np.concatenate([np.concatenate([b.reshape(-1) for b in
+                                              r["vec"]])
+                              for r in out if r])
+        assert np.array_equal(got, arrays["vec"])
+        gib = store.stats.bytes_read / 2 ** 30
+        rows.append({"save_ranks": nranks, "load_ranks": m,
+                     "seconds": round(dt, 3),
+                     "read_GiB": round(gib, 3),
+                     "GiB_per_s": round(gib / dt, 2)})
+        shutil.rmtree(tmp)
+    return rows
+
+
+def weak_scaling_load_exact(elems_per_rank: int = 1 << 17) -> list[dict]:
+    """Table 6.5 analogue: same-count reload (fast path, zero index math)
+    vs the general path at the same M."""
+    rows = []
+    for nranks in (2, 4, 8):
+        layout, arrays, per_rank = _mk_state(nranks, elems_per_rank)
+        comm = Comm(nranks)
+        tmp = tempfile.mkdtemp(prefix="exact_load_")
+        store, ck = _save(tmp, layout, per_rank, comm)
+        # exact: target regions == saved chunks
+        grid = layout.spec("vec").grid
+        plan_exact = [{"vec": [grid.chunk_box(int(o))
+                               for o in per_rank[r]["vec"].ordinals]}
+                      for r in range(nranks)]
+        t0 = time.perf_counter()
+        ck.load_state(plan_exact, comm, 0)
+        t_exact = time.perf_counter() - t0
+        # general path at same M (canonical target regions)
+        plan_gen = [{"vec": regs} for regs in
+                    canonical_regions((len(arrays["vec"]),), nranks)]
+        t1 = time.perf_counter()
+        ck.load_state(plan_gen, comm, 0)
+        t_gen = time.perf_counter() - t1
+        rows.append({"ranks": nranks,
+                     "exact_s": round(t_exact, 4),
+                     "general_s": round(t_gen, 4),
+                     "speedup": round(t_gen / max(t_exact, 1e-9), 2)})
+        shutil.rmtree(tmp)
+    return rows
+
+
+def timeseries_append(elems_per_rank: int = 1 << 16,
+                      steps: int = 8) -> dict:
+    """§2.2.7: the section is written ONCE; each step appends only a vec."""
+    nranks = 4
+    layout, _, per_rank = _mk_state(nranks, elems_per_rank)
+    comm = Comm(nranks)
+    tmp = tempfile.mkdtemp(prefix="ts_")
+    store = DatasetStore(tmp, "w")
+    ck = TensorCheckpoint(store)
+    ck.save_layout(layout)
+    times = []
+    for s in range(steps):
+        t0 = time.perf_counter()
+        ck.save_state(per_rank, comm, s)
+        times.append(time.perf_counter() - t0)
+    sections = [d for d in store.datasets() if d.endswith("/G")]
+    vecs = [d for d in store.datasets() if d.endswith("/vec")]
+    shutil.rmtree(tmp)
+    return {"steps": steps,
+            "sections_written": len(sections),
+            "vecs_written": len(vecs),
+            "first_step_s": round(times[0], 4),
+            "later_steps_s": round(float(np.mean(times[1:])), 4)}
+
+
+def reshard_bench(elems: int = 1 << 22) -> list[dict]:
+    """In-memory elastic reshard N -> M (beyond-paper): wall time + wire
+    bytes from the comm accounting."""
+    rows = []
+    layout = StateLayout((ArraySpec("vec", (elems,), "float32",
+                                    (elems // 64,)),))
+    rng = np.random.default_rng(0)
+    arrays = {"vec": rng.normal(size=elems).astype(np.float32)}
+    for n, m in ((8, 2), (8, 12), (4, 16)):
+        ownership = balanced_chunk_partition(layout, n)
+        src = shards_from_arrays(layout, arrays, ownership)
+        plan = [{"vec": regs} for regs in canonical_regions((elems,), m)]
+        comm_src, comm_dst = Comm(n), Comm(m)
+        t0 = time.perf_counter()
+        out = reshard(layout, src, plan, comm_src, comm_dst)
+        dt = time.perf_counter() - t0
+        got = np.concatenate([np.concatenate([b.reshape(-1) for b in
+                                              r["vec"]])
+                              for r in out if r])
+        assert np.array_equal(got, arrays["vec"])
+        rows.append({"N": n, "M": m, "seconds": round(dt, 3),
+                     "wire_MiB": round((comm_src.stats.bytes_moved
+                                        + comm_dst.stats.bytes_moved)
+                                       / 2 ** 20, 1)})
+    return rows

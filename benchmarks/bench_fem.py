@@ -1,0 +1,84 @@
+"""Paper-faithful FE benchmark: Table 6.3/6.4 phase breakdown on the
+triangle-mesh DP4 problem (scaled to the container).
+
+Phases match the paper's columns: Topology (save_mesh topology part),
+Labels (boundary labels), Section (function-space data, saved once),
+Vec (DoF vector) — then the load side with redistribution.
+"""
+
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core.comm import Comm
+from repro.core.store import DatasetStore
+from repro.fem import (
+    Element,
+    FEMCheckpoint,
+    FunctionSpace,
+    distribute,
+    interpolate,
+    tri_mesh,
+)
+
+
+def _field(pts):
+    x, y = pts[:, 0], pts[:, 1]
+    return np.sin(3 * x) * (2 + np.cos(5 * y)) + x * y
+
+
+def fem_weak_scaling(sizes=((8, 8), (12, 12), (16, 16)),
+                     n_by_size=(2, 4, 8)) -> list[dict]:
+    rows = []
+    for (nx, ny), n in zip(sizes, n_by_size):
+        mesh = tri_mesh(nx, ny, seed=5)
+        boundary = {"boundary": np.array(
+            [e for e in range(mesh.num_entities)
+             if mesh.dims[e] == 1 and mesh.on_boundary(e)], dtype=np.int64)} \
+            if hasattr(mesh, "on_boundary") else None
+        comm = Comm(n)
+        plexes, _, _ = distribute(mesh, n, method="contiguous", seed=0)
+        tmp = tempfile.mkdtemp(prefix="fem_")
+        store = DatasetStore(tmp, "w")
+        ck = FEMCheckpoint(store)
+
+        t0 = time.perf_counter()
+        ck.save_mesh("m", plexes, comm, labels=boundary)
+        t_mesh = time.perf_counter() - t0
+
+        element = Element("P", 4, "triangle")        # the paper's DP4 cousin
+        spaces = [FunctionSpace(lp, element) for lp in plexes]
+        funcs = [interpolate(sp, _field) for sp in spaces]
+        t1 = time.perf_counter()
+        ck.save_function("m", "f", funcs, comm)
+        t_fn_first = time.perf_counter() - t1
+        t2 = time.perf_counter()
+        ck.save_function("m", "f2", funcs, comm)     # section reused
+        t_vec = time.perf_counter() - t2
+
+        m = max(1, n - 1)
+        comm_m = Comm(m)
+        t3 = time.perf_counter()
+        loaded = ck.load_mesh("m", comm_m, partition="contiguous", seed=1)
+        t_load_mesh = time.perf_counter() - t3
+        t4 = time.perf_counter()
+        ck.load_function(loaded, "f", comm_m)
+        t_load_fn = time.perf_counter() - t4
+
+        dofs = sum(len(f.values) for f in funcs)
+        rows.append({
+            "cells": mesh.num_cells if hasattr(mesh, "num_cells")
+            else nx * ny * 2,
+            "N": n, "M": m, "dofs~": dofs,
+            "save_mesh_s": round(t_mesh, 3),
+            "save_section_s": round(max(t_fn_first - t_vec, 0.0), 3),
+            "save_vec_s": round(t_vec, 3),
+            "load_mesh_s": round(t_load_mesh, 3),
+            "load_fn_s": round(t_load_fn, 3),
+        })
+        shutil.rmtree(tmp)
+    return rows

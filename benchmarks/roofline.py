@@ -1,0 +1,102 @@
+"""Roofline analysis (deliverable g) from the dry-run artifacts.
+
+Per (arch x shape x mesh) cell, using the prompt's hardware constants
+for TPU v5e (197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI):
+
+    compute term    = HLO_FLOPs / (chips x peak)   [per-device FLOPs / peak]
+    memory term     = HLO_bytes / (chips x bw)     [per-device bytes / bw]
+    collective term = coll_bytes / (chips x link)  [per-device bytes / link]
+
+The dry-run records are per-device and trip-count corrected (see
+launch/hlo_analysis.py), so the division by chips is already folded in.
+Also reported: MODEL_FLOPS / (HLO_FLOPs x chips) — the useful-compute
+fraction — and the step-time bound = max(term) with the roofline
+fraction = compute term / max(term).
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per link
+
+RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results"
+
+
+def load_cells(mesh: str = "single") -> list[dict]:
+    out = []
+    d = RESULTS / "dryrun" / mesh
+    if not d.exists():
+        return out
+    for p in sorted(d.glob("*.json")):
+        out.append(json.loads(p.read_text()))
+    return out
+
+
+def terms(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    compute = rec["flops"] / PEAK_FLOPS
+    memory = rec["bytes"] / HBM_BW
+    coll = rec["coll_bytes"] / LINK_BW
+    dom = max(("compute", compute), ("memory", memory),
+              ("collective", coll), key=lambda kv: kv[1])[0]
+    chips = rec["chips"]
+    useful = rec["model_flops"] / max(rec["flops"] * chips, 1.0)
+    bound = max(compute, memory, coll)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "kind": rec["kind"],
+        "chips": chips,
+        "compute_s": compute, "memory_s": memory, "collective_s": coll,
+        "dominant": dom,
+        "useful_flops_frac": useful,
+        "roofline_frac": compute / bound if bound > 0 else 0.0,
+        "bytes_per_device_GiB": rec.get("bytes_per_device", 0) / 2 ** 30,
+        "fits_16GiB": rec.get("bytes_per_device", 0) <= 16 * 2 ** 30,
+    }
+
+
+_HINT = {
+    "compute": "at the compute roof - push MFU via larger per-chip tiles",
+    "memory": "HBM-bound: fuse boundaries / remat policy / kernel tiling",
+    "collective": "ICI-bound: cut TP collectives (layout), overlap with "
+                  "compute, or trade TP for DP",
+}
+
+
+def table(mesh: str = "single") -> tuple[list[dict], str]:
+    rows = [t for t in (terms(r) for r in load_cells(mesh)) if t]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    lines = [
+        f"### Roofline ({mesh}-pod mesh)",
+        "",
+        "| arch | shape | compute s | memory s | collective s | dominant "
+        "| useful FLOPs | roofline frac | dev GiB | note |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} "
+            f"| {r['memory_s']:.4f} | {r['collective_s']:.4f} "
+            f"| {r['dominant']} | {r['useful_flops_frac']:.3f} "
+            f"| {r['roofline_frac']:.3f} | {r['bytes_per_device_GiB']:.1f} "
+            f"| {_HINT[r['dominant']]} |")
+    return rows, "\n".join(lines)
+
+
+def main():
+    for mesh in ("single", "multi"):
+        rows, md = table(mesh)
+        if rows:
+            print(md)
+            print()
+            out = RESULTS / f"roofline_{mesh}.md"
+            out.write_text(md + "\n")
+            print(f"[written {out}]")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Benchmark driver: one experiment per paper table + the roofline.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _print_table(title: str, rows: list[dict]):
+    print(f"\n== {title} ==")
+    if not rows:
+        print("(no rows)")
+        return
+    keys = list(rows[0].keys())
+    print(" | ".join(f"{k:>14s}" for k in keys))
+    for r in rows:
+        print(" | ".join(f"{str(r.get(k, '')):>14s}" for k in keys))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller sizes (CI)")
+    args = ap.parse_args(argv)
+    scale = 1 << 14 if args.quick else 1 << 17
+
+    from benchmarks import bench_checkpoint as bc
+
+    _print_table("Table 6.1/6.2 analogue: write-buffer x writer sweep",
+                 bc.stripe_sweep(elems_per_rank=scale))
+    _print_table("Table 6.3 analogue: weak-scaling save phases",
+                 bc.weak_scaling_save(elems_per_rank=scale))
+    _print_table("Table 6.4 analogue: N-to-M load + redistribute",
+                 bc.weak_scaling_load(elems_per_rank=scale))
+    _print_table("Table 6.5 analogue: same-count exact reload",
+                 bc.weak_scaling_load_exact(elems_per_rank=scale))
+    print("\n== §2.2.7: time-series appends (section saved once) ==")
+    print(json.dumps(bc.timeseries_append(elems_per_rank=scale // 2),
+                     indent=1))
+    _print_table("Beyond-paper: in-memory elastic reshard",
+                 bc.reshard_bench(elems=scale * 32))
+
+    from benchmarks.bench_fem import fem_weak_scaling
+
+    sizes = ((4, 4), (6, 6), (8, 8)) if args.quick \
+        else ((8, 8), (12, 12), (16, 16))
+    _print_table("Paper Tables 6.3/6.4 (FE path, P4 triangles)",
+                 fem_weak_scaling(sizes=sizes))
+
+    from benchmarks import roofline
+
+    for mesh in ("single", "multi"):
+        rows, md = roofline.table(mesh)
+        if rows:
+            print()
+            print(md)
+            (roofline.RESULTS / f"roofline_{mesh}.md").write_text(md + "\n")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

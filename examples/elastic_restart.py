@@ -1,0 +1,80 @@
+"""Elastic restart: train on one mesh, restart on a DIFFERENT mesh.
+
+The N-to-M headline applied to live training state: a run sharded over
+mesh (4, 2) ("data", "model") checkpoints; a second run re-loads the
+same checkpoint onto mesh (2, 4) — different device count per axis,
+different parameter partitions — and continues training seamlessly.
+The loader never sees the save-time sharding; the checkpoint's global
+numbering makes the re-partition automatic.
+
+Run:  PYTHONPATH=src python examples/elastic_restart.py
+(relaunches itself with XLA_FLAGS for 8 simulated host devices)
+"""
+
+import functools
+import os
+import shutil
+import subprocess
+import sys
+
+CKPT = "/tmp/ex_elastic_ckpt"
+
+
+def phase(mesh_shape, steps, expect_start):
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.configs.base import ShapeConfig
+    from repro.distrib.rules import rules_for
+    from repro.models.api import build_model
+    from repro.train.data import SyntheticLM
+    from repro.train.loop import Trainer, TrainerConfig
+    from repro.train.optim import make_optimizer
+    from repro.train.schedule import warmup_cosine
+    from repro.train.step import init_train_state, make_train_step
+
+    cfg = get_smoke_config("qwen3_1_7b")
+    api = build_model(cfg)
+    mesh = jax.make_mesh(mesh_shape, ("data", "model"))
+    rules = rules_for(cfg.arch)
+    shape = ShapeConfig("ex", 32, 8, "train")
+    opt = make_optimizer(cfg.optimizer)
+    sched = functools.partial(warmup_cosine, base_lr=3e-3, warmup=10,
+                              total=100)
+    step = make_train_step(api, opt, sched, mesh, rules, shape)
+    data = SyntheticLM(cfg.vocab, 32, 8, seed=0)
+    tcfg = TrainerConfig(ckpt_dir=CKPT, ckpt_every=10, log_every=10)
+    tr = Trainer(step, data, tcfg,
+                 init_state_fn=lambda: init_train_state(
+                     api, opt, jax.random.key(0)))
+    state, start = tr.restore_latest()
+    assert start == expect_start, (start, expect_start)
+    print(f"mesh {mesh_shape}: restored step {start}; param sharding "
+          f"example: "
+          f"{step.state_shardings['params/wq'].spec}")
+    res = tr.run(steps, start_state=state, start_step=start)
+    print(f"mesh {mesh_shape}: ran to step {steps}; "
+          f"last loss {tr.history[-1]['loss']:.4f}")
+
+
+def main():
+    if os.environ.get("_ELASTIC_CHILD") != "1":
+        shutil.rmtree(CKPT, ignore_errors=True)
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        env["_ELASTIC_CHILD"] = "1"
+        repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        env["PYTHONPATH"] = os.path.join(repo, "src")
+        r = subprocess.run([sys.executable, os.path.abspath(__file__)],
+                           env=env)
+        sys.exit(r.returncode)
+
+    print("== phase 1: mesh (4, 2) — N side ==")
+    phase((4, 2), steps=20, expect_start=0)
+    print("== phase 2: mesh (2, 4) — M side (elastic restart) ==")
+    phase((2, 4), steps=40, expect_start=20)
+    print("elastic N-to-M restart OK")
+
+
+if __name__ == "__main__":
+    main()

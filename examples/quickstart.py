@@ -1,0 +1,72 @@
+"""Quickstart: the N-to-M checkpointing API in five minutes.
+
+Mirrors the paper's Listing 1 (CheckpointFile) for tensor state:
+
+    save from N=4 simulated ranks  ->  load on M=3 ranks with a
+    completely different partition, bit-exact.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import tempfile
+
+import numpy as np
+
+from repro.core.chunk_layout import ArraySpec, Box, StateLayout
+from repro.core.comm import Comm
+from repro.core.store import DatasetStore
+from repro.core.tensor_ckpt import (
+    TensorCheckpoint,
+    balanced_chunk_partition,
+    shards_from_arrays,
+)
+
+
+def main():
+    # --- a "model": two arrays with different shapes/dtypes ------------
+    rng = np.random.default_rng(0)
+    arrays = {
+        "embed": rng.normal(size=(256, 64)).astype(np.float32),
+        "wq": rng.normal(size=(8, 64, 64)).astype(np.float32),
+    }
+    layout = StateLayout((
+        ArraySpec("embed", (256, 64), "float32", (64, 64)),
+        ArraySpec("wq", (8, 64, 64), "float32", (2, 64, 64)),
+    ))
+
+    # --- save from N=4 ranks (paper §2.2.3/2.2.4) -----------------------
+    N = 4
+    ownership = balanced_chunk_partition(layout, N)
+    per_rank = shards_from_arrays(layout, arrays, ownership)
+    tmp = tempfile.mkdtemp(prefix="quickstart_")
+    ck = TensorCheckpoint(DatasetStore(tmp, "w"))
+    ck.save_layout(layout)
+    ck.save_state(per_rank, Comm(N), step=0)
+    print(f"saved 2 arrays from N={N} ranks -> {tmp}")
+
+    # --- load on M=3 ranks with arbitrary target regions (§2.3) ---------
+    M = 3
+    plan = [
+        {"embed": [Box((0, 0), (100, 64))]},                   # rank 0
+        {"embed": [Box((100, 0), (256, 64))],
+         "wq": [Box((0, 0, 0), (3, 64, 64))]},                 # rank 1
+        {"wq": [Box((3, 0, 0), (8, 64, 64))]},                 # rank 2
+    ]
+    out = ck.load_state(plan, Comm(M), step=0)
+    np.testing.assert_array_equal(out[0]["embed"][0],
+                                  arrays["embed"][:100])
+    np.testing.assert_array_equal(out[1]["embed"][0],
+                                  arrays["embed"][100:])
+    np.testing.assert_array_equal(out[1]["wq"][0], arrays["wq"][:3])
+    np.testing.assert_array_equal(out[2]["wq"][0], arrays["wq"][3:])
+    print(f"loaded on M={M} ranks with a different partition: bit-exact")
+
+    # --- time series: many steps, section written once (§2.2.7) ---------
+    for step in (1, 2, 3):
+        ck.save_state(per_rank, Comm(N), step=step)
+    print(f"committed steps: {ck.steps()} "
+          f"(G/DOF/OFF written once, one vec per step)")
+
+
+if __name__ == "__main__":
+    main()

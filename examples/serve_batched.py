@@ -1,0 +1,62 @@
+"""Batched serving example: prefill once, stream decode steps with a
+sharded KV cache (gemma2 family: alternating local/global attention,
+softcaps — the cache layout differs per layer kind).
+
+Run:  PYTHONPATH=src python examples/serve_batched.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.configs.base import ShapeConfig
+from repro.distrib.rules import rules_for
+from repro.launch.mesh import make_debug_mesh
+from repro.models.api import build_model, make_token_batch
+from repro.train.step import make_decode_step, make_prefill_step
+
+
+def main():
+    cfg = get_smoke_config("gemma2_2b")
+    api = build_model(cfg)
+    mesh = make_debug_mesh(1, 1)
+    rules = rules_for(cfg.arch)
+    B, P, G = 4, 24, 12
+    cache_len = P + G
+
+    prefill = make_prefill_step(
+        api, mesh, rules, ShapeConfig("p", P, B, "prefill"),
+        cache_len=cache_len)
+    decode = make_decode_step(
+        api, mesh, rules, ShapeConfig("d", cache_len, B, "decode"))
+
+    params = api.init(jax.random.key(0))
+    batch = make_token_batch(cfg, ShapeConfig("p", P, B, "prefill"), seed=3)
+
+    t0 = time.time()
+    logits, cache = prefill(params, batch)
+    print(f"prefill: {B} prompts x {P} tokens in {time.time()-t0:.2f}s; "
+          f"cache length={int(cache['length'])}")
+
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    generated = [np.asarray(tok)]
+    t1 = time.time()
+    for i in range(G):
+        logits, cache = decode(params, cache,
+                               {"token": tok,
+                                "pos": jnp.full((B,), P + i, jnp.int32)})
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        generated.append(np.asarray(tok))
+    dt = time.time() - t1
+    out = np.concatenate(generated, axis=1)
+    print(f"decode: {G} steps x {B} sequences in {dt:.2f}s "
+          f"({B*G/dt:.1f} tok/s on 1 CPU device)")
+    for b in range(B):
+        print(f"  seq {b}: {out[b].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Architecture configs: one module per assigned architecture.
+
+``get_config(arch_id)`` returns the full published config;
+``get_smoke_config(arch_id)`` a reduced same-family config for CPU tests.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+ARCHS = [
+    "smollm_135m",
+    "gemma2_2b",
+    "qwen3_1_7b",
+    "qwen3_4b",
+    "qwen2_vl_7b",
+    "granite_moe_3b_a800m",
+    "kimi_k2_1t_a32b",
+    "whisper_base",
+    "xlstm_350m",
+    "recurrentgemma_9b",
+]
+
+_ALIAS = {a.replace("_", "-"): a for a in ARCHS}
+# published ids use dots (qwen3-1.7b); module names use underscores
+_ALIAS.update({a.replace("_", "-").replace("-7b", ".7b"): a for a in ARCHS})
+
+
+def canonical(arch: str) -> str:
+    arch = _ALIAS.get(arch, arch)
+    return arch.replace("-", "_").replace(".", "_")
+
+
+def get_config(arch: str):
+    mod = importlib.import_module(f"repro.configs.{canonical(arch)}")
+    return mod.config()
+
+
+def get_smoke_config(arch: str):
+    mod = importlib.import_module(f"repro.configs.{canonical(arch)}")
+    return mod.smoke_config()

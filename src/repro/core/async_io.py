@@ -1,0 +1,74 @@
+"""Asynchronous checkpointing: snapshot-to-host + background write.
+
+The training loop must not stall on the filesystem (the paper's save times —
+Table 6.3 — are seconds to minutes at scale).  ``AsyncCheckpointer`` snapshots
+the state synchronously (cheap host-memory copy; on TPU this is the
+device-to-host transfer) and performs the store writes on a daemon thread,
+double-buffered: submitting a new step first waits for the previous write, so
+at most one write is in flight and at most two snapshots are alive.
+
+The commit marker (``TensorCheckpoint.save_state``'s final attrs write) is the
+*last* operation, so a crash mid-write leaves the previous committed step as
+the restart point — the recovery contract tested in
+``tests/test_async_and_failures.py``.
+"""
+
+from __future__ import annotations
+
+import copy
+import threading
+import traceback
+
+from repro.core.comm import Comm
+from repro.core.tensor_ckpt import PerRankState, TensorCheckpoint
+
+
+class AsyncCheckpointer:
+    def __init__(self, ckpt: TensorCheckpoint, comm: Comm):
+        self.ckpt = ckpt
+        self.comm = comm
+        self._thread: threading.Thread | None = None
+        self._error: BaseException | None = None
+        self.completed_steps: list[int] = []
+        # test hook: raised inside the writer thread to simulate a crash
+        self.fail_on_step: int | None = None
+
+    # ------------------------------------------------------------------ api
+    def submit(self, per_rank: PerRankState, step: int) -> None:
+        """Snapshot synchronously, write asynchronously."""
+        self.wait()                      # double buffer: one write in flight
+        snap = _snapshot(per_rank)
+        self._thread = threading.Thread(
+            target=self._write, args=(snap, step), daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError("async checkpoint write failed") from err
+
+    # ------------------------------------------------------------- internals
+    def _write(self, snap: PerRankState, step: int) -> None:
+        try:
+            if self.fail_on_step == step:
+                raise IOError(f"injected failure while writing step {step}")
+            self.ckpt.save_state(snap, self.comm, step)
+            self.completed_steps.append(step)
+        except BaseException as e:      # noqa: BLE001 — surfaced on wait()
+            self._error = e
+            traceback.clear_frames(e.__traceback__)
+
+
+def _snapshot(per_rank: PerRankState) -> PerRankState:
+    out = []
+    for st in per_rank:
+        rank = {}
+        for name, shard in st.items():
+            rank[name] = type(shard)(
+                shard.ordinals.copy(),
+                {k: v.copy() for k, v in shard.data.items()})
+        out.append(rank)
+    return out

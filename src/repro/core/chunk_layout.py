@@ -1,0 +1,200 @@
+"""Chunked layouts of tensor state — the 'mesh topology' of the adaptation.
+
+The paper's objects map onto tensor state as follows (DESIGN.md §2):
+
+  mesh entity            -> a *chunk* (axis-aligned box) of one state array
+  global number I        -> canonical enumeration: arrays in manifest order,
+                            chunks in row-major grid order within each array
+  cone order             -> global row-major order of elements *within* a box
+                            (defined by global coordinates, never by device
+                            layout — hence save/load-stable, like cones)
+  DoF count (DOF array)  -> box volume (genuinely variable: edge chunks,
+                            ragged expert shards)
+  local DoF vector       -> per-rank concatenation of owned boxes' elements
+
+A :class:`StateLayout` fixes the chunk grid of every array; ownership of
+chunks by ranks is a separate, volatile concern (exactly as mesh distribution
+is volatile while global numbers persist).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterator, Sequence
+
+import numpy as np
+
+_INT = np.int64
+
+
+@dataclasses.dataclass(frozen=True)
+class Box:
+    """Half-open axis-aligned box: [start[d], stop[d]) per dim."""
+
+    start: tuple[int, ...]
+    stop: tuple[int, ...]
+
+    def __post_init__(self):
+        assert len(self.start) == len(self.stop)
+        assert all(a <= b for a, b in zip(self.start, self.stop))
+
+    @property
+    def ndim(self) -> int:
+        return len(self.start)
+
+    @property
+    def shape(self) -> tuple[int, ...]:
+        return tuple(b - a for a, b in zip(self.start, self.stop))
+
+    @property
+    def size(self) -> int:
+        return int(math.prod(self.shape))
+
+    def intersect(self, other: "Box") -> "Box | None":
+        lo = tuple(max(a, b) for a, b in zip(self.start, other.start))
+        hi = tuple(min(a, b) for a, b in zip(self.stop, other.stop))
+        if any(l >= h for l, h in zip(lo, hi)):
+            return None
+        return Box(lo, hi)
+
+    def contains(self, other: "Box") -> bool:
+        return all(a <= c and d <= b for a, c, d, b in
+                   zip(self.start, other.start, other.stop, self.stop))
+
+    def slices(self, origin: "Box | None" = None) -> tuple[slice, ...]:
+        """Slices into an array whose [0..shape) region is ``origin``
+        (defaults to the global array)."""
+        base = origin.start if origin is not None else (0,) * self.ndim
+        return tuple(slice(a - o, b - o)
+                     for a, b, o in zip(self.start, self.stop, base))
+
+
+def row_major_ids(box: Box, within: Box) -> np.ndarray:
+    """Row-major linear positions of ``box``'s elements *within* ``within``.
+
+    This is the intra-entity DoF numbering: stable because it is defined by
+    global coordinates (the paper's cone-derived DoF order, §2.2)."""
+    assert within.contains(box)
+    grids = np.meshgrid(*[np.arange(a - wa, b - wa, dtype=_INT)
+                          for a, b, wa in
+                          zip(box.start, box.stop, within.start)],
+                        indexing="ij")
+    lin = np.zeros(box.shape, dtype=_INT)
+    stride = 1
+    for d in reversed(range(box.ndim)):
+        lin += grids[d] * stride
+        stride *= within.shape[d]
+    return lin.reshape(-1)
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkGrid:
+    """Regular chunking of an array: dim d is cut at multiples of
+    ``chunk_shape[d]`` (last chunk may be smaller — variable DoF counts)."""
+
+    shape: tuple[int, ...]
+    chunk_shape: tuple[int, ...]
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.chunk_shape)
+        assert all(c >= 1 for c in self.chunk_shape)
+
+    @property
+    def counts(self) -> tuple[int, ...]:
+        return tuple(-(-s // c) for s, c in zip(self.shape, self.chunk_shape))
+
+    @property
+    def num_chunks(self) -> int:
+        return int(math.prod(self.counts))
+
+    def chunk_box(self, ordinal: int) -> Box:
+        idx = np.unravel_index(ordinal, self.counts)
+        start = tuple(int(i) * c for i, c in zip(idx, self.chunk_shape))
+        stop = tuple(min(s + c, n) for s, c, n in
+                     zip(start, self.chunk_shape, self.shape))
+        return Box(start, stop)
+
+    def chunks_intersecting(self, region: Box) -> list[int]:
+        """Ordinals of chunks overlapping ``region`` (row-major order)."""
+        lo = [a // c for a, c in zip(region.start, self.chunk_shape)]
+        hi = [-(-b // c) for b, c in zip(region.stop, self.chunk_shape)]
+        ranges = [range(a, min(b, n)) for a, b, n in
+                  zip(lo, hi, self.counts)]
+        out = []
+        for idx in np.ndindex(*[len(r) for r in ranges]):
+            multi = tuple(ranges[d][i] for d, i in enumerate(idx))
+            out.append(int(np.ravel_multi_index(multi, self.counts)))
+        return sorted(out)
+
+    def iter_boxes(self) -> Iterator[tuple[int, Box]]:
+        for o in range(self.num_chunks):
+            yield o, self.chunk_box(o)
+
+
+@dataclasses.dataclass(frozen=True)
+class ArraySpec:
+    name: str
+    shape: tuple[int, ...]
+    dtype: str
+    chunk_shape: tuple[int, ...]
+
+    @property
+    def grid(self) -> ChunkGrid:
+        return ChunkGrid(self.shape, self.chunk_shape)
+
+    @property
+    def size(self) -> int:
+        return int(math.prod(self.shape))
+
+    @property
+    def full_box(self) -> Box:
+        return Box((0,) * len(self.shape), self.shape)
+
+
+@dataclasses.dataclass(frozen=True)
+class StateLayout:
+    """Ordered collection of chunked arrays — the checkpoint 'topology'."""
+
+    arrays: tuple[ArraySpec, ...]
+
+    def __post_init__(self):
+        names = [a.name for a in self.arrays]
+        assert len(set(names)) == len(names), "duplicate array names"
+
+    def spec(self, name: str) -> ArraySpec:
+        return next(a for a in self.arrays if a.name == name)
+
+    @property
+    def names(self) -> list[str]:
+        return [a.name for a in self.arrays]
+
+    def to_json(self) -> list[dict]:
+        return [dataclasses.asdict(a) for a in self.arrays]
+
+    @staticmethod
+    def from_json(data: Sequence[dict]) -> "StateLayout":
+        return StateLayout(tuple(
+            ArraySpec(d["name"], tuple(d["shape"]), d["dtype"],
+                      tuple(d["chunk_shape"])) for d in data))
+
+
+def default_chunk_shape(shape: tuple[int, ...], target_elems: int = 1 << 20,
+                        shard_grid: tuple[int, ...] | None = None
+                        ) -> tuple[int, ...]:
+    """Pick a chunk shape: aligned to the sharding grid (each device shard is
+    a whole number of chunks — the owner-writes-no-ghosts invariant), then cut
+    along the leading dims toward ``target_elems`` per chunk (write-balance:
+    the paper's equal-size partition keeps writers balanced)."""
+    if shard_grid is None:
+        shard_grid = (1,) * len(shape)
+    chunk = [max(1, -(-s // g)) for s, g in zip(shape, shard_grid)]
+    d = 0
+    while math.prod(chunk) > target_elems and d < len(chunk):
+        over = math.prod(chunk) // target_elems
+        if over <= 1:
+            break
+        cut = min(chunk[d], max(1, over))
+        chunk[d] = max(1, chunk[d] // cut)
+        d += 1
+    return tuple(chunk)

@@ -1,0 +1,63 @@
+"""Distributed location directory over the canonical partition (pivot L_P).
+
+Generic machinery shared by the FE path (pointSF construction, Appendix B)
+and the tensor path (in-memory resharding): owners publish
+``global number -> (rank, local index)`` onto the canonical partition of the
+global number space; any rank resolves arbitrary global numbers through it.
+No rank ever holds the full mapping — the paper's "collective metadata"
+discipline.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.comm import Comm
+from repro.core.star_forest import StarForest
+
+_INT = np.int64
+
+Directory = tuple[list[np.ndarray], list[np.ndarray]]
+
+
+def location_directory(loc_g_list: list[np.ndarray], owned_list: list[np.ndarray],
+                       total: int, comm: Comm) -> Directory:
+    """Publish (global number -> owner (rank, local index)) onto the canonical
+    partition of ``{0..total-1}``.  Unpublished numbers hold -1."""
+    M = len(loc_g_list)
+    owned_globals = [lg[ow] for lg, ow in zip(loc_g_list, owned_list)]
+    pub = StarForest.from_global_numbers(owned_globals, total, M)
+    owner_rank = [np.full(int(s), -1, dtype=_INT) for s in pub.nroots]
+    owner_idx = [np.full(int(s), -1, dtype=_INT) for s in pub.nroots]
+    leaf_rank = [np.full(len(g), r, dtype=_INT)
+                 for r, g in enumerate(owned_globals)]
+    leaf_idx = [np.flatnonzero(ow).astype(_INT) for ow in owned_list]
+    owner_rank = pub.reduce(leaf_rank, "replace", owner_rank)
+    owner_idx = pub.reduce(leaf_idx, "replace", owner_idx)
+    comm.stats.record(sum(a.nbytes for a in leaf_rank) * 2, 0)
+    return owner_rank, owner_idx
+
+
+def location_query(directory: Directory, query_globals: list[np.ndarray],
+                   total: int, comm: Comm, root_sizes: Sequence[int]
+                   ) -> StarForest:
+    """Resolve global numbers through the directory into an SF:
+    leaf (r, i) -> owner's (rank, local index).  ``root_sizes`` are the
+    owner-side local sizes (one allgathered integer per rank)."""
+    owner_rank, owner_idx = directory
+    M = len(query_globals)
+    qry = StarForest.from_global_numbers(query_globals, total, M)
+    rr = qry.bcast(owner_rank)
+    ri = qry.bcast(owner_idx)
+    comm.stats.record(sum(a.nbytes for a in rr) * 2, 0)
+    return StarForest(tuple(int(s) for s in root_sizes), tuple(rr), tuple(ri))
+
+
+def build_location_sf(loc_g_list: list[np.ndarray], owned_list: list[np.ndarray],
+                      total: int, comm: Comm) -> StarForest:
+    """Every (rank, local) copy of a global number -> its owner's copy."""
+    directory = location_directory(loc_g_list, owned_list, total, comm)
+    return location_query(directory, loc_g_list, total, comm,
+                          [len(g) for g in loc_g_list])

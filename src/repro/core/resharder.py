@@ -1,0 +1,102 @@
+"""In-memory N-to-M resharding — the paper's loader with the filesystem
+replaced by live ranks (elastic scaling without touching disk).
+
+The composition is identical to the checkpoint loader, but the pivot directory
+is built over *entities* only (one (rank, base-offset) record per chunk, never
+per element): a target rank resolves each needed chunk to its source rank and
+the chunk's base position in the source's local DoF vector, then derives
+element-level roots locally from the within-box row-major order (cone-derived
+DoF order).  A single SF bcast then moves the data — one all-to-all, which is
+also the number PetscSFBcast would issue.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.store import np_dtype
+
+from repro.core.chunk_layout import Box, StateLayout, row_major_ids
+from repro.core.comm import Comm
+from repro.core.star_forest import StarForest
+from repro.core.tensor_ckpt import PerRankState
+
+_INT = np.int64
+
+
+def reshard(layout: StateLayout, source: PerRankState,
+            plan: list[dict[str, list[Box]]], comm_src: Comm, comm_dst: Comm
+            ) -> list[dict[str, list[np.ndarray]]]:
+    """Move ``source`` (N ranks of whole chunks) onto ``plan`` (M ranks of
+    arbitrary boxes).  Returns per-target-rank arrays matching the plan."""
+    N, M = comm_src.nranks, comm_dst.nranks
+    out: list[dict[str, list[np.ndarray]]] = [dict() for _ in range(M)]
+    for spec in layout.arrays:
+        grid, name = spec.grid, spec.name
+        E = grid.num_chunks
+
+        # source side: local vec = concat of owned boxes; per-chunk base
+        src_ords = [source[r][name].ordinals if name in source[r]
+                    else np.empty(0, _INT) for r in range(N)]
+        src_vecs, src_base = [], []
+        for r in range(N):
+            blocks = [np.ascontiguousarray(source[r][name].data[int(o)])
+                      .reshape(-1) for o in src_ords[r]]
+            sizes = np.array([b.size for b in blocks], dtype=_INT)
+            base = np.concatenate([[0], np.cumsum(sizes)])[:len(sizes)]
+            src_vecs.append(np.concatenate(blocks) if blocks
+                            else np.empty(0, spec.dtype))
+            src_base.append(base.astype(_INT))
+
+        # entity directory: chunk ordinal -> (source rank, base offset)
+        pub = StarForest.from_global_numbers(src_ords, E, max(N, M))
+        dir_rank = pub.reduce(
+            [np.full(len(o), r, dtype=_INT) for r, o in enumerate(src_ords)],
+            "replace", [np.full(int(s), -1, dtype=_INT) for s in pub.nroots])
+        dir_base = pub.reduce(src_base, "replace",
+                              [np.full(int(s), -1, dtype=_INT)
+                               for s in pub.nroots])
+        comm_src.stats.record(sum(o.nbytes * 2 for o in src_ords), 0)
+
+        # target side: needed chunks -> query directory
+        regions = [plan[m].get(name, []) for m in range(M)]
+        needed = [np.array(sorted({o for b in regions[m]
+                                   for o in grid.chunks_intersecting(b)}),
+                           dtype=_INT) for m in range(M)]
+        qry = StarForest.from_global_numbers(needed, E, max(N, M))
+        got_rank = qry.bcast(dir_rank)
+        got_base = qry.bcast(dir_base)
+        comm_dst.stats.record(sum(a.nbytes * 2 for a in got_rank), 0)
+
+        # element-level SF: target element -> (source rank, vec position)
+        rr, ri, placements = [], [], []
+        for m in range(M):
+            rank_of = {int(g): int(a) for g, a in zip(needed[m], got_rank[m])}
+            base_of = {int(g): int(a) for g, a in zip(needed[m], got_base[m])}
+            rparts, iparts, pl, pos = [], [], [], 0
+            for bi, b in enumerate(regions[m]):
+                for o in grid.chunks_intersecting(b):
+                    cbox = grid.chunk_box(o)
+                    inter = b.intersect(cbox)
+                    within = row_major_ids(inter, cbox)
+                    rparts.append(np.full(inter.size, rank_of[o], dtype=_INT))
+                    iparts.append(base_of[o] + within)
+                    pl.append((bi, inter, pos))
+                    pos += inter.size
+            rr.append(np.concatenate(rparts) if rparts else np.empty(0, _INT))
+            ri.append(np.concatenate(iparts) if iparts else np.empty(0, _INT))
+            placements.append(pl)
+        # rectangular SF: M leaf ranks, N root ranks
+        sf = StarForest(tuple(len(v) for v in src_vecs), tuple(rr), tuple(ri))
+        vals = sf.bcast(src_vecs)
+        comm_dst.stats.record(sum(v.nbytes for v in vals), 0)
+
+        for m in range(M):
+            bufs = [np.empty(b.shape, dtype=np_dtype(spec.dtype))
+                    for b in regions[m]]
+            for bi, inter, pos in placements[m]:
+                bufs[bi][inter.slices(origin=regions[m][bi])] = \
+                    vals[m][pos:pos + inter.size].reshape(inter.shape)
+            if regions[m]:
+                out[m][name] = bufs
+    return out

@@ -1,0 +1,246 @@
+"""Star forests (PetscSF analogue) — the communication-pattern algebra of the paper.
+
+A star forest maps *leaves* to *roots*, where both live in "union sets" of the form
+``U = ∪_r {r} × {0..n_r-1}`` (a local index space per rank).  A leaf may be attached
+to at most one root; a root may have many leaves.  This mirrors PetscSF exactly
+[Zhang et al., IEEE TPDS 2022]; the key operations are
+
+  * ``bcast``   — copy root data to every attached leaf          (PetscSFBcast)
+  * ``reduce``  — combine leaf data into roots                   (PetscSFReduce)
+  * ``compose`` — ``C = compose(A, B)``: leaves of A → roots of B, where A's root
+                  space is B's leaf space                        (PetscSFCompose)
+  * ``invert``  — swap roots/leaves for a bijective SF
+
+All per-rank state is held in plain numpy arrays; "communication" is performed
+through a :class:`~repro.core.comm.Comm` object so that the identical rank-local
+code runs under the in-process simulator (tests) or a real multi-host runtime.
+In this module communication is expressed as vectorised gathers/scatters over the
+per-rank arrays, which is what PetscSF compiles its graphs into as well.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import numpy as np
+
+_INT = np.int64
+
+
+@dataclasses.dataclass(frozen=True)
+class StarForest:
+    """A star forest over union sets.
+
+    Per rank ``r`` there are ``nleaves[r]`` leaves and ``nroots[r]`` roots.
+    ``root_rank[r][i]`` / ``root_idx[r][i]`` give the root attached to leaf
+    ``(r, i)`` (or ``-1`` if the leaf is unattached).
+    """
+
+    nroots: tuple[int, ...]
+    root_rank: tuple[np.ndarray, ...]
+    root_idx: tuple[np.ndarray, ...]
+
+    # ------------------------------------------------------------------ basics
+    @property
+    def nranks_root(self) -> int:
+        """Rank count on the root side.  The paper's maps are all *square*
+        (I_T, I_P, L_P all live on the M loading ranks), but the in-memory
+        N→M resharder builds rectangular SFs between different communicators,
+        so leaf- and root-side rank counts are tracked independently."""
+        return len(self.nroots)
+
+    @property
+    def nranks_leaf(self) -> int:
+        return len(self.root_rank)
+
+    @property
+    def nranks(self) -> int:
+        assert self.nranks_root == self.nranks_leaf, "square SF expected"
+        return self.nranks_root
+
+    @property
+    def nleaves(self) -> tuple[int, ...]:
+        return tuple(len(a) for a in self.root_rank)
+
+    def __post_init__(self):
+        assert len(self.root_rank) == len(self.root_idx)
+        for rr, ri in zip(self.root_rank, self.root_idx):
+            assert rr.shape == ri.shape
+            att = rr >= 0
+            if att.any():
+                assert rr[att].max() < self.nranks_root
+                limits = np.asarray(self.nroots, dtype=_INT)[rr[att]]
+                assert (ri[att] < limits).all() and (ri[att] >= 0).all()
+
+    # ------------------------------------------------------------ constructors
+    @staticmethod
+    def from_edges(
+        nranks: int,
+        nroots: Sequence[int],
+        nleaves: Sequence[int],
+        edges: Sequence[tuple[tuple[int, int], tuple[int, int]]],
+    ) -> "StarForest":
+        """Build from explicit ((leaf_rank, leaf_idx), (root_rank, root_idx)) edges."""
+        rr = [np.full(nl, -1, dtype=_INT) for nl in nleaves]
+        ri = [np.full(nl, -1, dtype=_INT) for nl in nleaves]
+        for (lr, li), (rtr, rti) in edges:
+            rr[lr][li] = rtr
+            ri[lr][li] = rti
+        return StarForest(tuple(nroots), tuple(rr), tuple(ri))
+
+    @staticmethod
+    def from_partition(total: int, nranks_root: int, nranks_leaf: int) -> "StarForest":
+        """The canonical partition map χ (paper eq. 2.6 / 2.15) as a bijective SF.
+
+        The global index space ``{0..total-1}`` is split into near-equal
+        *contiguous* chunks on both sides; the SF maps leaf-side positions to
+        root-side positions of the same global index.  With matching rank
+        counts this is the identity.
+        """
+        leaf_sizes = partition_sizes(total, nranks_leaf)
+        root_sizes = partition_sizes(total, nranks_root)
+        root_starts = np.concatenate([[0], np.cumsum(root_sizes)])
+        rr, ri = [], []
+        off = 0
+        for nl in leaf_sizes:
+            g = np.arange(off, off + nl, dtype=_INT)
+            r = np.searchsorted(root_starts, g, side="right") - 1
+            rr.append(r.astype(_INT))
+            ri.append(g - root_starts[r])
+            off += nl
+        return StarForest(tuple(int(s) for s in root_sizes), tuple(rr), tuple(ri))
+
+    @staticmethod
+    def from_global_numbers(
+        leaf_globals: Sequence[np.ndarray], total: int, nranks_root: int
+    ) -> "StarForest":
+        """SF whose leaf ``(r, i)`` attaches to the canonical-partition root that
+        owns global number ``leaf_globals[r][i]`` (paper: constructing χ_{I_T}^{L_P}
+        and χ_{I_P}^{L_P} from LocG arrays)."""
+        root_sizes = partition_sizes(total, nranks_root)
+        starts = np.concatenate([[0], np.cumsum(root_sizes)])
+        rr, ri = [], []
+        for g in leaf_globals:
+            g = np.asarray(g, dtype=_INT)
+            r = np.searchsorted(starts, g, side="right") - 1
+            rr.append(r.astype(_INT))
+            ri.append(g - starts[r])
+        return StarForest(tuple(int(s) for s in root_sizes), tuple(rr), tuple(ri))
+
+    # ------------------------------------------------------------- operations
+    def bcast(self, root_data: Sequence[np.ndarray]) -> list[np.ndarray]:
+        """Copy root values to attached leaves (PetscSFBcast).
+
+        ``root_data[r]`` has leading dim ``nroots[r]``; returns per-rank leaf
+        arrays (unattached leaves are zero-filled).
+        """
+        assert len(root_data) == self.nranks_root
+        out = []
+        for r in range(self.nranks_leaf):
+            rr, ri = self.root_rank[r], self.root_idx[r]
+            nl = len(rr)
+            trailing = root_data[0].shape[1:]
+            dtype = root_data[0].dtype
+            buf = np.zeros((nl,) + trailing, dtype=dtype)
+            att = rr >= 0
+            if att.any():
+                # group by root rank to make each "message" one vectorised gather
+                for rtr in np.unique(rr[att]):
+                    sel = att & (rr == rtr)
+                    buf[sel] = root_data[rtr][ri[sel]]
+            out.append(buf)
+        return out
+
+    def reduce(
+        self,
+        leaf_data: Sequence[np.ndarray],
+        op: str = "replace",
+        root_data: Sequence[np.ndarray] | None = None,
+        trailing: tuple[int, ...] = (),
+        dtype=None,
+    ) -> list[np.ndarray]:
+        """Combine leaf values into roots (PetscSFReduce). op ∈ {replace,sum,min,max}."""
+        dtype = dtype or leaf_data[0].dtype
+        if root_data is None:
+            init = {"sum": 0, "replace": 0, "min": np.iinfo(_INT).max if np.issubdtype(dtype, np.integer) else np.inf, "max": np.iinfo(_INT).min if np.issubdtype(dtype, np.integer) else -np.inf}[op]
+            root_data = [np.full((n,) + trailing, init, dtype=dtype) for n in self.nroots]
+        for r in range(self.nranks_leaf):
+            rr, ri = self.root_rank[r], self.root_idx[r]
+            att = rr >= 0
+            if not att.any():
+                continue
+            vals = leaf_data[r][att]
+            tgt_r, tgt_i = rr[att], ri[att]
+            for rtr in np.unique(tgt_r):
+                sel = tgt_r == rtr
+                idx, v = tgt_i[sel], vals[sel]
+                if op in ("replace",):
+                    root_data[rtr][idx] = v
+                elif op == "sum":
+                    np.add.at(root_data[rtr], idx, v)
+                elif op == "min":
+                    np.minimum.at(root_data[rtr], idx, v)
+                elif op == "max":
+                    np.maximum.at(root_data[rtr], idx, v)
+        return list(root_data)
+
+    def compose(self, other: "StarForest") -> "StarForest":
+        """``self``: L_A → R_A; ``other``: L_B(=R_A) → R_B.  Result: L_A → R_B.
+
+        (PetscSFCompose.)  Implemented as a bcast of ``other``'s attachment
+        arrays through ``self`` — which is exactly how it is done distributed.
+        """
+        assert self.nroots == other.nleaves, (
+            f"compose: root space {self.nroots} != other's leaf space {other.nleaves}"
+        )
+        new_rr = self.bcast([a for a in other.root_rank])
+        new_ri = self.bcast([a for a in other.root_idx])
+        # leaves unattached in self must stay unattached
+        for r in range(self.nranks_leaf):
+            una = self.root_rank[r] < 0
+            new_rr[r][una] = -1
+            new_ri[r][una] = -1
+        return StarForest(other.nroots, tuple(new_rr), tuple(new_ri))
+
+    def invert(self, allow_partial: bool = False) -> "StarForest":
+        """Invert an injective SF (paper: (χ_{I_P}^{L_P})⁻¹).
+
+        Every root must have at most one attached leaf.  With
+        ``allow_partial`` (the shrunk-section case of §2.2.2, where entities
+        with no DoFs have no section row), roots with no leaf invert to
+        unattached leaves; composing through them leaves targets unattached,
+        which downstream bcasts zero-fill — exactly the "no DoFs here"
+        semantics.  Implemented with a reduce of the leaf identities onto the
+        roots, as PetscSF does.
+        """
+        leaf_rank_data = [
+            np.full(nl, r, dtype=_INT) for r, nl in enumerate(self.nleaves)
+        ]
+        leaf_idx_data = [np.arange(nl, dtype=_INT) for nl in self.nleaves]
+        inv_rr = self.reduce(leaf_rank_data, "replace",
+                             [np.full(n, -1, dtype=_INT) for n in self.nroots])
+        inv_ri = self.reduce(leaf_idx_data, "replace",
+                             [np.full(n, -1, dtype=_INT) for n in self.nroots])
+        if not allow_partial:
+            assert all((a >= 0).all() for a in inv_rr), "invert: SF not surjective"
+        return StarForest(self.nleaves, tuple(inv_rr), tuple(inv_ri))
+
+
+def partition_sizes(total: int, nranks: int) -> np.ndarray:
+    """Near-equal contiguous partition sizes (differ by at most one) — the
+    paper's partition formula (eq. 2.6): rank m owns [m*total//M, (m+1)*total//M)."""
+    m = np.arange(nranks + 1, dtype=_INT)
+    bounds = m * total // nranks
+    return np.diff(bounds)
+
+
+def partition_starts(total: int, nranks: int) -> np.ndarray:
+    m = np.arange(nranks + 1, dtype=_INT)
+    return m * total // nranks
+
+
+def partition_rank_of(global_idx: np.ndarray, total: int, nranks: int) -> np.ndarray:
+    """Which rank owns each global index under the canonical partition."""
+    starts = partition_starts(total, nranks)
+    return (np.searchsorted(starts, np.asarray(global_idx, dtype=_INT), side="right") - 1).astype(_INT)

@@ -1,0 +1,225 @@
+"""On-disk dataset store — the HDF5-on-Lustre analogue.
+
+The paper saves to a single HDF5 file on a striped Lustre filesystem; every
+rank writes/reads row ranges of shared datasets concurrently.  ``h5py`` is not
+available here, so :class:`DatasetStore` provides the same contract with plain
+files:
+
+  * a *dataset* is a named 2-D-or-1-D typed array backed by one ``.bin`` file
+    (row-major), created with a known row count and dtype;
+  * ranks write **contiguous row ranges** (``write_rows``) — the fast path the
+    paper optimises for (§2.2.3: each process saves its part of the global DoF
+    vector concurrently) — or **scattered rows** (``write_rows_at``), the slow
+    path (topology/labels in global-number order; cf. Table 6.3 where
+    Topology/Labels saving is far slower than Vec);
+  * ranks read contiguous ranges (``read_rows``) or scattered rows
+    (``read_rows_at`` — the loader's closure fetches);
+  * JSON attributes (``set_attrs``/``get_attrs``) play the role of HDF5
+    attributes/groups;
+  * all traffic is accounted in :attr:`IOStats` so benchmarks can report
+    bandwidth per phase exactly like Tables 6.1–6.5;
+  * ``buffer_rows`` emulates the Lustre *stripe size* tuning knob: writes are
+    staged through a bounce buffer of that many rows (benchmarks sweep it).
+
+Writes of disjoint row ranges from different (simulated) ranks are safe and
+order-independent, which is the property the parallel-FS path relies on.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Any
+
+import numpy as np
+
+
+def np_dtype(name) -> np.dtype:
+    """np.dtype constructor that also resolves ml_dtypes names (bfloat16,
+    float8_e4m3fn, ...) used by JAX state."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, str(name)))
+
+
+@dataclasses.dataclass
+class IOStats:
+    bytes_written: int = 0
+    bytes_read: int = 0
+    write_calls: int = 0
+    read_calls: int = 0
+    write_seconds: float = 0.0
+    read_seconds: float = 0.0
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class DatasetStore:
+    """A directory of named datasets + JSON attrs; one .bin file per dataset."""
+
+    def __init__(self, root: str, mode: str = "r", buffer_rows: int | None = None):
+        assert mode in ("r", "w", "a")
+        self.root = root
+        self.mode = mode
+        self.buffer_rows = buffer_rows
+        self.stats = IOStats()
+        if mode == "w":
+            os.makedirs(root, exist_ok=True)
+            self._meta = {"datasets": {}, "attrs": {}}
+            self._flush_meta()
+        else:
+            with open(self._meta_path()) as f:
+                self._meta = json.load(f)
+
+    # ------------------------------------------------------------- metadata
+    def _meta_path(self) -> str:
+        return os.path.join(self.root, "store.json")
+
+    def _flush_meta(self) -> None:
+        tmp = self._meta_path() + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(self._meta, f, indent=1, sort_keys=True)
+        os.replace(tmp, self._meta_path())  # atomic commit
+
+    def set_attrs(self, key: str, value: Any) -> None:
+        assert self.mode in ("w", "a")
+        self._meta["attrs"][key] = value
+        self._flush_meta()
+
+    def get_attrs(self, key: str) -> Any:
+        return self._meta["attrs"][key]
+
+    def has_attrs(self, key: str) -> bool:
+        return key in self._meta["attrs"]
+
+    def datasets(self) -> list[str]:
+        return sorted(self._meta["datasets"])
+
+    def has_dataset(self, name: str) -> bool:
+        return name in self._meta["datasets"]
+
+    # ------------------------------------------------------------- datasets
+    def _path(self, name: str) -> str:
+        return os.path.join(self.root, name.replace("/", "__") + ".bin")
+
+    def _info(self, name: str) -> dict:
+        return self._meta["datasets"][name]
+
+    def _row_nbytes(self, info: dict) -> int:
+        return int(np_dtype(info["dtype"]).itemsize * int(np.prod(info["row_shape"], initial=1)))
+
+    def create(self, name: str, rows: int, row_shape: tuple[int, ...] = (),
+               dtype="float64") -> None:
+        """Create a dataset of ``rows`` rows; each row has shape ``row_shape``.
+
+        The file is pre-sized (sparse) so that concurrent disjoint row-range
+        writes need no coordination — the parallel-filesystem contract.
+        """
+        assert self.mode in ("w", "a")
+        info = {"rows": int(rows), "row_shape": [int(s) for s in row_shape],
+                "dtype": str(np_dtype(dtype))}
+        self._meta["datasets"][name] = info
+        nbytes = self._row_nbytes(info) * int(rows)
+        with open(self._path(name), "wb") as f:
+            if nbytes:
+                f.truncate(nbytes)
+        self._flush_meta()
+
+    def rows(self, name: str) -> int:
+        return int(self._info(name)["rows"])
+
+    def dtype(self, name: str) -> np.dtype:
+        return np.dtype(self._info(name)["dtype"])
+
+    def row_shape(self, name: str) -> tuple[int, ...]:
+        return tuple(self._info(name)["row_shape"])
+
+    # --------------------------------------------------------------- writes
+    def write_rows(self, name: str, start: int, data: np.ndarray) -> None:
+        """Contiguous row-range write (the fast path)."""
+        info = self._info(name)
+        rb = self._row_nbytes(info)
+        data = np.ascontiguousarray(data, dtype=np_dtype(info["dtype"]))
+        assert data.shape[1:] == tuple(info["row_shape"]), (
+            f"{name}: row shape {data.shape[1:]} != {info['row_shape']}")
+        assert 0 <= start and start + data.shape[0] <= info["rows"]
+        t0 = time.perf_counter()
+        buf_rows = self.buffer_rows or data.shape[0] or 1
+        with open(self._path(name), "r+b") as f:
+            f.seek(start * rb)
+            raw = data.tobytes()  # staging copy == bounce buffer
+            step = buf_rows * rb
+            for off in range(0, len(raw), step):
+                f.write(raw[off:off + step])
+                self.stats.write_calls += 1
+        self.stats.write_seconds += time.perf_counter() - t0
+        self.stats.bytes_written += data.nbytes
+
+    def write_rows_at(self, name: str, row_idx: np.ndarray, data: np.ndarray) -> None:
+        """Scattered row writes (slow path: one seek+write per contiguous run)."""
+        info = self._info(name)
+        rb = self._row_nbytes(info)
+        data = np.ascontiguousarray(data, dtype=np_dtype(info["dtype"]))
+        row_idx = np.asarray(row_idx, dtype=np.int64)
+        assert row_idx.ndim == 1 and data.shape[0] == row_idx.shape[0]
+        if row_idx.size == 0:
+            return
+        order = np.argsort(row_idx, kind="stable")
+        row_idx, data = row_idx[order], data[order]
+        t0 = time.perf_counter()
+        # coalesce maximal contiguous runs (the loader-side optimisation of
+        # §"straggler mitigation" applies to writes too)
+        breaks = np.flatnonzero(np.diff(row_idx) != 1) + 1
+        starts = np.concatenate([[0], breaks, [row_idx.size]])
+        with open(self._path(name), "r+b") as f:
+            for a, b in zip(starts[:-1], starts[1:]):
+                f.seek(int(row_idx[a]) * rb)
+                f.write(data[a:b].tobytes())
+                self.stats.write_calls += 1
+        self.stats.write_seconds += time.perf_counter() - t0
+        self.stats.bytes_written += data.nbytes
+
+    # ---------------------------------------------------------------- reads
+    def read_rows(self, name: str, start: int, count: int) -> np.ndarray:
+        info = self._info(name)
+        rb = self._row_nbytes(info)
+        t0 = time.perf_counter()
+        with open(self._path(name), "rb") as f:
+            f.seek(start * rb)
+            raw = f.read(count * rb)
+        self.stats.read_seconds += time.perf_counter() - t0
+        self.stats.read_calls += 1
+        self.stats.bytes_read += len(raw)
+        arr = np.frombuffer(raw, dtype=np_dtype(info["dtype"]))
+        return arr.reshape((count, *info["row_shape"])).copy()
+
+    def read_rows_at(self, name: str, row_idx: np.ndarray) -> np.ndarray:
+        """Scattered row reads, coalesced into maximal contiguous runs."""
+        info = self._info(name)
+        row_idx = np.asarray(row_idx, dtype=np.int64)
+        out = np.empty((row_idx.size, *info["row_shape"]),
+                       dtype=np_dtype(info["dtype"]))
+        if row_idx.size == 0:
+            return out
+        order = np.argsort(row_idx, kind="stable")
+        sorted_idx = row_idx[order]
+        breaks = np.flatnonzero(np.diff(sorted_idx) != 1) + 1
+        starts = np.concatenate([[0], breaks, [sorted_idx.size]])
+        rb = self._row_nbytes(info)
+        t0 = time.perf_counter()
+        with open(self._path(name), "rb") as f:
+            for a, b in zip(starts[:-1], starts[1:]):
+                f.seek(int(sorted_idx[a]) * rb)
+                raw = f.read((b - a) * rb)
+                self.stats.read_calls += 1
+                self.stats.bytes_read += len(raw)
+                out[order[a:b]] = np.frombuffer(
+                    raw, dtype=np_dtype(info["dtype"])
+                ).reshape((b - a, *info["row_shape"]))
+        self.stats.read_seconds += time.perf_counter() - t0
+        return out

@@ -1,0 +1,364 @@
+"""N-to-M checkpointing of tensor state — the paper's algorithm as a
+training-framework feature.
+
+Save side (N ranks), per array (== per 'function space' of the paper):
+  * **section** (saved once per ownership epoch; §2.2.7): three datasets in
+    saver-concatenation order — G (chunk global ordinals), DOF (box volumes),
+    OFF (offsets into the element stream) — §2.2.4 verbatim.
+  * **vec** (per step): each rank writes its owned chunks' elements, flattened
+    in global row-major order within each box, as ONE contiguous range —
+    §2.2.3's bandwidth-critical path.
+  * per-chunk crc32 rows alongside each vec (integrity; beyond-paper).
+
+Load side (M ranks, arbitrary target regions — need not align with chunks):
+  * read canonical section chunks -> χ_{I_P}^{L_P} (§2.2.5);
+  * needed chunks -> χ_{I_T}^{I_P} = (χ_{I_P}^{L_P})⁻¹ ∘ χ_{I_T}^{L_P} (2.17);
+  * broadcast DOF/OFF (2.18); lift to element level via within-box row-major
+    positions (the cone-derived DoF order; 2.22–2.23);
+  * broadcast vec values from the canonical vec partition (2.24).
+
+Same-count fast path: when the target regions are exactly the chunks a rank
+saved, its vec range is read back verbatim with zero index math (§3.1 end).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import zlib
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.chunk_layout import ArraySpec, Box, StateLayout, row_major_ids
+from repro.core.comm import Comm
+from repro.core.star_forest import StarForest, partition_starts
+from repro.core.store import DatasetStore, np_dtype
+
+_INT = np.int64
+
+
+# ============================================================= save-side model
+@dataclasses.dataclass
+class ArrayShard:
+    """One rank's holding of one array: whole chunks, keyed by ordinal."""
+
+    ordinals: np.ndarray                     # ascending chunk ordinals
+    data: dict[int, np.ndarray]              # ordinal -> box-shaped block
+
+    def __post_init__(self):
+        self.ordinals = np.asarray(self.ordinals, dtype=_INT)
+        assert np.all(np.diff(self.ordinals) > 0), "ordinals must ascend"
+
+
+PerRankState = list[dict[str, ArrayShard]]   # [rank][array name]
+
+
+def balanced_chunk_partition(layout: StateLayout, nranks: int
+                             ) -> list[dict[str, np.ndarray]]:
+    """Contiguous, element-balanced assignment of all chunks (global entity
+    order) to ranks — the write-balance rule (equal-size canonical partition
+    of the paper, weighted by DoF count)."""
+    entities = []   # (array, ordinal, elems)
+    for spec in layout.arrays:
+        for o, box in spec.grid.iter_boxes():
+            entities.append((spec.name, o, box.size))
+    total = sum(e[2] for e in entities)
+    out = [dict() for _ in range(nranks)]
+    acc, r = 0, 0
+    bounds = [(i + 1) * total / nranks for i in range(nranks)]
+    per = [[] for _ in range(nranks)]
+    for name, o, sz in entities:
+        while r < nranks - 1 and acc + sz / 2 > bounds[r]:
+            r += 1
+        per[r].append((name, o))
+        acc += sz
+    for r in range(nranks):
+        by_arr: dict[str, list[int]] = {}
+        for name, o in per[r]:
+            by_arr.setdefault(name, []).append(o)
+        out[r] = {k: np.array(sorted(v), dtype=_INT)
+                  for k, v in by_arr.items()}
+    return out
+
+
+def shards_from_arrays(layout: StateLayout, arrays: dict[str, np.ndarray],
+                       ownership: list[dict[str, np.ndarray]]) -> PerRankState:
+    """Cut monolithic arrays into per-rank ArrayShards (test/sim helper)."""
+    out: PerRankState = []
+    for rank_own in ownership:
+        rank_state: dict[str, ArrayShard] = {}
+        for name, ords in rank_own.items():
+            spec = layout.spec(name)
+            data = {int(o):
+                    arrays[name][spec.grid.chunk_box(int(o)).slices()].copy()
+                    for o in ords}
+            rank_state[name] = ArrayShard(ords, data)
+        out.append(rank_state)
+    return out
+
+
+def _ownership_fingerprint(per_rank: PerRankState, name: str) -> str:
+    h = hashlib.sha256()
+    for r, st in enumerate(per_rank):
+        ords = st[name].ordinals if name in st else np.empty(0, _INT)
+        h.update(np.int64(r).tobytes())
+        h.update(ords.tobytes())
+    return h.hexdigest()[:16]
+
+
+# ================================================================== the file
+class TensorCheckpoint:
+    """CheckpointFile (§5) for tensor state over a :class:`DatasetStore`."""
+
+    def __init__(self, store: DatasetStore):
+        self.store = store
+
+    # ---------------------------------------------------------------- layout
+    def save_layout(self, layout: StateLayout, extra: dict | None = None):
+        self.store.set_attrs("layout", layout.to_json())
+        self.store.set_attrs("meta", {"epochs": {}, "steps": {},
+                                      "extra": extra or {}})
+
+    def layout(self) -> StateLayout:
+        return StateLayout.from_json(self.store.get_attrs("layout"))
+
+    def steps(self) -> list[int]:
+        return sorted(int(s) for s in self.store.get_attrs("meta")["steps"])
+
+    # ----------------------------------------------------------------- save
+    def save_state(self, per_rank: PerRankState, comm: Comm, step: int) -> None:
+        layout = self.layout()
+        meta = self.store.get_attrs("meta")
+        N = comm.nranks
+        assert len(per_rank) == N
+        for spec in layout.arrays:
+            self._save_array(spec, per_rank, comm, step, meta)
+        # atomic commit: the step becomes visible only with this write
+        meta["steps"][str(step)] = {
+            name: meta["epochs"][name]["current"] for name in layout.names}
+        self.store.set_attrs("meta", meta)
+
+    def _save_array(self, spec: ArraySpec, per_rank: PerRankState, comm: Comm,
+                    step: int, meta: dict) -> None:
+        st, N, name = self.store, comm.nranks, spec.name
+        fp = _ownership_fingerprint(per_rank, name)
+        epochs = meta["epochs"].setdefault(
+            name, {"current": -1, "fingerprints": {}})
+        if epochs["fingerprints"].get(fp) is None:
+            # new ownership epoch: write the section once (§2.2.7)
+            epoch = epochs["current"] + 1
+            epochs["fingerprints"][fp] = epoch
+            epochs["current"] = epoch
+            self._write_section(spec, per_rank, comm, epoch, meta)
+        epoch = epochs["fingerprints"][fp]
+        epochs["current"] = epoch
+        sec = meta[f"section/{name}/e{epoch}"]
+        d_base, e_base = sec["d_base"], sec["e_base"]
+
+        vec = f"{name}/e{epoch}/s{step}/vec"
+        crc = f"{name}/e{epoch}/s{step}/crc"
+        st.create(vec, spec.size, dtype=spec.dtype)
+        st.create(crc, sec["Eo"], dtype="int64")
+        for r in range(N):
+            sh = per_rank[r].get(name)
+            if sh is None or len(sh.ordinals) == 0:
+                continue
+            blocks = [np.ascontiguousarray(sh.data[int(o)]).reshape(-1)
+                      for o in sh.ordinals]
+            st.write_rows(vec, d_base[r], np.concatenate(blocks))
+            crcs = np.array([zlib.crc32(b.tobytes()) for b in blocks],
+                            dtype=_INT)
+            st.write_rows(crc, e_base[r], crcs)
+
+    def _write_section(self, spec: ArraySpec, per_rank: PerRankState,
+                       comm: Comm, epoch: int, meta: dict) -> None:
+        st, N, name = self.store, comm.nranks, spec.name
+        grid = spec.grid
+        ords = [per_rank[r][name].ordinals if name in per_rank[r]
+                else np.empty(0, _INT) for r in range(N)]
+        sizes = [np.array([grid.chunk_box(int(o)).size for o in oo],
+                          dtype=_INT) for oo in ords]
+        e_cnt = [len(o) for o in ords]
+        d_cnt = [int(s.sum()) for s in sizes]
+        e_base = comm.exscan_sum(e_cnt)
+        d_base = comm.exscan_sum(d_cnt)
+        Eo = e_base[-1] + e_cnt[-1]
+        assert Eo == grid.num_chunks, (
+            f"{name}: owned chunks {Eo} != grid chunks {grid.num_chunks} "
+            "(every chunk must be owned exactly once — replicas are ghosts)")
+        key = f"{name}/e{epoch}"
+        st.create(f"{key}/G", Eo, dtype="int64")
+        st.create(f"{key}/DOF", Eo, dtype="int64")
+        st.create(f"{key}/OFF", Eo, dtype="int64")
+        for r in range(N):
+            off = d_base[r] + np.concatenate(
+                [[0], np.cumsum(sizes[r])])[:len(sizes[r])]
+            st.write_rows(f"{key}/G", e_base[r], ords[r])
+            st.write_rows(f"{key}/DOF", e_base[r], sizes[r])
+            st.write_rows(f"{key}/OFF", e_base[r], off.astype(_INT))
+        meta[f"section/{name}/e{epoch}"] = {
+            "Eo": Eo, "D": spec.size, "nranks": N,
+            "e_base": e_base, "d_base": d_base,
+            "e_cnt": e_cnt, "d_cnt": d_cnt,
+            "ordinals_per_rank": [o.tolist() for o in ords],
+        }
+
+    # ----------------------------------------------------------------- load
+    def load_state(self, plan: list[dict[str, list[Box]]], comm: Comm,
+                   step: int) -> list[dict[str, list[np.ndarray]]]:
+        """``plan[rank][array] = [target Box, ...]`` -> same structure of
+        filled numpy arrays.  Regions may cut across saved chunks freely."""
+        layout = self.layout()
+        meta = self.store.get_attrs("meta")
+        step_epochs = meta["steps"][str(step)]
+        M = comm.nranks
+        assert len(plan) == M
+        out: list[dict[str, list[np.ndarray]]] = [dict() for _ in range(M)]
+        for spec in layout.arrays:
+            regions = [plan[m].get(spec.name, []) for m in range(M)]
+            if not any(regions):
+                continue
+            vals = self._load_array(spec, regions, comm,
+                                    int(step_epochs[spec.name]), step, meta)
+            for m in range(M):
+                if regions[m]:
+                    out[m][spec.name] = vals[m]
+        return out
+
+    def _load_array(self, spec: ArraySpec, regions: list[list[Box]],
+                    comm: Comm, epoch: int, step: int, meta: dict
+                    ) -> list[list[np.ndarray]]:
+        st, M, name = self.store, comm.nranks, spec.name
+        grid = spec.grid
+        sec = meta[f"section/{name}/e{epoch}"]
+        Eo, D = sec["Eo"], sec["D"]
+        key = f"{name}/e{epoch}"
+        vec = f"{key}/s{step}/vec"
+
+        # ---- same-count fast path (§3.1): regions == saved chunks ----------
+        if M == sec["nranks"] and _plan_matches_saved(grid, regions, sec):
+            out = []
+            for m in range(M):
+                if sec["d_cnt"][m] == 0:
+                    out.append([])
+                    continue
+                rows = st.read_rows(vec, sec["d_base"][m], sec["d_cnt"][m])
+                blocks, p = [], 0
+                for o in sec["ordinals_per_rank"][m]:
+                    box = grid.chunk_box(int(o))
+                    blocks.append(rows[p:p + box.size].reshape(box.shape))
+                    p += box.size
+                out.append(blocks)
+            return out
+
+        # ---- general path ---------------------------------------------------
+        # needed chunks per rank (I_T), ascending
+        needed = [np.array(sorted({o for b in regions[m]
+                                   for o in grid.chunks_intersecting(b)}),
+                           dtype=_INT) for m in range(M)]
+
+        # §2.2.5: canonical section chunks -> χ_{I_P}^{L_P}
+        estarts = partition_starts(Eo, M)
+        locG, locDOF, locOFF = [], [], []
+        for m in range(M):
+            a, n = int(estarts[m]), int(estarts[m + 1] - estarts[m])
+            locG.append(st.read_rows(f"{key}/G", a, n).astype(_INT))
+            locDOF.append(st.read_rows(f"{key}/DOF", a, n).astype(_INT))
+            locOFF.append(st.read_rows(f"{key}/OFF", a, n).astype(_INT))
+        chi_IP_LP = StarForest.from_global_numbers(locG, grid.num_chunks, M)
+
+        # (2.17): χ_{I_T}^{I_P}
+        chi_IT_LP = StarForest.from_global_numbers(needed, grid.num_chunks, M)
+        chi_IT_IP = chi_IT_LP.compose(chi_IP_LP.invert(allow_partial=True))
+
+        # (2.18): broadcast OFF (and DOF, for validation)
+        OFF_T = chi_IT_IP.bcast(locOFF)
+        DOF_T = chi_IT_IP.bcast(locDOF)
+        for m in range(M):
+            want = np.array([grid.chunk_box(int(o)).size for o in needed[m]],
+                            dtype=_INT)
+            assert np.array_equal(DOF_T[m], want), (
+                f"{name}: saved chunk sizes disagree with layout")
+
+        # (2.22–2.23): element-level global ids for every target element
+        dof_ids: list[np.ndarray] = []
+        placements: list[list[tuple[int, Box, Box, int]]] = []
+        for m in range(M):
+            off_of = {int(g): int(o) for g, o in zip(needed[m], OFF_T[m])}
+            ids_parts = []
+            pl = []
+            pos = 0
+            for bi, b in enumerate(regions[m]):
+                for o in grid.chunks_intersecting(b):
+                    cbox = grid.chunk_box(o)
+                    inter = b.intersect(cbox)
+                    within = row_major_ids(inter, cbox)
+                    ids_parts.append(off_of[o] + within)
+                    pl.append((bi, inter, cbox, pos))
+                    pos += inter.size
+            dof_ids.append(np.concatenate(ids_parts) if ids_parts
+                           else np.empty(0, _INT))
+            placements.append(pl)
+
+        # (2.24): broadcast the vec through χ_{J_T}^{J_P}
+        chi_JT_JP = StarForest.from_global_numbers(dof_ids, D, M)
+        dstarts = partition_starts(D, M)
+        locVEC = [st.read_rows(vec, int(dstarts[m]),
+                               int(dstarts[m + 1] - dstarts[m]))
+                  for m in range(M)]
+        VEC_T = chi_JT_JP.bcast(locVEC)
+
+        # scatter into the target region arrays
+        out: list[list[np.ndarray]] = []
+        for m in range(M):
+            bufs = [np.empty(b.shape, dtype=np_dtype(spec.dtype))
+                    for b in regions[m]]
+            for bi, inter, _cbox, pos in placements[m]:
+                tgt = regions[m][bi]
+                bufs[bi][inter.slices(origin=tgt)] = \
+                    VEC_T[m][pos:pos + inter.size].reshape(inter.shape)
+            out.append(bufs)
+        return out
+
+    # ------------------------------------------------------------- integrity
+    def verify_step(self, comm: Comm, step: int) -> bool:
+        """Distributed integrity scan: each rank re-reads the entities in its
+        canonical L_P chunk and checks the stored per-chunk crc32."""
+        layout = self.layout()
+        meta = self.store.get_attrs("meta")
+        step_epochs = meta["steps"][str(step)]
+        M = comm.nranks
+        ok = True
+        for spec in layout.arrays:
+            epoch = int(step_epochs[spec.name])
+            key = f"{spec.name}/e{epoch}"
+            sec = meta[f"section/{spec.name}/e{epoch}"]
+            Eo = sec["Eo"]
+            estarts = partition_starts(Eo, M)
+            for m in range(M):
+                a, n = int(estarts[m]), int(estarts[m + 1] - estarts[m])
+                if n == 0:
+                    continue
+                dof = self.store.read_rows(f"{key}/DOF", a, n).astype(_INT)
+                off = self.store.read_rows(f"{key}/OFF", a, n).astype(_INT)
+                crc = self.store.read_rows(f"{key}/s{step}/crc", a, n)
+                for i in range(n):
+                    vals = self.store.read_rows(f"{key}/s{step}/vec",
+                                                int(off[i]), int(dof[i]))
+                    if zlib.crc32(np.ascontiguousarray(vals).tobytes()) \
+                            != int(crc[i]):
+                        ok = False
+        return ok
+
+
+def _plan_matches_saved(grid, regions: list[list[Box]], sec: dict) -> bool:
+    """True iff every rank's target regions are exactly its saved chunks."""
+    for m, regs in enumerate(regions):
+        saved = [grid.chunk_box(int(o)) for o in sec["ordinals_per_rank"][m]]
+        if len(regs) != len(saved):
+            return False
+        key = lambda b: (b.start, b.stop)
+        if sorted(regs, key=key) != sorted(saved, key=key):
+            return False
+    return True

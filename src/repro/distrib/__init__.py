@@ -1,0 +1,2 @@
+from repro.distrib.context import MeshContext, mesh_context, use_mesh_context
+from repro.distrib.rules import RuleTable, rules_for

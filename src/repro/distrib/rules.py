@@ -1,0 +1,166 @@
+"""Per-architecture sharding rule tables (logical axis -> mesh axes).
+
+The baseline layout is 2-D "FSDP + TP" (MaxText-style):
+
+  * ``model`` axis (16-wide): tensor parallelism — attention heads, MLP
+    hidden, expert dimension, vocab;
+  * ``data`` axis (16-wide): batch parallelism for activations AND ZeRO-3
+    parameter sharding on the embed/expert-in dims (params are stored
+    sharded over data and all-gathered per layer inside the scan);
+  * ``pod`` axis (multi-pod): pure data parallelism — batch is sharded
+    over (pod, data); gradients all-reduce over pod.
+
+Per-arch deviations are RULE-TABLE entries, never code changes:
+
+  * whisper-base: vocab 51865 is odd — vocab replicated (the embed matrix
+    is 25 MB; negligible);
+  * recurrentgemma-9b: MQA (kv_heads = 1) — kv_heads replicated;
+  * xlstm-350m: 4 heads — heads replicated (head math is folded into the
+    "mlp"-tagged inner width, which IS sharded).
+
+Changing a table IS the perf hillclimbing knob (EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+AxisEntry = str | tuple[str, ...] | None
+
+
+@dataclasses.dataclass(frozen=True)
+class RuleTable:
+    """Logical-name -> mesh-axes table + derived helpers."""
+
+    table: Mapping[str, AxisEntry]
+    batch_axes: tuple[str, ...] = ("data",)
+
+    def spec_for(self, logical_axes: tuple[str | None, ...],
+                 shape: tuple[int, ...] | None = None,
+                 mesh: jax.sharding.Mesh | None = None) -> P:
+        """PartitionSpec for one array.  A mesh axis is used at most once
+        per array (first logical dim wins); entries whose dim size is not
+        divisible by the mesh-axis extent degrade to replication."""
+        out: list[AxisEntry] = []
+        used: set[str] = set()
+        for d, name in enumerate(logical_axes):
+            entry = self.table.get(name) if name is not None else None
+            axes = _as_tuple(entry)
+            axes = tuple(a for a in axes if a not in used)
+            if shape is not None and mesh is not None and axes:
+                k = 1
+                for a in axes:
+                    k *= mesh.shape[a]
+                if shape[d] % k != 0:
+                    axes = ()
+            used.update(axes)
+            out.append(axes if len(axes) > 1 else (axes[0] if axes else None))
+        while out and out[-1] is None:
+            out.pop()
+        return P(*out)
+
+    def sharding_for(self, mesh, logical_axes, shape=None) -> NamedSharding:
+        return NamedSharding(mesh, self.spec_for(logical_axes, shape, mesh))
+
+    def batch_spec(self, ndim: int) -> P:
+        """Leading-dim batch sharding for step inputs."""
+        if ndim == 0:
+            return P()
+        return P(self.batch_axes, *([None] * (ndim - 1)))
+
+
+def _as_tuple(entry: AxisEntry) -> tuple[str, ...]:
+    if entry is None:
+        return ()
+    if isinstance(entry, str):
+        return (entry,)
+    return tuple(entry)
+
+
+# ------------------------------------------------------------ base tables
+def base_table(multi_pod: bool, *, fsdp: bool = True) -> dict[str, AxisEntry]:
+    """The baseline FSDP+TP layout shared by all archs."""
+    return {
+        # tensor-parallel dims
+        "vocab": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "mlp": "model",
+        "experts": "model",
+        "expert_mlp": None,          # experts already shard over model
+        # ZeRO-3 dims
+        "embed": "data" if fsdp else None,
+        "expert_in": "data" if fsdp else None,
+        # activations / step state
+        "batch": ("pod", "data") if multi_pod else "data",
+        # KV caches shard their SEQUENCE dim over model: no assigned arch
+        # has >= 16 kv heads, so head-sharding the cache cannot use the
+        # 16-wide model axis; sequence-parallel KV does (the softmax
+        # reductions over the sharded seq dim are tiny [B, H] scalars).
+        "kv_seq": "model",
+        "layers": None,
+    }
+
+
+_ARCH_OVERRIDES: dict[str, dict[str, AxisEntry]] = {
+    "whisper-base": {"vocab": None, "embed": "data"},
+    "recurrentgemma-9b": {"kv_heads": None},
+    "xlstm-350m": {"heads": None},
+}
+
+def rules_for(arch: str, *, multi_pod: bool = False, fsdp: bool = True,
+              shape_name: str | None = None, perf: bool = True,
+              extra: Mapping[str, AxisEntry] | None = None) -> RuleTable:
+    """``perf=False`` gives the paper-faithful baseline; ``perf=True``
+    additionally applies configs/perf.py's hillclimb overrides."""
+    table = base_table(multi_pod, fsdp=fsdp)
+    table.update(_ARCH_OVERRIDES.get(arch, {}))
+    if perf and shape_name is not None:
+        from repro.configs.perf import rule_overrides
+
+        mesh_tag = "multi" if multi_pod else "single"
+        for k, v in rule_overrides(arch, shape_name, mesh_tag).items():
+            if not multi_pod and v is not None:
+                axes = _as_tuple(v)
+                if "pod" in axes:
+                    v = tuple(a for a in axes if a != "pod") or None
+            table[k] = v
+    if extra:
+        table.update(extra)
+    batch_axes = _as_tuple(table["batch"])
+    return RuleTable(table=table, batch_axes=batch_axes)
+
+
+# ------------------------------------------------------- tree-level helpers
+def param_shardings(mesh, rules: RuleTable, param_specs) -> dict:
+    """name -> NamedSharding for a ModelApi's param_specs."""
+    return {name: rules.sharding_for(mesh, spec.axes, spec.shape)
+            for name, spec in param_specs.items()}
+
+
+def batch_shardings(mesh, rules: RuleTable, batch_specs: dict) -> dict:
+    """Step-input shardings: leading dim over the batch axes (shapes whose
+    leading dim does not divide the batch extent are replicated)."""
+    import math
+
+    bsz = math.prod(mesh.shape[a] for a in rules.batch_axes)
+    out = {}
+    for k, sds in batch_specs.items():
+        if sds.shape and sds.shape[0] % bsz == 0 and sds.shape[0] > 0:
+            out[k] = NamedSharding(mesh, rules.batch_spec(len(sds.shape)))
+        else:
+            out[k] = NamedSharding(mesh, P())
+    return out
+
+
+def cache_shardings(mesh, rules: RuleTable, cache_specs: dict,
+                    cache_axes: dict) -> dict:
+    out = {}
+    for k, sds in cache_specs.items():
+        axes = cache_axes[k]
+        out[k] = rules.sharding_for(mesh, tuple(axes), tuple(sds.shape))
+    return out

@@ -1,0 +1,24 @@
+"""Faithful reproduction of the paper's finite-element N-to-M checkpointing.
+
+This subpackage is the paper *as written*: DMPlex-style DAG meshes with
+ordered cones (``plex``), nodal finite elements with cone-derived DoF
+orderings and orientation permutations (``element``, §4), PetscSection
+analogues (``section``), functions (``function``), and the full
+save/load/broadcast pipeline of §2–§3 (``checkpoint``).
+
+The JAX training-framework adaptation of the same algorithm lives in
+``repro.core`` (tensor state instead of FE functions); both share
+``repro.core.star_forest`` and ``repro.core.store``.
+"""
+
+from repro.fem.plex import Plex, LocalPlex, distribute, interval_mesh, tri_mesh
+from repro.fem.element import Element
+from repro.fem.section import FunctionSpace
+from repro.fem.function import Function, interpolate, node_points
+from repro.fem.checkpoint import FEMCheckpoint
+
+__all__ = [
+    "Plex", "LocalPlex", "distribute", "interval_mesh", "tri_mesh",
+    "Element", "FunctionSpace", "Function", "interpolate", "node_points",
+    "FEMCheckpoint",
+]

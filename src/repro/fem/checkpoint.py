@@ -1,0 +1,616 @@
+"""The paper's N-to-M checkpointing pipeline for FE meshes and functions.
+
+Save side (N ranks):
+  * ``save_mesh``      — DMPlexTopologyView + DMPlexLabelsView +
+                          DMPlexCoordinatesView analogues.  Topology rows are
+                          routed to the canonical partition of the global
+                          numbering and written contiguously (many small
+                          integer datasets — the reason Topology/Labels saving
+                          dominates Table 6.3).
+  * ``save_function``  — DMPlexSectionView (once per space; §2.2.7) +
+                          DMPlexGlobalVectorView.  Section and vector rows are
+                          written in *saver concatenation order* — each rank
+                          one contiguous write — with G_P recording the global
+                          numbers (§2.2.3–2.2.4).  This is the bandwidth-
+                          critical fast path.
+
+Load side (M ranks, M independent of N):
+  * ``load_mesh``      — the three-step reconstruction of Appendix B:
+                          (1) naive canonical partition → T00,
+                          (2) repartition cells → T0,
+                          (3) grow overlap → T;
+                          with star forests χ_{I_T00}^{L_P}, χ_{I_T0}^{I_T00},
+                          χ_{I_T}^{I_T0} composed into χ_{I_T}^{L_P} (B.4).
+  * ``load_function``  — χ_{I_P}^{L_P} from the loaded G_P chunks (§2.2.5),
+                          χ_{I_T}^{I_P} = (χ_{I_P}^{L_P})⁻¹ ∘ χ_{I_T}^{L_P}
+                          (2.17), entity→DoF lift (2.22–2.23), and the final
+                          broadcast VEC_T[j_T] = VEC_P[χ(j_T)] (2.24).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.comm import Comm
+from repro.core.star_forest import (
+    StarForest,
+    partition_rank_of,
+    partition_sizes,
+    partition_starts,
+)
+from repro.core.store import DatasetStore
+from repro.fem.element import Element
+from repro.fem.function import Function
+from repro.fem.plex import (
+    LocalPlex,
+    _local_order,
+    location_directory,
+    location_query,
+)
+from repro.fem.section import FunctionSpace
+
+_INT = np.int64
+
+
+# ===================================================================== utils
+def _route_rows(comm: Comm, total: int, ids: list[np.ndarray],
+                payloads: list[dict[str, np.ndarray]]
+                ) -> tuple[list[np.ndarray], list[dict[str, np.ndarray]]]:
+    """Route per-rank (global id, payload-row) pairs to the canonical holder
+    of each id.  Returns per-rank sorted ids and payloads for the holder's
+    chunk.  Payload values may be 1-D (one scalar per id) or ragged via a
+    companion ``<name>__sizes`` convention handled by the caller."""
+    R = comm.nranks
+    send_ids = [[None] * R for _ in range(R)]
+    send_pay = [[{} for _ in range(R)] for _ in range(R)]
+    for r in range(R):
+        dest = partition_rank_of(ids[r], total, R)
+        for d in range(R):
+            sel = dest == d
+            send_ids[r][d] = ids[r][sel]
+            for k, v in payloads[r].items():
+                send_pay[r][d][k] = v[sel]
+    recv_ids = comm.alltoallv([[a.astype(_INT) for a in row] for row in send_ids])
+    out_ids, out_pay = [], []
+    keys = list(payloads[0].keys()) if payloads else []
+    recv_pay = {k: comm.alltoallv([[send_pay[s][d][k] for d in range(R)]
+                                   for s in range(R)]) for k in keys}
+    for d in range(R):
+        cat = np.concatenate(recv_ids[d]) if recv_ids[d] else np.empty(0, _INT)
+        order = np.argsort(cat, kind="stable")
+        out_ids.append(cat[order])
+        pay = {}
+        for k in keys:
+            vals = np.concatenate(recv_pay[k][d])
+            pay[k] = vals[order]
+        out_pay.append(pay)
+    return out_ids, out_pay
+
+
+def chi_to_LP(loc_g_list: list[np.ndarray], total: int) -> StarForest:
+    """χ_{X}^{L_P}: SF from any local numbering carrying LocG arrays to the
+    canonical partition of the global numbers (2.7 / 2.12)."""
+    return StarForest.from_global_numbers(loc_g_list, total, len(loc_g_list))
+
+
+# ============================================================ loaded mesh box
+@dataclasses.dataclass
+class LoadedMesh:
+    plexes: list[LocalPlex]
+    chi_IT_LP: StarForest          # composed per Appendix B (B.4)
+    point_sf: StarForest
+    E: int
+    dim: int
+    name: str
+    labels: dict[str, list[np.ndarray]]
+
+
+class FEMCheckpoint:
+    """CheckpointFile analogue (§5) over a :class:`DatasetStore`."""
+
+    def __init__(self, store: DatasetStore):
+        self.store = store
+
+    # ------------------------------------------------------------- save mesh
+    def save_mesh(self, name: str, plexes: list[LocalPlex], comm: Comm,
+                  labels: dict[str, list[np.ndarray]] | None = None) -> None:
+        st, N = self.store, comm.nranks
+        owned_counts = [int(lp.owned.sum()) for lp in plexes]
+        owned_ids = [lp.loc_g[lp.owned] for lp in plexes]
+        E = int(max((ids.max(initial=-1) for ids in owned_ids), default=-1)) + 1
+        gdim = next((lp.vcoords.shape[1] for lp in plexes
+                     if lp.vcoords is not None), 1)
+        dim = plexes[0].dim
+
+        # ---- topology: cones in global numbering, rows indexed by I --------
+        cone_sz = [np.array([len(plexes[r].cones[i])
+                             for i in np.flatnonzero(plexes[r].owned)], dtype=_INT)
+                   for r in range(N)]
+        cone_flat = [np.concatenate(
+            [plexes[r].loc_g[plexes[r].cones[i]]
+             for i in np.flatnonzero(plexes[r].owned)] or [np.empty(0, _INT)]
+        ).astype(_INT) for r in range(N)]
+        dims_payload = [plexes[r].dims[plexes[r].owned].astype(_INT)
+                        for r in range(N)]
+        owner_payload = [plexes[r].owner[plexes[r].owned].astype(_INT)
+                         for r in range(N)]
+
+        ids_c, pay_c = _route_rows(
+            comm, E, owned_ids,
+            [{"dims": dims_payload[r], "sizes": cone_sz[r],
+              "owner": owner_payload[r]} for r in range(N)],
+        )
+        # ragged cone payload: second routing pass keyed by repeated ids
+        cone_ids = [np.repeat(owned_ids[r], cone_sz[r]) for r in range(N)]
+        ids_k, pay_k = _route_rows(comm, E, cone_ids,
+                                   [{"cones": cone_flat[r]} for r in range(N)])
+
+        starts = partition_starts(E, N)
+        chunk_sizes = [pay_c[r]["sizes"] for r in range(N)]
+        chunk_totals = [int(s.sum()) for s in chunk_sizes]
+        bases = comm.exscan_sum(chunk_totals)
+        total_cones = bases[-1] + chunk_totals[-1] if N else 0
+
+        st.create(f"{name}/topology/dims", E, dtype="int64")
+        st.create(f"{name}/topology/cone_sizes", E, dtype="int64")
+        st.create(f"{name}/topology/cone_offsets", E + 1, dtype="int64")
+        st.create(f"{name}/topology/cones", total_cones, dtype="int64")
+        st.create(f"{name}/topology/entity_owner", E, dtype="int64")
+        for r in range(N):
+            a = int(starts[r])
+            assert np.array_equal(ids_c[r], np.arange(a, int(starts[r + 1]))), \
+                "every global number must be owned by exactly one rank"
+            st.write_rows(f"{name}/topology/dims", a, pay_c[r]["dims"])
+            st.write_rows(f"{name}/topology/cone_sizes", a, chunk_sizes[r])
+            offs = bases[r] + np.concatenate([[0], np.cumsum(chunk_sizes[r])])
+            st.write_rows(f"{name}/topology/cone_offsets", a, offs[:-1])
+            if r == N - 1:
+                st.write_rows(f"{name}/topology/cone_offsets", E,
+                              np.array([total_cones], dtype=_INT))
+            st.write_rows(f"{name}/topology/entity_owner", a, pay_c[r]["owner"])
+            st.write_rows(f"{name}/topology/cones", bases[r], pay_k[r]["cones"])
+
+        # ---- labels (DMLabelsView): one global-indexed row per label -------
+        labels = labels or {}
+        for lname, per_rank in labels.items():
+            vals = [per_rank[r][plexes[r].owned].astype(_INT) for r in range(N)]
+            ids_l, pay_l = _route_rows(comm, E, owned_ids,
+                                       [{"v": vals[r]} for r in range(N)])
+            st.create(f"{name}/labels/{lname}", E, dtype="int64")
+            for r in range(N):
+                st.write_rows(f"{name}/labels/{lname}", int(starts[r]),
+                              pay_l[r]["v"])
+
+        st.set_attrs(f"{name}/meta", {
+            "E": E, "dim": dim, "gdim": gdim, "nranks_saved": N,
+            "labels": sorted(labels),
+        })
+
+        # ---- coordinates: a P1 vector function, saved like any function ----
+        if plexes[0].vcoords is not None:
+            coord_el = Element("P", 1, "interval" if dim == 1 else "triangle")
+            spaces = [FunctionSpace(lp, coord_el, bs=gdim) for lp in plexes]
+            funcs = []
+            for lp, sp in zip(plexes, spaces):
+                vals = np.zeros(sp.ndof_local)
+                for i in range(lp.num_entities):
+                    if lp.dims[i] == 0:
+                        vals[sp.loc_off[i]:sp.loc_off[i] + gdim] = lp.vcoords[i]
+                funcs.append(Function(sp, vals))
+            self.save_function(name, "__coordinates", funcs, comm)
+
+    # --------------------------------------------------------- save function
+    def _section_key(self, mesh: str, sp: FunctionSpace) -> str:
+        el = sp.element
+        return f"{mesh}/section/{el.family}{el.degree}_{el.cell}_bs{sp.bs}"
+
+    def save_function(self, mesh: str, fname: str, funcs: list[Function],
+                      comm: Comm, time_index: int | None = None) -> None:
+        """DMPlexSectionView (first call per space) + DMPlexGlobalVectorView."""
+        st, N = self.store, comm.nranks
+        spaces = [f.space for f in funcs]
+        key = self._section_key(mesh, spaces[0])
+        E = self.store.get_attrs(f"{mesh}/meta")["E"]
+
+        # --- global section: concatenation order, G_P records global numbers
+        sel = [np.flatnonzero((sp.plex.owned) & (sp.loc_dof > 0))
+               for sp in spaces]
+        e_cnt = [len(s) for s in sel]
+        d_cnt = [int(sp.loc_dof[s].sum()) for sp, s in zip(spaces, sel)]
+        e_base = comm.exscan_sum(e_cnt)
+        d_base = comm.exscan_sum(d_cnt)
+        Eo = e_base[-1] + e_cnt[-1]
+        D = d_base[-1] + d_cnt[-1]
+
+        if not st.has_dataset(f"{key}/G"):
+            st.create(f"{key}/G", Eo, dtype="int64")
+            st.create(f"{key}/DOF", Eo, dtype="int64")
+            st.create(f"{key}/OFF", Eo, dtype="int64")
+            for r in range(N):
+                sp, s = spaces[r], sel[r]
+                dof = sp.loc_dof[s]
+                off = d_base[r] + np.concatenate([[0], np.cumsum(dof)])[:len(dof)]
+                st.write_rows(f"{key}/G", e_base[r], sp.plex.loc_g[s])
+                st.write_rows(f"{key}/DOF", e_base[r], dof)
+                st.write_rows(f"{key}/OFF", e_base[r], off.astype(_INT))
+            el = spaces[0].element
+            st.set_attrs(f"{key}/meta", {
+                "D": D, "Eo": Eo, "family": el.family, "degree": el.degree,
+                "cell": el.cell, "bs": spaces[0].bs,
+            })
+
+        # --- global DoF vector: one contiguous write per rank (§2.2.3) ------
+        suffix = "" if time_index is None else f"_t{time_index}"
+        vec_name = f"{mesh}/func/{fname}/vec{suffix}"
+        st.create(vec_name, D, dtype="float64")
+        for r in range(N):
+            sp, s = spaces[r], sel[r]
+            chunks = [funcs[r].values[sp.loc_off[i]:sp.loc_off[i] + sp.loc_dof[i]]
+                      for i in s]
+            vals = (np.concatenate(chunks) if chunks
+                    else np.empty(0, np.float64))
+            st.write_rows(vec_name, d_base[r], vals)
+        st.set_attrs(f"{mesh}/func/{fname}/meta", {"section": key})
+
+    # ------------------------------------------------------------- load mesh
+    def _fetch_entities(self, name: str, ids: np.ndarray
+                        ) -> tuple[np.ndarray, np.ndarray, list[np.ndarray]]:
+        """Random-access read of (dims, cone) rows for arbitrary global ids —
+        the loader's closure fetch (a parallel-filesystem read, like HDF5)."""
+        st = self.store
+        dims = st.read_rows_at(f"{name}/topology/dims", ids)
+        off0 = st.read_rows_at(f"{name}/topology/cone_offsets", ids)
+        off1 = st.read_rows_at(f"{name}/topology/cone_offsets", ids + 1)
+        rows = np.concatenate([np.arange(a, b, dtype=_INT)
+                               for a, b in zip(off0, off1)] or
+                              [np.empty(0, _INT)])
+        flat = st.read_rows_at(f"{name}/topology/cones", rows)
+        cones, p = [], 0
+        for a, b in zip(off0, off1):
+            n = int(b - a)
+            cones.append(flat[p:p + n].astype(_INT))
+            p += n
+        return dims.astype(_INT), (off1 - off0).astype(_INT), cones
+
+    def _close_topology(self, name: str, seed_ids: np.ndarray
+                        ) -> tuple[np.ndarray, dict[int, np.ndarray],
+                                   dict[int, int]]:
+        """Transitively fetch cones until closed; returns (sorted ids,
+        id->cone map (global numbers), id->dim map)."""
+        cones: dict[int, np.ndarray] = {}
+        dims: dict[int, int] = {}
+        frontier = np.unique(seed_ids.astype(_INT))
+        while frontier.size:
+            d, _, cs = self._fetch_entities(name, frontier)
+            new = []
+            for g, dd, cone in zip(frontier, d, cs):
+                cones[int(g)] = cone
+                dims[int(g)] = int(dd)
+                new.append(cone)
+            nxt = np.unique(np.concatenate(new)) if new else np.empty(0, _INT)
+            frontier = nxt[~np.isin(nxt, np.fromiter(cones, _INT, len(cones)))]
+        ids = np.array(sorted(cones), dtype=_INT)
+        return ids, cones, dims
+
+    def _build_local(self, ids: np.ndarray, cones: dict[int, np.ndarray],
+                     dims: dict[int, int], rank: int,
+                     dim: int, gdim: int) -> LocalPlex:
+        order_ids = _local_order(set(int(g) for g in ids), _DimsView(dims)) \
+            if ids.size else np.empty(0, _INT)
+        g2l = {int(g): i for i, g in enumerate(order_ids)}
+        lcones = [np.array([g2l[int(q)] for q in cones[int(g)]], dtype=_INT)
+                  for g in order_ids]
+        ldims = np.array([dims[int(g)] for g in order_ids], dtype=_INT) \
+            if order_ids.size else np.empty(0, _INT)
+        vc = np.full((len(order_ids), gdim), np.nan)
+        owner = np.full(len(order_ids), -1, dtype=_INT)
+        return LocalPlex(dim, ldims, lcones, order_ids, owner, rank, vc)
+
+    def load_mesh(self, name: str, comm: Comm, *, partition: str = "contiguous",
+                  seed: int = 0, overlap: int = 1,
+                  exact_distribution: bool = False) -> LoadedMesh:
+        st, M = self.store, comm.nranks
+        meta = st.get_attrs(f"{name}/meta")
+        E, dim, gdim = meta["E"], meta["dim"], meta["gdim"]
+        starts = partition_starts(E, M)
+
+        # ---- Step 1 (DMPlexTopologyLoad): naive canonical partition → T00 --
+        t00_ids, t00_cones, t00_dims, t00_cells = [], [], [], []
+        for m in range(M):
+            a, b = int(starts[m]), int(starts[m + 1])
+            chunk = np.arange(a, b, dtype=_INT)
+            ids, cones, dims = self._close_topology(name, chunk) \
+                if chunk.size else (np.empty(0, _INT), {}, {})
+            t00_ids.append(ids)
+            t00_cones.append(cones)
+            t00_dims.append(dims)
+            t00_cells.append(np.array([g for g in chunk
+                                       if dims.get(int(g)) == dim], dtype=_INT))
+        # T00 local numbering: canonical chunk first (ascending), then ghosts.
+        t00_locg = []
+        for m in range(M):
+            a, b = int(starts[m]), int(starts[m + 1])
+            chunk = np.arange(a, b, dtype=_INT)
+            ghosts = np.setdiff1d(t00_ids[m], chunk)
+            t00_locg.append(np.concatenate([chunk, ghosts]))
+        chi_T00_LP = chi_to_LP(t00_locg, E)
+
+        # ---- Step 2 (DMPlexDistribute): repartition cells → T0 -------------
+        cell_counts = [len(c) for c in t00_cells]
+        cell_bases = comm.exscan_sum(cell_counts)
+        ncells = cell_bases[-1] + cell_counts[-1]
+        if exact_distribution:
+            nsaved = meta["nranks_saved"]
+            assert M == nsaved, (
+                f"exact-distribution reload needs M == N ({M} != {nsaved})")
+            owner_rows = [st.read_rows(f"{name}/topology/entity_owner",
+                                       int(starts[m]),
+                                       int(starts[m + 1] - starts[m]))
+                          for m in range(M)]
+            send = [[t00_cells[m][
+                owner_rows[m][t00_cells[m] - int(starts[m])] == d]
+                for d in range(M)] for m in range(M)]
+        elif partition == "contiguous":
+            send = [[None] * M for _ in range(M)]
+            for m in range(M):
+                ords = cell_bases[m] + np.arange(cell_counts[m], dtype=_INT)
+                dest = partition_rank_of(ords, ncells, M)
+                for d in range(M):
+                    send[m][d] = t00_cells[m][dest == d]
+        elif partition == "random":
+            send = [[None] * M for _ in range(M)]
+            for m in range(M):
+                dest = ((t00_cells[m] * np.int64(2654435761) + seed) % M
+                        ).astype(_INT)
+                for d in range(M):
+                    send[m][d] = t00_cells[m][dest == d]
+        else:
+            raise ValueError(partition)
+        recv = comm.alltoallv([[a.astype(_INT) for a in row] for row in send])
+        t0_cells = [np.sort(np.concatenate(r)) if r else np.empty(0, _INT)
+                    for r in recv]
+
+        t0_locg, t0_cmap, t0_dmap = [], [], []
+        for m in range(M):
+            ids, cones, dims = self._close_topology(name, t0_cells[m]) \
+                if t0_cells[m].size else (np.empty(0, _INT), {}, {})
+            t0_locg.append(ids)
+            t0_cmap.append(cones)
+            t0_dmap.append(dims)
+        # order T0 local numbering like the final rule for determinism
+        t0_locg = [(_local_order(set(int(g) for g in ids), _DimsView(dm))
+                    if ids.size else np.empty(0, _INT))
+                   for ids, dm in zip(t0_locg, t0_dmap)]
+        t0_owner = _resolve_owners(comm, E, t0_locg, t0_cells, t0_cmap)
+        # χ_{I_T0}^{I_T00}: root = T00 copy on the canonical rank of g
+        rr = [partition_rank_of(g, E, M) for g in t0_locg]
+        ri = [g - starts[r] for g, r in zip(t0_locg, rr)]
+        chi_T0_T00 = StarForest(tuple(len(g) for g in t00_locg),
+                                tuple(a.astype(_INT) for a in rr),
+                                tuple(a.astype(_INT) for a in ri))
+
+        # ---- Step 3 (DMPlexDistributeOverlap): grow overlap → T ------------
+        final_cells = t0_cells
+        if overlap:
+            final_cells = _grow_overlap(comm, E, dim, t0_cells, t0_cmap,
+                                        t0_dmap, overlap)
+        plexes: list[LocalPlex] = []
+        t_locg, t_cmaps, t_dmaps = [], [], []
+        for m in range(M):
+            ids, cones, dims = self._close_topology(name, final_cells[m]) \
+                if final_cells[m].size else (np.empty(0, _INT), {}, {})
+            t_locg.append(ids)
+            t_cmaps.append(cones)
+            t_dmaps.append(dims)
+        t_owner = _resolve_owners(comm, E, t_locg, t0_cells, t_cmaps)
+        for m in range(M):
+            lp = self._build_local(t_locg[m], t_cmaps[m], t_dmaps[m],
+                                   m, dim, gdim)
+            # owner array aligned to the final local order
+            pos = {int(g): i for i, g in enumerate(t_locg[m])}
+            if lp.loc_g.size:
+                lp.owner = t_owner[m][[pos[int(g)] for g in lp.loc_g]].astype(_INT)
+            plexes.append(lp)
+
+        # χ_{I_T}^{I_T0}: directory over T0, queried with final LocG ---------
+        t0_owned = [t0_owner[m] == m for m in range(M)]
+        t0_dir = location_directory(t0_locg, t0_owned, E, comm)
+        chi_T_T0 = location_query(t0_dir, [lp.loc_g for lp in plexes], E, comm,
+                                  [len(g) for g in t0_locg])
+
+        # ---- compose (B.4) --------------------------------------------------
+        chi_IT_LP = chi_T_T0.compose(chi_T0_T00.compose(chi_T00_LP))
+
+        point_sf = location_query(
+            location_directory([lp.loc_g for lp in plexes],
+                               [lp.owned for lp in plexes], E, comm),
+            [lp.loc_g for lp in plexes], E, comm,
+            [lp.num_entities for lp in plexes])
+
+        # ---- labels ---------------------------------------------------------
+        labels = {}
+        for lname in meta.get("labels", []):
+            chunks = [st.read_rows(f"{name}/labels/{lname}", int(starts[m]),
+                                   int(starts[m + 1] - starts[m]))
+                      for m in range(M)]
+            labels[lname] = chi_IT_LP.bcast(chunks)
+
+        mesh = LoadedMesh(plexes, chi_IT_LP, point_sf, E, dim, name, labels)
+
+        # ---- coordinates (a P1 function, loaded like any function) ---------
+        if st.has_attrs(f"{name}/func/__coordinates/meta"):
+            spaces, funcs = self.load_function(mesh, "__coordinates", comm)
+            for lp, sp, f in zip(plexes, spaces, funcs):
+                for i in range(lp.num_entities):
+                    if lp.dims[i] == 0:
+                        lp.vcoords[i] = f.values[sp.loc_off[i]:
+                                                 sp.loc_off[i] + sp.bs]
+        return mesh
+
+    # --------------------------------------------------------- load function
+    def load_function(self, mesh: LoadedMesh, fname: str, comm: Comm,
+                      time_index: int | None = None
+                      ) -> tuple[list[FunctionSpace], list[Function]]:
+        st, M = self.store, comm.nranks
+        fmeta = st.get_attrs(f"{mesh.name}/func/{fname}/meta")
+        key = fmeta["section"]
+        smeta = st.get_attrs(f"{key}/meta")
+        D, Eo = smeta["D"], smeta["Eo"]
+        element = Element(smeta["family"], smeta["degree"], smeta["cell"])
+        bs = smeta["bs"]
+        E = mesh.E
+
+        spaces = [FunctionSpace(lp, element, bs=bs) for lp in mesh.plexes]
+
+        # ---- §2.2.5: load section chunks, build χ_{I_P}^{L_P} --------------
+        estarts = partition_starts(Eo, M)
+        locG_P, locDOF_P, locOFF_P = [], [], []
+        for m in range(M):
+            a, n = int(estarts[m]), int(estarts[m + 1] - estarts[m])
+            locG_P.append(st.read_rows(f"{key}/G", a, n).astype(_INT))
+            locDOF_P.append(st.read_rows(f"{key}/DOF", a, n).astype(_INT))
+            locOFF_P.append(st.read_rows(f"{key}/OFF", a, n).astype(_INT))
+        chi_IP_LP = chi_to_LP(locG_P, E)
+
+        # ---- (2.17): χ_{I_T}^{I_P} = (χ_{I_P}^{L_P})⁻¹ ∘ χ_{I_T}^{L_P} ------
+        chi_IT_IP = mesh.chi_IT_LP.compose(chi_IP_LP.invert(allow_partial=True))
+
+        # ---- (2.18): broadcast DOF and OFF onto the loaded topology --------
+        DOF_T = chi_IT_IP.bcast(locDOF_P)
+        OFFg_T = chi_IT_IP.bcast(locOFF_P)
+        for sp, dof in zip(spaces, DOF_T):
+            assert np.array_equal(dof, sp.loc_dof), (
+                "section/element mismatch between saved and loaded space")
+
+        # ---- (2.22–2.23): lift to DoF level; (2.24): broadcast the vector --
+        dof_globals = []
+        for sp, offg in zip(spaces, OFFg_T):
+            idx = np.empty(sp.ndof_local, dtype=_INT)
+            for i in range(sp.plex.num_entities):
+                k = sp.loc_dof[i]
+                if k:
+                    idx[sp.loc_off[i]:sp.loc_off[i] + k] = \
+                        offg[i] + np.arange(k, dtype=_INT)
+            dof_globals.append(idx)
+        chi_JT_JP = StarForest.from_global_numbers(dof_globals, D, M)
+
+        dstarts = partition_starts(D, M)
+        suffix = "" if time_index is None else f"_t{time_index}"
+        locVEC_P = [st.read_rows(f"{mesh.name}/func/{fname}/vec{suffix}",
+                                 int(dstarts[m]),
+                                 int(dstarts[m + 1] - dstarts[m]))
+                    for m in range(M)]
+        VEC_T = chi_JT_JP.bcast(locVEC_P)
+        funcs = [Function(sp, v) for sp, v in zip(spaces, VEC_T)]
+        return spaces, funcs
+
+
+# ============================================================ loader helpers
+class _DimsView:
+    """Adapter: dict[int,int] -> array-style indexing for _local_order."""
+
+    def __init__(self, dims: dict[int, int]):
+        self._d = dims
+
+    def __getitem__(self, ids):
+        return np.array([self._d[int(g)] for g in np.atleast_1d(ids)],
+                        dtype=_INT)
+
+
+def _resolve_owners(comm: Comm, E: int, loc_g: list[np.ndarray],
+                    owned_cells: list[np.ndarray],
+                    cone_maps: list[dict[int, np.ndarray]]
+                    ) -> list[np.ndarray]:
+    """Entity ownership on a (re)distributed topology: owner(e) = min rank
+    among ranks owning a cell whose closure contains e.  Fully distributed:
+    candidates reduce(min) onto the canonical partition, then bcast back."""
+    M = comm.nranks
+    cand_ids, cand_rank = [], []
+    for m in range(M):
+        close = set()
+        for c in owned_cells[m]:
+            stack = [int(c)]
+            while stack:
+                p = stack.pop()
+                if p in close:
+                    continue
+                close.add(p)
+                stack.extend(int(q) for q in cone_maps[m][p])
+        ids = np.array(sorted(close), dtype=_INT)
+        cand_ids.append(ids)
+        cand_rank.append(np.full(len(ids), m, dtype=_INT))
+    pub = StarForest.from_global_numbers(cand_ids, E, M)
+    owner_glob = pub.reduce(cand_rank, "min",
+                            [np.full(int(s), np.iinfo(np.int64).max, dtype=_INT)
+                             for s in pub.nroots])
+    comm.stats.record(sum(a.nbytes for a in cand_rank), 0)
+    qry = StarForest.from_global_numbers(loc_g, E, M)
+    out = qry.bcast(owner_glob)
+    comm.stats.record(sum(a.nbytes for a in out), 0)
+    return out
+
+
+def _grow_overlap(comm: Comm, E: int, dim: int, owned_cells: list[np.ndarray],
+                  cone_maps: list[dict[int, np.ndarray]],
+                  dim_maps: list[dict[int, int]], layers: int
+                  ) -> list[np.ndarray]:
+    """Single-layer vertex-adjacency overlap growth (DMPlexDistributeOverlap;
+    §2.1.2: 'a single layer of neighboring cells') via a distributed
+    vertex→cells directory: one alltoallv publish, one query, one answer."""
+    assert layers == 1, "the loader grows one overlap layer, as in the paper"
+    M = comm.nranks
+    visible = [set(int(c) for c in cs) for cs in owned_cells]
+    # publish (vertex -> cell) incidences of owned cells
+    pub_v, pub_c = [], []
+    for m in range(M):
+        vs, cs = [], []
+        for c in owned_cells[m]:
+            stack, seen = [int(c)], set()
+            while stack:
+                p = stack.pop()
+                if p in seen:
+                    continue
+                seen.add(p)
+                if dim_maps[m][p] == 0:
+                    vs.append(p)
+                    cs.append(int(c))
+                stack.extend(int(q) for q in cone_maps[m][p])
+        pub_v.append(np.array(vs, dtype=_INT))
+        pub_c.append(np.array(cs, dtype=_INT))
+    send_v = [[None] * M for _ in range(M)]
+    send_c = [[None] * M for _ in range(M)]
+    for s in range(M):
+        dest = partition_rank_of(pub_v[s], E, M)
+        for d in range(M):
+            sel = dest == d
+            send_v[s][d] = pub_v[s][sel]
+            send_c[s][d] = pub_c[s][sel]
+    rv = comm.alltoallv(send_v)
+    rc = comm.alltoallv(send_c)
+    directory: list[dict[int, set]] = [dict() for _ in range(M)]
+    for d in range(M):
+        for arr_v, arr_c in zip(rv[d], rc[d]):
+            for v, c in zip(arr_v, arr_c):
+                directory[d].setdefault(int(v), set()).add(int(c))
+    # query: my vertices -> all incident cells anywhere
+    qry_v = [np.unique(pv) for pv in pub_v]
+    send_q = [[None] * M for _ in range(M)]
+    for s in range(M):
+        dest = partition_rank_of(qry_v[s], E, M)
+        for d in range(M):
+            send_q[s][d] = qry_v[s][dest == d]
+    rq = comm.alltoallv(send_q)
+    ans = [[None] * M for _ in range(M)]
+    for d in range(M):
+        for s in range(M):
+            cells = set()
+            for v in rq[d][s]:
+                cells.update(directory[d].get(int(v), ()))
+            ans[d][s] = np.array(sorted(cells), dtype=_INT)
+    back = comm.alltoallv(ans)
+    for m in range(M):
+        for arr in back[m]:
+            visible[m].update(int(c) for c in arr)
+    return [np.array(sorted(visible[m]), dtype=_INT) for m in range(M)]

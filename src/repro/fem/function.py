@@ -1,0 +1,77 @@
+"""Functions (DoF vectors) and nodal interpolation (§2.2.1).
+
+A :class:`Function` is a local DoF vector over a :class:`FunctionSpace`
+(owned + ghost values, entity chunks contiguous, intra-entity order
+cone-derived).  ``node_points`` reconstructs the physical interpolation point
+of every DoF slot *from cones and vertex coordinates only* — this is the
+ground truth used by the correctness tests: a function interpolated before
+saving and reloaded on any process count must carry the same values at the
+same physical points (§6.1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.fem.element import cone_vertex_sequence
+from repro.fem.section import FunctionSpace
+
+_INT = np.int64
+
+
+@dataclasses.dataclass
+class Function:
+    space: FunctionSpace
+    values: np.ndarray               # [ndof_local] float64
+
+    def __post_init__(self):
+        assert self.values.shape == (self.space.ndof_local,)
+
+    def entity_values(self, i_local: int) -> np.ndarray:
+        off, n = self.space.loc_off[i_local], self.space.loc_dof[i_local]
+        return self.values[off:off + n]
+
+
+def node_points(space: FunctionSpace) -> np.ndarray:
+    """Physical coordinates of every node slot in the local vector, derived
+    from cone order alone; shape [ndof_local // bs, gdim].
+
+    Node slots are per-node: a vector-valued space (bs > 1) stores bs
+    contiguous components per node; this returns one point per node.
+    """
+    lp, el, bs = space.plex, space.element, space.bs
+    gdim = lp.vcoords.shape[1]
+    pts = []
+    for i in range(lp.num_entities):
+        nd = space.loc_dof[i] // bs
+        if nd == 0:
+            continue
+        d = int(lp.dims[i])
+        if d == 0:
+            pts.append(lp.vcoords[i][None, :])
+        elif d == 1:
+            va, vb = (int(x) for x in lp.cones[i])
+            if lp.dim == 1:
+                # interval cell: interior/DP nodes walked cone[0] -> cone[1]
+                pts.append(el.entity_nodes_1d(lp.vcoords[va], lp.vcoords[vb]))
+            else:
+                pts.append(el.entity_nodes_1d(lp.vcoords[va], lp.vcoords[vb]))
+        else:
+            vseq = cone_vertex_sequence(lp, i)
+            v = np.stack([lp.vcoords[int(x)] for x in vseq])
+            pts.append(el.cell_nodes_tri(v))
+    if not pts:
+        return np.empty((0, gdim))
+    return np.concatenate(pts, axis=0)
+
+
+def interpolate(space: FunctionSpace, fn) -> Function:
+    """Interpolate ``fn(points) -> [npts, bs]`` (or [npts] for bs=1)."""
+    pts = node_points(space)
+    vals = np.asarray(fn(pts), dtype=np.float64)
+    if space.bs == 1 and vals.ndim == 1:
+        vals = vals[:, None]
+    assert vals.shape == (pts.shape[0], space.bs)
+    return Function(space, vals.reshape(-1))

@@ -1,0 +1,320 @@
+"""DMPlex analogue: meshes as DAGs of entities with *ordered* cones.
+
+A mesh topology is a set of entities (cells, edges, vertices; "DAG points")
+with, per entity, an ordered *cone* — the list of directly-attached entities
+of one dimension lower (§2.1, [Lange et al. 2016]).  Cone order is the
+structure the whole paper leans on: it is preserved by distribution and by
+save/load, so DoF orderings derived from cones are save/load-stable while
+global numbers and local numbers are not.
+
+``Plex`` is the monolithic (global-numbering) topology used to *construct*
+test problems; all distributed algorithms operate on per-rank ``LocalPlex``
+objects and never consult the global object (mirroring the paper's fully
+distributed setting — the global numbering ``I`` exists, the global *object*
+does not).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.comm import Comm
+from repro.core.star_forest import StarForest, partition_rank_of, partition_starts
+
+_INT = np.int64
+
+
+# =============================================================== global mesh
+@dataclasses.dataclass
+class Plex:
+    """Monolithic mesh topology in global numbering (test-construction only)."""
+
+    dim: int                       # topological dimension
+    dims: np.ndarray               # [E] dimension of each entity
+    cones: list[np.ndarray]        # [E] ordered global ids (dim-1 entities)
+    vertex_start: int              # vertices are entities [vertex_start, E)
+    coords: np.ndarray             # [nvertices, gdim]
+
+    @property
+    def num_entities(self) -> int:
+        return len(self.dims)
+
+    @property
+    def cell_ids(self) -> np.ndarray:
+        return np.flatnonzero(self.dims == self.dim).astype(_INT)
+
+    def vertex_coord(self, g: int) -> np.ndarray:
+        return self.coords[g - self.vertex_start]
+
+    def closure(self, seeds) -> np.ndarray:
+        """Transitive cone closure (includes seeds), sorted unique."""
+        seen = set(int(s) for s in seeds)
+        frontier = list(seen)
+        while frontier:
+            nxt = []
+            for p in frontier:
+                for q in self.cones[p]:
+                    q = int(q)
+                    if q not in seen:
+                        seen.add(q)
+                        nxt.append(q)
+            frontier = nxt
+        return np.array(sorted(seen), dtype=_INT)
+
+    def vertex_cells(self) -> dict[int, list[int]]:
+        """vertex global id -> incident cell global ids (adjacency for overlap)."""
+        out: dict[int, list[int]] = {}
+        for c in self.cell_ids:
+            for p in self.closure([c]):
+                if self.dims[p] == 0:
+                    out.setdefault(int(p), []).append(int(c))
+        return out
+
+
+# ----------------------------------------------------------------- builders
+def interval_mesh(ncells: int, *, seed: int | None = None) -> Plex:
+    """1-D mesh of the unit interval.  Entities: cells [0, nc), vertices
+    [nc, 2nc+1).  With ``seed``, cone orders are randomly flipped — valid
+    meshes whose DoF orderings must still round-trip (Fig. 2.3 stress test).
+    """
+    nc = int(ncells)
+    E = nc + nc + 1
+    dims = np.zeros(E, dtype=_INT)
+    dims[:nc] = 1
+    rng = np.random.default_rng(seed) if seed is not None else None
+    cones: list[np.ndarray] = []
+    for c in range(nc):
+        pair = [nc + c, nc + c + 1]
+        if rng is not None and rng.integers(2):
+            pair = pair[::-1]
+        cones.append(np.array(pair, dtype=_INT))
+    cones += [np.empty(0, dtype=_INT)] * (nc + 1)
+    coords = np.linspace(0.0, 1.0, nc + 1)[:, None]
+    return Plex(1, dims, cones, vertex_start=nc, coords=coords)
+
+
+def tri_mesh(nx: int, ny: int, *, seed: int | None = None) -> Plex:
+    """Unit-square triangulation (each grid quad split along its diagonal).
+
+    Entities numbered cells, then edges, then vertices.  With ``seed``,
+    cell cones are randomly rotated and edge cones randomly flipped.
+    """
+    rng = np.random.default_rng(seed) if seed is not None else None
+    nvx, nvy = nx + 1, ny + 1
+    vid = lambda i, j: i * nvy + j           # grid index -> vertex index
+    ncells = 2 * nx * ny
+
+    # enumerate unique edges as sorted vertex pairs
+    tris = []
+    for i in range(nx):
+        for j in range(ny):
+            v00, v10 = vid(i, j), vid(i + 1, j)
+            v01, v11 = vid(i, j + 1), vid(i + 1, j + 1)
+            tris.append((v00, v10, v11))
+            tris.append((v00, v11, v01))
+    edge_index: dict[tuple[int, int], int] = {}
+    tri_edges = []
+    for (a, b, c) in tris:
+        es = []
+        for (u, v) in ((a, b), (b, c), (c, a)):
+            key = (min(u, v), max(u, v))
+            if key not in edge_index:
+                edge_index[key] = len(edge_index)
+            es.append(edge_index[key])
+        tri_edges.append(es)
+    nedges = len(edge_index)
+    nverts = nvx * nvy
+
+    E = ncells + nedges + nverts
+    dims = np.concatenate([
+        np.full(ncells, 2), np.full(nedges, 1), np.full(nverts, 0)
+    ]).astype(_INT)
+    edge_g = lambda e: ncells + e
+    vert_g = lambda v: ncells + nedges + v
+
+    cones: list[np.ndarray] = []
+    for t, es in enumerate(tri_edges):
+        order = list(range(3))
+        if rng is not None:
+            order = list(np.roll(order, int(rng.integers(3))))
+        cones.append(np.array([edge_g(es[k]) for k in order], dtype=_INT))
+    edge_pairs = sorted(edge_index.items(), key=lambda kv: kv[1])
+    for (u, v), _ in edge_pairs:
+        pair = [vert_g(u), vert_g(v)]
+        if rng is not None and rng.integers(2):
+            pair = pair[::-1]
+        cones.append(np.array(pair, dtype=_INT))
+    cones += [np.empty(0, dtype=_INT)] * nverts
+
+    coords = np.array([[i / nx, j / ny] for i in range(nvx) for j in range(nvy)])
+    return Plex(2, dims, cones, vertex_start=ncells + nedges, coords=coords)
+
+
+# ================================================================ local mesh
+@dataclasses.dataclass
+class LocalPlex:
+    """Per-rank view of a distributed topology (local numbering).
+
+    ``loc_g`` is the paper's LocG array; ``owner[i]`` is the owning rank of
+    local entity ``i`` (== this rank iff owned); cones are in local numbers
+    with order preserved from the global mesh.
+    """
+
+    dim: int
+    dims: np.ndarray                 # [El]
+    cones: list[np.ndarray]          # [El] local ids
+    loc_g: np.ndarray                # [El] global ids (LocG)
+    owner: np.ndarray                # [El] owning rank
+    rank: int
+    vcoords: np.ndarray | None = None  # [El, gdim]; valid rows where dims==0
+
+    @property
+    def num_entities(self) -> int:
+        return len(self.dims)
+
+    @property
+    def owned(self) -> np.ndarray:
+        return self.owner == self.rank
+
+    @property
+    def cell_ids_local(self) -> np.ndarray:
+        return np.flatnonzero(self.dims == self.dim).astype(_INT)
+
+    def g2l(self) -> dict[int, int]:
+        return {int(g): i for i, g in enumerate(self.loc_g)}
+
+    def closure_local(self, seeds) -> np.ndarray:
+        seen = set(int(s) for s in seeds)
+        frontier = list(seen)
+        while frontier:
+            nxt = []
+            for p in frontier:
+                for q in self.cones[p]:
+                    q = int(q)
+                    if q not in seen:
+                        seen.add(q)
+                        nxt.append(q)
+            frontier = nxt
+        return np.array(sorted(seen), dtype=_INT)
+
+
+def _local_order(global_ids: set[int], dims: np.ndarray) -> np.ndarray:
+    """Deterministic local numbering: cells first, then faces/edges, then
+    vertices; within a dimension by ascending global number.  Determinism is
+    what makes the same-count reload path (§3.1 end) reproduce local layouts
+    exactly."""
+    ids = np.array(sorted(global_ids), dtype=_INT)
+    order = np.lexsort((ids, -dims[ids]))
+    return ids[order]
+
+
+def build_local_plex(plex: Plex, visible_cells, entity_owner: np.ndarray,
+                     rank: int) -> LocalPlex:
+    vis = plex.closure(visible_cells) if len(visible_cells) else np.empty(0, _INT)
+    loc_g = _local_order(set(int(g) for g in vis), plex.dims)
+    g2l = {int(g): i for i, g in enumerate(loc_g)}
+    cones = [np.array([g2l[int(q)] for q in plex.cones[g]], dtype=_INT)
+             for g in loc_g]
+    dims_l = plex.dims[loc_g] if len(loc_g) else np.empty(0, _INT)
+    owner = entity_owner[loc_g] if len(loc_g) else np.empty(0, _INT)
+    vcoords = np.full((len(loc_g), plex.coords.shape[1]), np.nan)
+    for i, g in enumerate(loc_g):
+        if plex.dims[g] == 0:
+            vcoords[i] = plex.vertex_coord(int(g))
+    return LocalPlex(plex.dim, dims_l, cones, loc_g, owner.astype(_INT), rank,
+                     vcoords)
+
+
+def cell_partition(ncells: int, nranks: int, method: str = "contiguous",
+                   seed: int = 0) -> np.ndarray:
+    """Assign cells to ranks.  'contiguous' mimics a band partitioner;
+    'random' is the adversarial stress case; 'stripes' is round-robin."""
+    if method == "contiguous":
+        return partition_rank_of(np.arange(ncells), ncells, nranks)
+    if method == "stripes":
+        return (np.arange(ncells) % nranks).astype(_INT)
+    if method == "random":
+        rng = np.random.default_rng(seed)
+        return rng.integers(0, nranks, size=ncells).astype(_INT)
+    raise ValueError(method)
+
+
+def entity_owners(plex: Plex, cell_owner: np.ndarray) -> np.ndarray:
+    """Ownership rule: an entity is owned by the minimum rank among owners of
+    cells whose closure contains it (one owner per entity; others see ghosts)."""
+    owner = np.full(plex.num_entities, np.iinfo(np.int64).max, dtype=_INT)
+    for c in plex.cell_ids:
+        r = cell_owner[int(c)]
+        cl = plex.closure([c])
+        owner[cl] = np.minimum(owner[cl], r)
+    return owner
+
+
+def add_overlap(plex: Plex, visible_cells: set[int], layers: int) -> set[int]:
+    """Add ``layers`` layers of vertex-adjacent neighbour cells (§2.1.2:
+    'a single layer of neighboring cells and the lower dimensional entities
+    directly attached to them')."""
+    v2c = plex.vertex_cells()
+    vis = set(visible_cells)
+    for _ in range(layers):
+        verts = set()
+        for c in vis:
+            for p in plex.closure([c]):
+                if plex.dims[p] == 0:
+                    verts.add(int(p))
+        for v in verts:
+            vis.update(v2c.get(v, ()))
+    return vis
+
+
+def distribute(plex: Plex, nranks: int, *, method: str = "contiguous",
+               seed: int = 0, overlap: int = 1,
+               cell_owner: np.ndarray | None = None
+               ) -> tuple[list[LocalPlex], StarForest, np.ndarray]:
+    """Distribute a global mesh over ``nranks``.
+
+    Returns (local plexes, pointSF, cell_owner).  The pointSF maps each
+    rank-local entity (leaf) to the owning rank's local copy (root) — the
+    DMPlex pointSF of §3.1.
+    """
+    if cell_owner is None:
+        cell_owner = cell_partition(len(plex.cell_ids), nranks, method, seed)
+    owner = entity_owners(plex, cell_owner)
+    locals_: list[LocalPlex] = []
+    for r in range(nranks):
+        own_cells = set(int(c) for c in plex.cell_ids[cell_owner == r])
+        vis_cells = add_overlap(plex, own_cells, overlap) if overlap else own_cells
+        locals_.append(build_local_plex(plex, sorted(vis_cells), owner, r))
+    sf = point_sf(locals_)
+    return locals_, sf, cell_owner
+
+
+def point_sf(locals_: list[LocalPlex]) -> StarForest:
+    """Build the pointSF: leaf (r, i) -> (owner rank, owner-local index)."""
+    owner_l2g = [lp.g2l() for lp in locals_]
+    rr, ri = [], []
+    for lp in locals_:
+        n = lp.num_entities
+        a = np.empty(n, dtype=_INT)
+        b = np.empty(n, dtype=_INT)
+        for i in range(n):
+            o = int(lp.owner[i])
+            a[i] = o
+            b[i] = owner_l2g[o][int(lp.loc_g[i])]
+        rr.append(a)
+        ri.append(b)
+    nroots = tuple(lp.num_entities for lp in locals_)
+    return StarForest(nroots, tuple(rr), tuple(ri))
+
+
+# ---------------------------------------------------- distributed directory
+# Generic machinery lives in repro.core.directory; re-exported here because
+# the pointSF construction of §3.1 is its canonical use.
+from repro.core.directory import (  # noqa: E402,F401
+    build_location_sf,
+    location_directory,
+    location_query,
+)

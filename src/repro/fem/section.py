@@ -1,0 +1,67 @@
+"""PetscSection analogue: discrete function space data (§2.2).
+
+A :class:`FunctionSpace` on a :class:`~repro.fem.plex.LocalPlex` carries the
+*local* discrete function space data — the arrays LocDOF (DoFs per entity) and
+LocOFF (offset of each entity's first DoF in the local vector), indexed by
+local entity number, plus the LocG array inherited from the plex (§2.2.2).
+
+Entity traversal order is the local numbering order (the paper: "any entity
+traversal order can be used"); DoFs on one entity are contiguous, ordered
+canonically relative to the entity's cone (``repro.fem.element``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.fem.element import Element
+from repro.fem.plex import LocalPlex
+
+_INT = np.int64
+
+
+@dataclasses.dataclass
+class FunctionSpace:
+    plex: LocalPlex
+    element: Element
+    bs: int = 1                       # components per node (vector-valued)
+
+    loc_dof: np.ndarray = dataclasses.field(init=False)   # [El]
+    loc_off: np.ndarray = dataclasses.field(init=False)   # [El]
+    ndof_local: int = dataclasses.field(init=False)
+
+    def __post_init__(self):
+        assert self.element.dim == self.plex.dim, (
+            f"element cell dim {self.element.dim} != mesh dim {self.plex.dim}")
+        nodes = np.array(
+            [self.element.nodes_per_entity_dim(int(d)) for d in self.plex.dims],
+            dtype=_INT,
+        )
+        self.loc_dof = nodes * self.bs
+        self.loc_off = np.concatenate([[0], np.cumsum(self.loc_dof)[:-1]]).astype(_INT)
+        self.ndof_local = int(self.loc_dof.sum())
+
+    # ------------------------------------------------------------- owned view
+    @property
+    def owned_entities(self) -> np.ndarray:
+        return np.flatnonzero(self.plex.owned).astype(_INT)
+
+    @property
+    def ndof_owned(self) -> int:
+        return int(self.loc_dof[self.plex.owned].sum())
+
+    def owned_dof_mask(self) -> np.ndarray:
+        """Boolean mask over the local vector marking owned DoFs."""
+        mask = np.zeros(self.ndof_local, dtype=bool)
+        for i in np.flatnonzero(self.plex.owned):
+            mask[self.loc_off[i]:self.loc_off[i] + self.loc_dof[i]] = True
+        return mask
+
+    def entity_of_dof(self) -> np.ndarray:
+        """Local entity index owning each local DoF slot."""
+        out = np.empty(self.ndof_local, dtype=_INT)
+        for i in range(self.plex.num_entities):
+            out[self.loc_off[i]:self.loc_off[i] + self.loc_dof[i]] = i
+        return out

@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Three kernels, each with a ``kernel.py`` (pl.pallas_call + explicit
+BlockSpec VMEM tiling), an ``ops.py`` (jit'd public wrapper), and a
+``ref.py`` (pure-jnp oracle the tests assert against):
+
+  * ``flash_attention`` — GQA causal flash attention with sliding
+    window and logit softcap (serving/prefill hot-spot; the training
+    path uses the XLA-blocked equivalent in models/layers.py);
+  * ``rglru_scan``      — blocked RG-LRU linear recurrence
+    (recurrentgemma's time-mixing hot-spot);
+  * ``ckpt_pack``       — chunk-granular star-forest gather: the
+    paper's element-level broadcast (eq. 2.24) executed on-device for
+    in-memory N-to-M resharding; the scalar-prefetch index_map IS the
+    star forest.
+
+All kernels are TPU-targeted (VMEM tiles, MXU-aligned block shapes) and
+validated in interpret mode on CPU.
+"""

@@ -1,0 +1,21 @@
+"""Public jit'd wrapper for the ckpt_pack star-forest gather."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.ckpt_pack.kernel import ckpt_pack as _ckpt_pack
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def pack_chunks(src, idx, *, interpret: bool | None = None):
+    """out[i] = src[idx[i]] at chunk granularity (-1 => zero chunk)."""
+    if interpret is None:
+        interpret = _on_cpu()
+    return _ckpt_pack(src, idx, interpret=interpret)

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the ckpt_pack chunk gather."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ckpt_pack_ref(src, idx):
+    """src [N, R, C]; idx [M] (-1 => zeros).  out[i] = src[idx[i]]."""
+    safe = jnp.maximum(idx, 0)
+    out = src[safe]
+    return jnp.where((idx >= 0)[:, None, None], out,
+                     jnp.zeros_like(out))

@@ -1,0 +1,157 @@
+"""Pallas TPU flash attention (forward) with GQA, sliding window, softcap.
+
+Tiling: grid (B*Hq, num_q_blocks, num_k_blocks); the kv-block axis is
+the minormost grid dim, which TPU iterates sequentially per core, so the
+online-softmax running state (m, l, acc) lives in VMEM scratch and
+persists across kv steps.  Block shapes are MXU-aligned ([bq, hd] @
+[hd, bk] meets the 128x128 systolic array with hd in {64, 128, 256}).
+
+VMEM footprint per step: q (bq*hd bf16) + k,v (2*bk*hd bf16) + m,l
+(2*bq f32) + acc (bq*hd f32) + scores (bq*bk f32).  With bq=bk=512 and
+hd=128: ~1.6 MiB — far under the ~16 MiB/core budget, leaving room for
+the pipeline's double buffering of the next k/v tiles.
+
+Sliding-window and causal masks are applied at two levels: whole
+(q-block, k-block) tiles that are fully masked are skipped via pl.when
+(the dominant saving: the causal lower triangle costs ~half, local
+layers only touch their band), and the partial edge tiles mask
+element-wise with broadcasted iotas.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 512
+DEFAULT_BLOCK_K = 512
+NEG_INF = -1e30
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                scale: float, causal: bool, window: int, softcap: float,
+                block_q: int, block_k: int, sk: int, q_offset: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # block-level skip: causal upper triangle and out-of-window bands
+    first_q = q_offset + iq * block_q
+    last_q = first_q + block_q - 1
+    first_k = ik * block_k
+    last_k = first_k + block_k - 1
+    needed = first_k < sk
+    if causal:
+        needed = jnp.logical_and(needed, first_k <= last_q)
+    if window > 0:
+        needed = jnp.logical_and(needed, last_k > first_q - window)
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                 # [bq, hd]
+        k = k_ref[0].astype(jnp.float32)                 # [bk, hd]
+        v = v_ref[0].astype(jnp.float32)                 # [bk, hd]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # [bq, bk]
+        if softcap > 0.0:
+            s = softcap * jnp.tanh(s / softcap)
+        q_pos = q_offset + iq * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        k_pos = ik * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        ok = k_pos < sk
+        if causal:
+            ok &= k_pos <= q_pos
+        if window > 0:
+            ok &= k_pos > q_pos - window
+        s = jnp.where(ok, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(-1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, *, causal: bool = True, window: int = 0,
+                        softcap: float = 0.0,
+                        block_q: int = DEFAULT_BLOCK_Q,
+                        block_k: int = DEFAULT_BLOCK_K,
+                        q_offset: int = 0,
+                        interpret: bool = False):
+    """q [B, Sq, Hq, hd]; k, v [B, Sk, Hkv, hd] -> [B, Sq, Hq, hd].
+
+    GQA by head-index mapping (q head h reads kv head h // (Hq//Hkv));
+    no head-replicated k/v copies are materialised.
+    """
+    B, Sq, Hq, hd = q.shape
+    _, Sk, Hkv, _ = k.shape
+    assert Hq % Hkv == 0
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(hd)
+
+    block_q = min(block_q, max(Sq, 8))
+    block_k = min(block_k, max(Sk, 8))
+    nq = pl.cdiv(Sq, block_q)
+    nk = pl.cdiv(Sk, block_k)
+    pad_q = nq * block_q - Sq
+    pad_k = nk * block_k - Sk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+
+    # head-major layout: q/o [B*Hq, Sq, hd]; k/v [B*Hkv, Sk, hd]
+    qh = q.transpose(0, 2, 1, 3).reshape(B * Hq, nq * block_q, hd)
+    kh = k.transpose(0, 2, 1, 3).reshape(B * Hkv, nk * block_k, hd)
+    vh = v.transpose(0, 2, 1, 3).reshape(B * Hkv, nk * block_k, hd)
+
+    kernel = functools.partial(
+        _fwd_kernel, scale=scale, causal=causal, window=int(window),
+        softcap=float(softcap), block_q=block_q, block_k=block_k,
+        sk=Sk, q_offset=int(q_offset))
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * Hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda bh, iq, ik: (bh, iq, 0)),
+            pl.BlockSpec((1, block_k, hd),
+                         lambda bh, iq, ik: (bh // G, ik, 0)),
+            pl.BlockSpec((1, block_k, hd),
+                         lambda bh, iq, ik: (bh // G, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd),
+                               lambda bh, iq, ik: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, nq * block_q, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),       # running max m
+            pltpu.VMEM((block_q,), jnp.float32),       # running sum l
+            pltpu.VMEM((block_q, hd), jnp.float32),    # accumulator
+        ],
+        interpret=interpret,
+    )(qh, kh, vh)
+
+    out = out.reshape(B, Hq, nq * block_q, hd).transpose(0, 2, 1, 3)
+    return out[:, :Sq]

@@ -1,0 +1,76 @@
+"""Public jit'd wrappers for the flash attention kernel.
+
+``flash_attention`` — forward-only (serving).  On TPU the Pallas path
+compiles to MXU code; on CPU (this container) ``interpret=True`` runs
+the kernel body in Python for validation.
+
+``flash_attention_vjp`` — differentiable: Pallas forward + a
+recompute-based backward (the VJP of the numerically-identical
+XLA-blocked implementation).  The residuals are just (q, k, v) — the
+flash memory profile — and under the training remat policy the forward
+is recomputed anyway.  This is what ``cfg.attention_impl == "pallas"``
+selects in the models.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "block_q", "block_k", "q_offset",
+    "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, block_q: int = 512,
+                    block_k: int = 512, q_offset: int = 0,
+                    interpret: bool | None = None):
+    if interpret is None:
+        interpret = _on_cpu()
+    return flash_attention_fwd(
+        q, k, v, causal=causal, window=window, softcap=softcap,
+        block_q=block_q, block_k=block_k, q_offset=q_offset,
+        interpret=interpret)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9))
+def flash_attention_vjp(q, k, v, causal: bool = True, window: int = 0,
+                        softcap: float = 0.0, block_q: int = 512,
+                        block_k: int = 512, q_offset: int = 0,
+                        interpret: bool | None = None):
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           softcap=softcap, block_q=block_q,
+                           block_k=block_k, q_offset=q_offset,
+                           interpret=interpret)
+
+
+def _fa_fwd(q, k, v, causal, window, softcap, block_q, block_k, q_offset,
+            interpret):
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          softcap=softcap, block_q=block_q,
+                          block_k=block_k, q_offset=q_offset,
+                          interpret=interpret)
+    return out, (q, k, v)
+
+
+def _fa_bwd(causal, window, softcap, block_q, block_k, q_offset,
+            interpret, res, g):
+    from repro.models.layers import flash_attention_xla
+
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: flash_attention_xla(
+            q_, k_, v_, causal=causal, window=window, softcap=softcap,
+            block_q=block_q, block_k=block_k, q_offset=q_offset),
+        q, k, v)
+    return vjp(g)
+
+
+flash_attention_vjp.defvjp(_fa_fwd, _fa_bwd)

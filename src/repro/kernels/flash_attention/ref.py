@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the flash attention kernel (O(S^2) materialised)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  softcap: float = 0.0, q_offset: int = 0):
+    """q [B, Sq, Hq, hd]; k, v [B, Sk, Hkv, hd] -> [B, Sq, Hq, hd]."""
+    B, Sq, Hq, hd = q.shape
+    _, Sk, Hkv, _ = k.shape
+    G = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(jnp.float32))
+    s = s / math.sqrt(hd)
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = q_offset + jnp.arange(Sq)
+    kpos = jnp.arange(Sk)
+    ok = jnp.ones((Sq, Sk), bool)
+    if causal:
+        ok &= kpos[None, :] <= qpos[:, None]
+    if window > 0:
+        ok &= kpos[None, :] > qpos[:, None] - window
+    s = jnp.where(ok[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, Hq, hd).astype(q.dtype)

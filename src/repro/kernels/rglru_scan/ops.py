@@ -1,0 +1,24 @@
+"""Public jit'd wrapper for the RG-LRU scan kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.rglru_scan.kernel import rglru_scan
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "block_w",
+                                             "interpret"))
+def lru_scan(a, b, h0=None, *, block_s: int = 256, block_w: int = 512,
+             interpret: bool | None = None):
+    """h_t = a_t h_{t-1} + b_t; returns (h [B,S,W], h_last [B,W])."""
+    if interpret is None:
+        interpret = _on_cpu()
+    return rglru_scan(a, b, h0, block_s=block_s, block_w=block_w,
+                      interpret=interpret)

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the RG-LRU recurrence (associative scan form)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def rglru_scan_ref(a, b, h0=None):
+    """h_t = a_t * h_{t-1} + b_t.  a, b [B, S, W]; h0 [B, W] or None.
+    Returns (h [B, S, W], h_last [B, W])."""
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def op(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = lax.associative_scan(op, (a, b), axis=1)
+    return h, h[:, -1]

@@ -1,0 +1,220 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ---------------------------------------------------------------------------
+# Multi-pod dry-run (deliverable e).
+#
+# The two lines above MUST precede any other import: jax locks the device
+# count at first initialisation, and the production meshes need 512
+# placeholder host devices.  Everything else (tests, benches, examples)
+# sees the normal 1-device view.
+#
+# For every (architecture x input shape) cell this driver builds the
+# appropriate step (train_step for train shapes, prefill/serve_step for
+# inference shapes), lowers it with ShapeDtypeStruct inputs (no
+# allocation), compiles it for the single-pod (16,16) and multi-pod
+# (2,16,16) meshes, and records:
+#   * memory_analysis()  — proves the state fits 16 GiB/chip,
+#   * cost_analysis()    — XLA's while-body-once FLOPs/bytes,
+#   * hlo_analysis.analyze() — trip-count-corrected FLOPs / HBM bytes /
+#     per-kind collective bytes parsed from the compiled HLO,
+# into results/dryrun/<mesh>/<arch>__<shape>.json for the roofline
+# (benchmarks/roofline.py) and EXPERIMENTS.md §Dry-run.
+# ---------------------------------------------------------------------------
+
+import argparse
+import functools
+import gzip
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCHS, get_config
+from repro.configs.base import SHAPES, cell_is_applicable
+from repro.distrib.rules import rules_for
+from repro.launch.hlo_analysis import analyze_compiled
+from repro.launch.mesh import make_production_mesh
+from repro.models.api import build_model
+from repro.train.optim import make_optimizer
+from repro.train.schedule import warmup_cosine
+from repro.train.step import make_decode_step, make_prefill_step, \
+    make_train_step
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+# cheap archs first so a long run yields cells early
+CELL_ORDER = [
+    "whisper_base", "smollm_135m", "xlstm_350m", "qwen3_1_7b", "gemma2_2b",
+    "granite_moe_3b_a800m", "qwen3_4b", "recurrentgemma_9b", "qwen2_vl_7b",
+    "kimi_k2_1t_a32b",
+]
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS (the 'useful compute' yardstick):
+    train: 6 N_active tokens; prefill: 2 N_active tokens;
+    decode: 2 N_active per new token (B tokens per step)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch
+
+
+def build_step(cfg, shape, mesh, multi_pod: bool, perf: bool = True):
+    import dataclasses as _dc
+
+    from repro.configs.perf import step_knobs
+
+    knobs = dict(step_knobs(cfg.arch, shape.name,
+                            "multi" if multi_pod else "single")
+                 if (perf and shape.kind == "train") else {})
+    if "remat_group" in knobs:
+        cfg = _dc.replace(cfg, remat_group=knobs.pop("remat_group"))
+    api = build_model(cfg)
+    rules = rules_for(cfg.arch, multi_pod=multi_pod, shape_name=shape.name,
+                      perf=perf)
+    if shape.kind == "train":
+        opt = make_optimizer(cfg.optimizer)
+        sched = functools.partial(warmup_cosine, base_lr=3e-4,
+                                  warmup=2000, total=100_000)
+        return make_train_step(api, opt, sched, mesh, rules, shape, **knobs)
+    if shape.kind == "prefill":
+        return make_prefill_step(api, mesh, rules, shape)
+    return make_decode_step(api, mesh, rules, shape)
+
+
+def run_cell(arch: str, shape_name: str, mesh_tag: str, force: bool = False
+             ) -> dict:
+    multi_pod = mesh_tag == "multi"
+    out_dir = RESULTS / mesh_tag
+    out_dir.mkdir(parents=True, exist_ok=True)
+    out_path = out_dir / f"{arch}__{shape_name}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = cell_is_applicable(cfg.arch, shape_name)
+    record: dict = {
+        "arch": cfg.arch, "shape": shape_name, "mesh": mesh_tag,
+        "kind": shape.kind,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "model_flops": model_flops(cfg, shape),
+    }
+    if not ok:
+        record.update(status="skip", reason=why)
+        out_path.write_text(json.dumps(record, indent=1))
+        return record
+
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        record["mesh_shape"] = dict(mesh.shape)
+        record["chips"] = mesh.size
+        step = build_step(cfg, shape, mesh, multi_pod)
+        lowered = step.lower()
+        record["lower_seconds"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        record["compile_seconds"] = round(time.time() - t1, 1)
+        hlo_text = compiled.as_text()
+        with gzip.open(out_dir / f"{arch}__{shape_name}.hlo.gz", "wt") as f:
+            f.write(hlo_text)
+        record.update(analyze_compiled(compiled, hlo_text))
+        mem = record.get("memory", {})
+        record["bytes_per_device"] = int(
+            mem.get("argument_bytes", 0) + mem.get("temp_bytes", 0)
+            + mem.get("output_bytes", 0) - mem.get("alias_bytes", 0))
+        record["status"] = "ok"
+    except Exception as e:                               # noqa: BLE001
+        record["status"] = "error"
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-4000:]
+    record["total_seconds"] = round(time.time() - t0, 1)
+    out_path.write_text(json.dumps(record, indent=1))
+    return record
+
+
+def iter_cells(archs, shapes):
+    for arch in archs:
+        for shape_name in shapes:
+            yield arch, shape_name
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default=None, help="single arch id")
+    ap.add_argument("--shape", default=None, help="single shape name")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--reanalyze", action="store_true",
+                    help="re-run the HLO analysis on stored .hlo.gz dumps "
+                         "(no recompilation)")
+    args = ap.parse_args()
+
+    archs = [args.arch.replace("-", "_")] if args.arch else CELL_ORDER
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": ["single"], "multi": ["multi"],
+              "both": ["single", "multi"]}[args.mesh]
+
+    if args.reanalyze:
+        from repro.launch.hlo_analysis import analyze
+        for mesh_tag in meshes:
+            for arch, shape in iter_cells(archs, shapes):
+                jp = RESULTS / mesh_tag / f"{arch}__{shape}.json"
+                hp = RESULTS / mesh_tag / f"{arch}__{shape}.hlo.gz"
+                if not (jp.exists() and hp.exists()):
+                    continue
+                rec = json.loads(jp.read_text())
+                if rec.get("status") != "ok":
+                    continue
+                with gzip.open(hp, "rt") as f:
+                    text = f.read()
+                rec.update(analyze(text))
+                jp.write_text(json.dumps(rec, indent=1))
+                print(f"[{mesh_tag}] {arch:24s} {shape:12s} reanalyzed",
+                      flush=True)
+        return
+
+    if args.list:
+        for arch, shape in iter_cells(archs, shapes):
+            for m in meshes:
+                p = RESULTS / m / f"{arch}__{shape}.json"
+                status = "-"
+                if p.exists():
+                    status = json.loads(p.read_text()).get("status", "?")
+                print(f"{m:7s} {arch:24s} {shape:12s} {status}")
+        return
+
+    n_ok = n_skip = n_err = 0
+    for mesh_tag in meshes:
+        for arch, shape in iter_cells(archs, shapes):
+            rec = run_cell(arch, shape, mesh_tag, force=args.force)
+            status = rec["status"]
+            n_ok += status == "ok"
+            n_skip += status == "skip"
+            n_err += status == "error"
+            extra = ""
+            if status == "ok":
+                mem = rec.get("memory", {})
+                extra = (f"args={mem.get('argument_bytes', 0)/2**30:.2f}GiB "
+                         f"temp={mem.get('temp_bytes', 0)/2**30:.2f}GiB "
+                         f"coll={rec.get('coll_bytes', 0)/2**30:.3f}GiB "
+                         f"{rec.get('total_seconds', 0):.0f}s")
+            elif status == "error":
+                extra = rec.get("error", "")[:120]
+            print(f"[{mesh_tag}] {arch:24s} {shape:12s} {status:5s} {extra}",
+                  flush=True)
+    print(f"done: {n_ok} ok, {n_skip} skip, {n_err} error")
+
+
+if __name__ == "__main__":
+    main()

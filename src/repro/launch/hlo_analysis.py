@@ -1,0 +1,353 @@
+"""Post-compile HLO analysis for the roofline (§Roofline).
+
+``compiled.as_text()`` is the per-device partitioned module.  XLA's own
+``cost_analysis()`` visits every while body ONCE, so scanned-layer models
+under-report by ~num_layers x.  This module parses the HLO text itself:
+
+  * builds the computation call graph (fusion ``calls=``, while ``body=``,
+    ``to_apply=``/branch calls),
+  * multiplies while bodies by their trip count (taken from XLA's
+    ``backend_config={"known_trip_count":{"n":...}}`` annotation; falls
+    back to 1 with a flag if absent),
+  * sums collective operand bytes per op kind (all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute, incl. -start forms),
+  * recomputes dot FLOPs from shapes + contracting dims,
+  * estimates HBM traffic with a fusion-boundary model: every top-level
+    op's operands + outputs cross HBM once (fusion internals are free;
+    parameter/constant/gte/tuple/bitcast are free).
+
+All numbers are PER DEVICE (the module is per-device); the roofline
+multiplies/divides by chip counts explicitly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Iterator
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e4m3": 1,
+    "f8e5m2fnuz": 1, "f8e4m3fnuz": 1, "f8e3m4": 1, "f8e8m0fnu": 1,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_COMP_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\((.*)\)\s+->")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s+=\s+(.+?)\s+([\w\-]+)\(")
+_PARAM_RE = re.compile(r"%?([\w.\-]+):\s+((?:\([^)]*\))|(?:[a-z0-9]+\[[\d,]*\](?:\{[^}]*\})?))")
+_REF_RE = re.compile(r"%([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+COLLECTIVE_KINDS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "ragged-all-to-all",
+)
+
+_FREE_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "domain",
+    "opt-barrier",
+}
+
+
+def shape_bytes(type_str: str) -> int:
+    """Bytes of an HLO type string (arrays and tuples)."""
+    total = 0.0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return int(total)
+
+
+def dot_flops(out_type: str, lhs_type: str, contracting: list[int]) -> int:
+    """2 x output elems x contracted extent."""
+    m = _SHAPE_RE.search(out_type)
+    if not m:
+        return 0
+    out_elems = 1
+    if m.group(2):
+        for d in m.group(2).split(","):
+            out_elems *= int(d)
+    lm = _SHAPE_RE.search(lhs_type)
+    if not lm:
+        return 0
+    lhs_dims = [int(d) for d in lm.group(2).split(",")] if lm.group(2) else []
+    k = 1
+    for c in contracting:
+        if c < len(lhs_dims):
+            k *= lhs_dims[c]
+    return 2 * out_elems * k
+
+
+@dataclasses.dataclass
+class OpInfo:
+    name: str
+    out_type: str
+    opcode: str
+    operands: list[str]
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    is_entry: bool
+    symbols: dict[str, str]           # op/param name -> output type
+    ops: list[OpInfo]
+
+
+def _split_computations(text: str) -> Iterator[tuple[str, bool, list[str]]]:
+    lines = text.splitlines()
+    cur_name, cur_entry, cur_lines = None, False, []
+    for ln in lines:
+        m = _COMP_HEADER_RE.match(ln)
+        if m and ln.rstrip().endswith("{"):
+            if cur_name is not None:
+                yield cur_name, cur_entry, cur_lines
+            cur_name = m.group(2)
+            cur_entry = bool(m.group(1))
+            cur_lines = [ln]
+        elif cur_name is not None:
+            if ln.strip() == "}":
+                yield cur_name, cur_entry, cur_lines
+                cur_name, cur_lines = None, []
+            else:
+                cur_lines.append(ln)
+    if cur_name is not None:
+        yield cur_name, cur_entry, cur_lines
+
+
+def parse_module(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    for name, is_entry, lines in _split_computations(text):
+        symbols: dict[str, str] = {}
+        header = lines[0]
+        args = header[header.find("(") + 1:header.rfind("->")]
+        for pname, ptype in _PARAM_RE.findall(args):
+            symbols[pname] = ptype
+        ops: list[OpInfo] = []
+        for ln in lines[1:]:
+            m = _OP_RE.match(ln)
+            if not m:
+                continue
+            opname, out_type, opcode = m.group(1), m.group(2), m.group(3)
+            symbols[opname] = out_type
+            # operand refs: inside the first balanced paren group only
+            start = ln.find(opcode + "(") + len(opcode)
+            rest = ln[start:]
+            close = rest.find(")")
+            operand_str = rest[:close + 1] if close >= 0 else rest
+            operands = _REF_RE.findall(operand_str)
+            ops.append(OpInfo(opname, out_type, opcode, operands, ln))
+        comps[name] = Computation(name, is_entry, symbols, ops)
+    return comps
+
+
+@dataclasses.dataclass
+class Metrics:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_kind: dict = dataclasses.field(default_factory=dict)
+    coll_ops: int = 0
+    unknown_trips: int = 0
+
+    def add(self, other: "Metrics", mult: float = 1.0):
+        self.flops += mult * other.flops
+        self.bytes += mult * other.bytes
+        self.coll_bytes += mult * other.coll_bytes
+        self.coll_ops += int(mult * other.coll_ops)
+        self.unknown_trips += other.unknown_trips
+        for k, v in other.coll_by_kind.items():
+            self.coll_by_kind[k] = self.coll_by_kind.get(k, 0.0) + mult * v
+
+    def as_dict(self) -> dict:
+        return {"flops": self.flops, "bytes": self.bytes,
+                "coll_bytes": self.coll_bytes,
+                "coll_by_kind": dict(sorted(self.coll_by_kind.items())),
+                "coll_ops": self.coll_ops,
+                "unknown_trips": self.unknown_trips}
+
+
+def _op_traffic(comp: Computation, comps: dict, op: OpInfo,
+                out_bytes: int, operand_bytes: int) -> float:
+    """HBM traffic of one top-level op under the fusion-boundary model,
+    with in-place update handling.
+
+    XLA updates loop-carried buffers in place: a dynamic-update-slice
+    (bare or as a fusion root) whose output aliases a same-typed operand
+    touches only the updated slice, not the whole buffer.  Counting the
+    full buffer per trip inflates scan-heavy models ~O(trip) x; instead
+    the aliased operand and the full-size output are dropped and only
+    the remaining (slice-sized) operands are charged twice (read update
+    + write slice)."""
+    opc = op.opcode
+    root = opc
+    child = None
+    if opc == "fusion":
+        cm = re.search(r"calls=%?([\w.\-]+)", op.line)
+        child = comps.get(cm.group(1)) if cm else None
+        if child is not None and child.ops:
+            root = child.ops[-1].opcode
+    if child is not None:
+        # slice-aware operand accounting: a fusion parameter consumed only
+        # by dynamic-slice ops reads just the slices, not the full buffer
+        # (the scan-body pattern: xs tensors sliced per trip)
+        idx2name = {}
+        for o in child.ops:
+            if o.opcode == "parameter":
+                pm = re.search(r"parameter\((\d+)\)", o.line)
+                if pm:
+                    idx2name[int(pm.group(1))] = o.name
+        aliased_done = False
+        eff = 0.0
+        for i, operand in enumerate(op.operands):
+            full = shape_bytes(comp.symbols.get(operand, ""))
+            if (root in ("dynamic-update-slice", "scatter")
+                    and not aliased_done
+                    and comp.symbols.get(operand, "") == op.out_type):
+                aliased_done = True            # in-place buffer: free
+                continue
+            pname = idx2name.get(i)
+            if pname is not None:
+                consumers = [o for o in child.ops if pname in o.operands]
+                if consumers and all(c.opcode == "dynamic-slice"
+                                     for c in consumers):
+                    eff += sum(shape_bytes(c.out_type) for c in consumers)
+                    continue
+            eff += full
+        if root in ("dynamic-update-slice", "scatter") and aliased_done:
+            return 2.0 * eff                   # read slices + write slice
+        return eff + out_bytes
+    if root in ("dynamic-update-slice", "scatter"):
+        for o in op.operands:
+            if comp.symbols.get(o, "") == op.out_type:
+                rest = sum(shape_bytes(comp.symbols.get(x, ""))
+                           for x in op.operands if x != o)
+                return 2.0 * rest
+    if root == "dynamic-slice":
+        # reads only the slice it produces
+        return 2.0 * out_bytes
+    if opc == "copy":
+        # loop-state copies are elided by buffer aliasing on TPU; only a
+        # layout-CHANGING copy (a transpose) is real traffic
+        src = comp.symbols.get(op.operands[0], "") if op.operands else ""
+        same_layout = src.split("{")[-1] == op.out_type.split("{")[-1] \
+            or "{" not in src or "{" not in op.out_type
+        return 0.0 if same_layout else 2.0 * out_bytes
+    return out_bytes + operand_bytes
+
+
+def _called(line: str) -> list[tuple[str, str]]:
+    """(kind, computation) references on an op line."""
+    out = []
+    for key in ("calls", "body", "to_apply"):
+        for m in re.finditer(key + r"=%?([\w.\-]+)", line):
+            out.append((key, m.group(1)))
+    m = re.search(r"branch_computations=\{([^}]*)\}", line)
+    if m:
+        for ref in _REF_RE.findall(m.group(1)):
+            out.append(("branch", ref))
+    return out
+
+
+def analyze(text: str) -> dict:
+    """Per-device metrics for a compiled HLO module, trip-count corrected."""
+    comps = parse_module(text)
+    memo: dict[str, Metrics] = {}
+
+    def visit(name: str, for_bytes: bool) -> Metrics:
+        key = name + ("/b" if for_bytes else "/f")
+        if key in memo:
+            return memo[key]
+        memo[key] = Metrics()            # cycle guard
+        comp = comps.get(name)
+        if comp is None:
+            return memo[key]
+        m = Metrics()
+        for op in comp.ops:
+            opc = op.opcode
+            base = opc[:-6] if opc.endswith("-start") else opc
+            out_bytes = shape_bytes(op.out_type)
+            operand_bytes = sum(shape_bytes(comp.symbols.get(o, ""))
+                                for o in op.operands)
+            if base in COLLECTIVE_KINDS:
+                m.coll_bytes += operand_bytes
+                m.coll_by_kind[base] = (m.coll_by_kind.get(base, 0.0)
+                                        + operand_bytes)
+                m.coll_ops += 1
+            if opc == "dot":
+                cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+                contracting = ([int(x) for x in cm.group(1).split(",") if x]
+                               if cm else [])
+                lhs_type = comp.symbols.get(op.operands[0], "") \
+                    if op.operands else ""
+                m.flops += dot_flops(op.out_type, lhs_type, contracting)
+            if for_bytes and opc not in _FREE_OPS and opc != "while":
+                m.bytes += _op_traffic(comp, comps, op, out_bytes,
+                                       operand_bytes)
+            # recursion
+            if opc == "while":
+                tm = _TRIP_RE.search(op.line)
+                trip = int(tm.group(1)) if tm else 1
+                if tm is None:
+                    m.unknown_trips += 1
+                for kind, child in _called(op.line):
+                    if kind == "body":
+                        m.add(visit(child, for_bytes), mult=trip)
+                if for_bytes:
+                    m.bytes += out_bytes + operand_bytes   # state in/out once
+            elif opc in ("fusion", "call", "conditional", "custom-call",
+                         "map", "async-start"):
+                for kind, child in _called(op.line):
+                    if kind in ("calls", "to_apply", "branch"):
+                        # flops/collectives recurse; bytes counted at the
+                        # call boundary (fusion internals are free)
+                        sub = visit(child, for_bytes=False)
+                        m.flops += sub.flops
+                        m.coll_bytes += sub.coll_bytes
+                        m.coll_ops += sub.coll_ops
+                        for k, v in sub.coll_by_kind.items():
+                            m.coll_by_kind[k] = m.coll_by_kind.get(k, 0) + v
+        memo[key] = m
+        return m
+
+    entry = next((c.name for c in comps.values() if c.is_entry), None)
+    assert entry is not None, "no ENTRY computation found"
+    result = visit(entry, for_bytes=True)
+    return result.as_dict()
+
+
+def analyze_compiled(compiled, hlo_text: str | None = None) -> dict:
+    """analyze() + XLA's own cost_analysis for comparison."""
+    out = analyze(hlo_text if hlo_text is not None else compiled.as_text())
+    try:
+        ca = compiled.cost_analysis()
+        out["xla_flops_once"] = float(ca.get("flops", -1.0))
+        out["xla_bytes_once"] = float(ca.get("bytes accessed", -1.0))
+    except Exception:                                    # pragma: no cover
+        out["xla_flops_once"] = -1.0
+        out["xla_bytes_once"] = -1.0
+    try:
+        ma = compiled.memory_analysis()
+        out["memory"] = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "generated_code_bytes": int(ma.generated_code_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+        }
+    except Exception:                                    # pragma: no cover
+        out["memory"] = {}
+    return out

@@ -1,0 +1,24 @@
+"""Production mesh construction.
+
+A FUNCTION (never a module-level constant) so importing this module never
+touches jax device state.  Callers that need the 512-placeholder-device
+view (the dry-run) must set XLA_FLAGS before any jax import — see
+``launch/dryrun.py``'s first two lines.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """Single pod: (16, 16) ("data", "model") = 256 chips.
+    Multi-pod:  (2, 16, 16) ("pod", "data", "model") = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
+    """Small mesh for CPU examples and tests."""
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,8 @@
+"""Pure-functional JAX model zoo for the assigned architectures.
+
+Every model is (param_specs, init, loss_fn, prefill, decode_step) over plain
+pytrees; parameters carry *logical axis names* so the distribution layer can
+re-map them to any mesh (the hillclimbing knob).  No flax/haiku.
+"""
+
+from repro.models.api import build_model  # noqa: F401

@@ -1,0 +1,129 @@
+"""Common model interface: every architecture family exposes the same five
+functions over plain pytrees, so the trainer/server/dry-run are family-blind.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]          # logical axis names
+    dtype: str = "bfloat16"
+    init: str = "normal"                   # normal | zeros | ones
+    scale: float = 0.02
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    cfg: ModelConfig
+    param_specs: dict[str, ParamSpec]
+    loss: Callable                   # (params, batch) -> (loss, metrics)
+    prefill: Callable                # (params, batch) -> (logits, cache)
+    decode_step: Callable            # (params, cache, batch) -> (logits, cache)
+    input_specs: Callable            # (ShapeConfig) -> batch of SDS
+    cache_specs: Callable            # (batch, seq) -> cache of (SDS, axes)
+    cache_axes: Callable             # () -> pytree of logical axes tuples
+
+    def init(self, key) -> dict[str, jax.Array]:
+        params = {}
+        for name, spec in sorted(self.param_specs.items()):
+            key, sub = jax.random.split(key)
+            if spec.init == "zeros":
+                params[name] = jnp.zeros(spec.shape, dtype=spec.dtype)
+            elif spec.init == "ones":
+                params[name] = jnp.ones(spec.shape, dtype=spec.dtype)
+            else:
+                params[name] = (spec.scale * jax.random.normal(
+                    sub, spec.shape, dtype=jnp.float32)).astype(spec.dtype)
+        return params
+
+    def abstract_params(self) -> dict[str, jax.ShapeDtypeStruct]:
+        return {name: jax.ShapeDtypeStruct(spec.shape, spec.dtype)
+                for name, spec in self.param_specs.items()}
+
+    def param_axes(self) -> dict[str, tuple[str | None, ...]]:
+        return {name: spec.axes for name, spec in self.param_specs.items()}
+
+
+def build_model(cfg: ModelConfig) -> ModelApi:
+    if cfg.recurrent == "rglru":
+        from repro.models import rglru
+        return rglru.build(cfg)
+    if cfg.recurrent == "xlstm":
+        from repro.models import xlstm
+        return xlstm.build(cfg)
+    if cfg.enc_dec:
+        from repro.models import whisper
+        return whisper.build(cfg)
+    from repro.models import transformer
+    return transformer.build(cfg)
+
+
+# ----------------------------------------------------------- input helpers
+def token_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for a step's inputs (no allocation)."""
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        if cfg.input_mode == "embeds":
+            batch = {"embeds": sds((B, S, cfg.d_model), cfg.dtype),
+                     "targets": sds((B, S), "int32"),
+                     "mask": sds((B, S), "float32")}
+            if cfg.mrope:
+                batch["positions"] = sds((B, S, 3), "int32")
+            else:
+                batch["positions"] = sds((B, S), "int32")
+        else:
+            batch = {"tokens": sds((B, S), "int32"),
+                     "targets": sds((B, S), "int32"),
+                     "mask": sds((B, S), "float32")}
+        if cfg.enc_dec:
+            batch["enc_frames"] = sds((B, cfg.encoder_seq, cfg.d_model),
+                                      cfg.dtype)
+        return batch
+    if shape.kind == "prefill":
+        if cfg.input_mode == "embeds":
+            batch = {"embeds": sds((B, S, cfg.d_model), cfg.dtype)}
+            batch["positions"] = sds((B, S, 3) if cfg.mrope else (B, S),
+                                     "int32")
+        else:
+            batch = {"tokens": sds((B, S), "int32")}
+        if cfg.enc_dec:
+            batch["enc_frames"] = sds((B, cfg.encoder_seq, cfg.d_model),
+                                      cfg.dtype)
+        return batch
+    # decode: one new token against a cache of seq_len
+    batch = {"token": sds((B, 1), "int32"),
+             "pos": sds((B,), "int32")}
+    return batch
+
+
+def make_token_batch(cfg: ModelConfig, shape: ShapeConfig, seed: int = 0
+                     ) -> dict[str, np.ndarray]:
+    """Concrete random batch matching token_batch_specs (smoke tests)."""
+    rng = np.random.default_rng(seed)
+    out = {}
+    for k, s in token_batch_specs(cfg, shape).items():
+        if np.issubdtype(np.dtype(s.dtype) if not hasattr(s.dtype, "name")
+                         else np.dtype(s.dtype.name), np.integer) \
+                or str(s.dtype) in ("int32", "int64"):
+            hi = cfg.vocab if k in ("tokens", "targets", "token") else 64
+            out[k] = rng.integers(0, max(hi, 2), s.shape).astype(np.int32)
+        elif k == "mask":
+            out[k] = np.ones(s.shape, dtype=np.float32)
+        else:
+            out[k] = rng.normal(size=s.shape, scale=0.5).astype("float32")
+    return out

@@ -1,0 +1,265 @@
+"""Shared neural building blocks (pure JAX, mixed precision).
+
+The attention here is the *XLA-native* blocked ("flash-style") implementation
+used for training/prefill at every scale — O(block_q × block_k) live memory,
+online softmax, optional sliding window and logit softcap.  The Pallas TPU
+kernel in ``repro.kernels.flash_attention`` implements the same contract for
+the MXU; ``repro.kernels.ref`` oracles pin both down.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distrib.context import shard_hint
+
+F32 = jnp.float32
+
+
+# ------------------------------------------------------------------- norms
+def rms_norm(x, weight, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(F32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * lax.rsqrt(var + eps) * (1.0 + weight.astype(F32))
+    return out.astype(dtype)
+
+
+# -------------------------------------------------------------------- rope
+def rope_angles(positions, head_dim: int, theta: float):
+    """positions [...]: int32 -> (sin, cos) of shape [..., head_dim//2]."""
+    half = head_dim // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=F32) / half)
+    ang = positions.astype(F32)[..., None] * freq
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x, sin, cos):
+    """x [..., S, H, hd]; sin/cos [..., S, hd//2] (broadcast over heads)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    sin = sin[..., None, :]
+    cos = cos[..., None, :]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+def mrope_angles(positions, head_dim: int, theta: float,
+                 sections: tuple[int, ...]):
+    """Multimodal RoPE (Qwen2-VL): positions [..., 3] (t, h, w); the hd/2
+    frequency lanes are split into ``sections`` fed by the three streams."""
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, half)
+    freq = theta ** (-jnp.arange(0, half, dtype=F32) / half)
+    parts = []
+    start = 0
+    for comp, width in enumerate(sections):
+        f = freq[start:start + width]
+        ang = positions[..., comp].astype(F32)[..., None] * f
+        parts.append(ang)
+        start += width
+    ang = jnp.concatenate(parts, axis=-1)
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+# ------------------------------------------------------------------- mlps
+def swiglu(x, w_gate, w_up, w_down):
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    return h @ w_down
+
+
+# ------------------------------------------------ blocked (flash) attention
+def _softcap(scores, cap: float):
+    if cap and cap > 0.0:
+        return cap * jnp.tanh(scores / cap)
+    return scores
+
+
+def flash_attention_xla(q, k, v, *, causal: bool = True, window=0,
+                        softcap: float = 0.0, block_q: int = 512,
+                        block_k: int = 1024, q_offset=0):
+    """Blocked attention with online softmax.
+
+    q [B, Sq, Hq, hd]; k, v [B, Sk, Hkv, hd]; GQA via head grouping.
+    ``window`` > 0 restricts attention to the last ``window`` keys (sliding
+    window) and may be a *traced* scalar (per-layer pattern under scan;
+    window <= 0 means full attention); ``q_offset`` is the absolute position
+    of q[0] (prefill continuation).  Fully-masked key blocks are skipped with
+    lax.cond, so the causal lower triangle costs ~half the full matrix, and
+    local layers only touch their band.
+    """
+    B, Sq, Hq, hd = q.shape
+    _, Sk, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(hd)
+
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    nq = -(-Sq // block_q)
+    nk = -(-Sk // block_k)
+    pad_q = nq * block_q - Sq
+    pad_k = nk * block_k - Sk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+
+    # [B, Hkv, G, nq, bq, hd]
+    qb = q.reshape(B, nq, block_q, Hkv, G, hd).transpose(0, 3, 4, 1, 2, 5)
+    kb = k.reshape(B, nk, block_k, Hkv, hd).transpose(0, 3, 1, 2, 4)
+    vb = v.reshape(B, nk, block_k, Hkv, hd).transpose(0, 3, 1, 2, 4)
+    qb = shard_hint(qb, ("batch", "kv_heads", "heads", None, None, None))
+    kb = shard_hint(kb, ("batch", "kv_heads", None, None, None))
+    vb = shard_hint(vb, ("batch", "kv_heads", None, None, None))
+
+    q_pos = q_offset + jnp.arange(nq * block_q, dtype=jnp.int32)
+    k_pos = jnp.arange(nk * block_k, dtype=jnp.int32)
+    window = jnp.asarray(window, jnp.int32)
+    win_on = window > 0
+
+    def q_block(carry, iq):
+        qi = qb[:, :, :, iq]                               # [B,Hkv,G,bq,hd]
+        qpos = lax.dynamic_slice_in_dim(q_pos, iq * block_q, block_q)
+
+        def k_block(state, ik):
+            m, l, acc = state
+            kpos = lax.dynamic_slice_in_dim(k_pos, ik * block_k, block_k)
+            first_k, last_k = kpos[0], kpos[-1]
+            last_q, first_q = qpos[-1], qpos[0]
+            needed = jnp.array(True)
+            if causal:
+                needed &= first_k <= last_q
+            needed &= jnp.where(win_on, last_k > first_q - window, True)
+
+            def compute(_):
+                ki = kb[:, :, ik]                          # [B,Hkv,bk,hd]
+                vi = vb[:, :, ik]
+                s = jnp.einsum("bhgqd,bhkd->bhgqk", qi, ki,
+                               preferred_element_type=F32) * scale
+                s = _softcap(s, softcap)
+                ok = (kpos < Sk)[None, :]          # mask the Sk padding
+                if causal:
+                    ok = ok & (kpos[None, :] <= qpos[:, None])
+                ok = ok & jnp.where(win_on,
+                                    kpos[None, :] > qpos[:, None] - window,
+                                    True)
+                s = jnp.where(ok[None, None, None], s, -1e30)
+                m_new = jnp.maximum(m, s.max(-1))
+                p = jnp.exp(s - m_new[..., None])
+                corr = jnp.exp(m - m_new)
+                l_new = l * corr + p.sum(-1)
+                acc_new = acc * corr[..., None] + jnp.einsum(
+                    "bhgqk,bhkd->bhgqd", p.astype(vi.dtype), vi,
+                    preferred_element_type=F32)
+                return m_new, l_new, acc_new
+
+            return lax.cond(needed, compute, lambda _: state, None), None
+
+        init = (jnp.full((B, Hkv, G, block_q), -jnp.inf, F32),
+                jnp.zeros((B, Hkv, G, block_q), F32),
+                jnp.zeros((B, Hkv, G, block_q, hd), F32))
+        (m, l, acc), _ = lax.scan(k_block, init, jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return carry, out.astype(q.dtype)
+
+    _, blocks = lax.scan(q_block, None, jnp.arange(nq))
+    # blocks [nq, B, Hkv, G, bq, hd] -> [B, Sq, Hq, hd]
+    out = blocks.transpose(1, 0, 4, 2, 3, 5).reshape(B, nq * block_q, Hq, hd)
+    return out[:, :Sq]
+
+
+def naive_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                    q_offset=0):
+    """Reference O(S²) attention (smoke tests / oracles); ``window`` may be
+    traced (<= 0 means full attention)."""
+    B, Sq, Hq, hd = q.shape
+    _, Sk, Hkv, _ = k.shape
+    G = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, hd)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                   preferred_element_type=F32) / math.sqrt(hd)
+    s = _softcap(s, softcap)
+    qpos = q_offset + jnp.arange(Sq)
+    kpos = jnp.arange(Sk)
+    ok = jnp.ones((Sq, Sk), bool)
+    if causal:
+        ok &= kpos[None, :] <= qpos[:, None]
+    window = jnp.asarray(window, jnp.int32)
+    ok &= jnp.where(window > 0, kpos[None, :] > qpos[:, None] - window, True)
+    s = jnp.where(ok[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v)
+    return out.reshape(B, Sq, Hq, hd)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, window=0,
+                     softcap: float = 0.0):
+    """Single-token attention against a cache.
+
+    q [B, 1, Hq, hd]; caches [B, Smax, Hkv, hd]; cache_len [] or [B] — number
+    of valid cache entries (the new token's k/v already inserted).
+    """
+    B, Smax, Hkv, hd = k_cache.shape
+    Hq = q.shape[2]
+    G = Hq // Hkv
+    qg = shard_hint(q.reshape(B, Hkv, G, hd),
+                    ("batch", "kv_heads", "heads", None))
+    k_cache = shard_hint(k_cache, ("batch", "kv_seq", "kv_heads", None))
+    v_cache = shard_hint(v_cache, ("batch", "kv_seq", "kv_heads", None))
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache,
+                   preferred_element_type=F32) / math.sqrt(hd)
+    s = _softcap(s, softcap)
+    kpos = jnp.arange(Smax)
+    clen = jnp.reshape(cache_len, (-1, 1))
+    valid = kpos[None, :] < clen
+    window = jnp.asarray(window, jnp.int32)
+    # query position is clen - 1; same band as the prefill mask
+    valid = valid & jnp.where(window > 0,
+                              kpos[None, :] > clen - 1 - window, True)
+    s = jnp.where(valid[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache)
+    return out.reshape(B, 1, Hq, hd)
+
+
+# -------------------------------------------------------- chunked CE loss
+def chunked_softmax_xent(hidden, embed_t, targets, mask, *, chunk: int = 0,
+                         softcap: float = 0.0):
+    """Cross-entropy over a huge vocab without materialising [B, S, V].
+
+    hidden [B, S, D]; embed_t [D, V]; targets/mask [B, S].  Scans over S in
+    chunks; each chunk's logits live only inside the scan body (recomputed in
+    the backward pass under remat).
+    Returns (sum loss, sum mask).
+    """
+    B, S, D = hidden.shape
+    if not chunk or chunk >= S:
+        chunk = S
+    n = -(-S // chunk)
+    pad = n * chunk - S
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    hb = hidden.reshape(B, n, chunk, D).transpose(1, 0, 2, 3)
+    tb = targets.reshape(B, n, chunk).transpose(1, 0, 2)
+    mb = mask.reshape(B, n, chunk).transpose(1, 0, 2)
+
+    def body(carry, xs):
+        h, t, m = xs
+        logits = (h.astype(F32) @ embed_t.astype(F32))
+        logits = shard_hint(logits, ("batch", None, "vocab"))
+        logits = _softcap(logits, softcap)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(logits, t[..., None], axis=-1)[..., 0]
+        loss = (lse - picked) * m
+        return carry + loss.sum(), None
+
+    total, _ = lax.scan(jax.checkpoint(body), jnp.float32(0.0), (hb, tb, mb))
+    return total, mask.sum()

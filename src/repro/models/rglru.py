@@ -1,0 +1,371 @@
+"""RecurrentGemma / Griffin family: RG-LRU recurrent blocks + local attention,
+pattern (recurrent, recurrent, local-attn) repeating — sub-quadratic in
+sequence length, so this family runs the ``long_500k`` cell.
+
+RG-LRU recurrence (Griffin eq. 1-4):
+    r_t = sigmoid(W_a x_t);  i_t = sigmoid(W_x x_t)
+    a_t = exp(-c * softplus(Lambda) * r_t)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+computed with an associative scan over time (O(log S) depth on TPU).  The
+Pallas kernel in ``repro.kernels.rglru_scan`` implements the blocked variant;
+here we use ``lax.associative_scan`` (the XLA-native form used by the
+dry-run).  Attention layers use a sliding window (2048), so decode caches are
+window-sized ring buffers — the 512k-context story.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.distrib.context import shard_hint
+from repro.models.api import ModelApi, ParamSpec, token_batch_specs
+from repro.models.layers import (
+    apply_rope, chunked_softmax_xent, decode_attention, flash_attention_xla,
+    rms_norm, rope_angles,
+)
+
+F32 = jnp.float32
+C_CONST = 8.0
+
+
+# ------------------------------------------------------------- param specs
+def _counts(cfg: ModelConfig) -> tuple[int, int, int]:
+    kinds = cfg.layer_kinds()
+    n_lru = sum(k == "lru" for k in kinds)
+    n_attn = sum(k == "local" for k in kinds)
+    n_groups = n_attn                      # each group = (lru, lru, attn)
+    return n_lru, n_attn, n_groups
+
+
+def param_specs(cfg: ModelConfig) -> dict[str, ParamSpec]:
+    D, Hq, KV, hd, F, V = (cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                           cfg.head_dim_, cfg.d_ff, cfg.vocab)
+    W = cfg.lru_width or D
+    cw = cfg.conv_width
+    n_lru, n_attn, _ = _counts(cfg)
+    dt = cfg.dtype
+    p = {
+        "embed": ParamSpec((V, D), ("vocab", "embed"), dt),
+        "final_norm": ParamSpec((D,), ("embed",), dt, init="zeros"),
+    }
+    for pre, n in (("lru", n_lru), ("attn", n_attn)):
+        p[f"{pre}/ln1"] = ParamSpec((n, D), ("layers", "embed"), dt, init="zeros")
+        p[f"{pre}/ln2"] = ParamSpec((n, D), ("layers", "embed"), dt, init="zeros")
+        p[f"{pre}/w_gate"] = ParamSpec((n, D, F), ("layers", "embed", "mlp"), dt)
+        p[f"{pre}/w_up"] = ParamSpec((n, D, F), ("layers", "embed", "mlp"), dt)
+        p[f"{pre}/w_down"] = ParamSpec((n, F, D), ("layers", "mlp", "embed"), dt)
+    # recurrent mixer
+    p["lru/w_y"] = ParamSpec((n_lru, D, W), ("layers", "embed", "mlp"), dt)
+    p["lru/w_x"] = ParamSpec((n_lru, D, W), ("layers", "embed", "mlp"), dt)
+    p["lru/conv"] = ParamSpec((n_lru, cw, W), ("layers", None, "mlp"), dt)
+    p["lru/w_a"] = ParamSpec((n_lru, W, W), ("layers", "mlp", None), dt)
+    p["lru/w_i"] = ParamSpec((n_lru, W, W), ("layers", "mlp", None), dt)
+    p["lru/lam"] = ParamSpec((n_lru, W), ("layers", "mlp"), dt, init="ones")
+    p["lru/w_out"] = ParamSpec((n_lru, W, D), ("layers", "mlp", "embed"), dt)
+    # local attention mixer
+    p["attn/wq"] = ParamSpec((n_attn, D, Hq * hd), ("layers", "embed", "heads"), dt)
+    p["attn/wk"] = ParamSpec((n_attn, D, KV * hd), ("layers", "embed", "kv_heads"), dt)
+    p["attn/wv"] = ParamSpec((n_attn, D, KV * hd), ("layers", "embed", "kv_heads"), dt)
+    p["attn/wo"] = ParamSpec((n_attn, Hq * hd, D), ("layers", "heads", "embed"), dt)
+    return p
+
+
+# ------------------------------------------------------------ lru pieces
+def _causal_conv(x, kernel, state=None):
+    """Depthwise causal conv along time.  x [B,S,W]; kernel [cw, W];
+    state [B, cw-1, W] (decode carry) or None (zeros)."""
+    cw = kernel.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * kernel[i][None, None]
+              for i in range(cw))
+    new_state = xp[:, -(cw - 1):] if cw > 1 else state
+    return out, new_state
+
+
+def _lru_gates(x, lp):
+    r = jax.nn.sigmoid(x.astype(F32) @ lp["w_a"].astype(F32))
+    i = jax.nn.sigmoid(x.astype(F32) @ lp["w_i"].astype(F32))
+    log_a = -C_CONST * jax.nn.softplus(lp["lam"].astype(F32)) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * (i * x.astype(F32))
+    return a, b
+
+
+def _lru_scan(x, lp, h0=None, chunk: int = 256):
+    """x [B,S,W] -> (y [B,S,W], h_last [B,W]).
+
+    Blocked linear recurrence: sequential scan over chunks, associative
+    scan within each chunk — numerically identical to one full
+    associative scan, but the O(S log S) scan intermediates shrink to
+    O(chunk log chunk) per step (the same blocking the Pallas
+    rglru_scan kernel uses in VMEM; EXPERIMENTS.md §Perf P3.c)."""
+    B, S, W = x.shape
+    a, b = _lru_gates(x, lp)
+    h0f = (h0.astype(F32) if h0 is not None
+           else jnp.zeros((B, W), F32))
+
+    def op(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    if not chunk or chunk >= S:
+        b = b.at[:, 0].add(a[:, 0] * h0f)
+        _, h = lax.associative_scan(op, (a, b), axis=1)
+        return h.astype(x.dtype), h[:, -1]
+
+    n = -(-S // chunk)
+    pad = n * chunk - S
+    if pad:
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+    ac = a.reshape(B, n, chunk, W).swapaxes(0, 1)
+    bc = b.reshape(B, n, chunk, W).swapaxes(0, 1)
+
+    def body(h, xs):
+        a_i, b_i = xs                          # [B, chunk, W]
+        A, Bv = lax.associative_scan(op, (a_i, b_i), axis=1)
+        y = A * h[:, None] + Bv
+        return y[:, -1], y
+
+    h_last, ys = lax.scan(body, h0f, (ac, bc))
+    h = ys.swapaxes(0, 1).reshape(B, n * chunk, W)[:, :S]
+    return h.astype(x.dtype), h[:, -1]
+
+
+def _lru_step(x1, lp, h):
+    """Single decode step: x1 [B,1,W], h [B,W]."""
+    a, b = _lru_gates(x1, lp)
+    h_new = a[:, 0] * h.astype(F32) + b[:, 0]
+    return h_new.astype(x1.dtype)[:, None], h_new
+
+
+def _lru_block(x, lp, *, conv_state=None, h0=None, decode=False):
+    """Full recurrent mixer: gelu gate branch * (conv -> rg-lru) branch."""
+    h = rms_norm(x, lp["ln1"])
+    y = shard_hint(jax.nn.gelu(h @ lp["w_y"]), ("batch", None, "mlp"))
+    u = shard_hint(h @ lp["w_x"], ("batch", None, "mlp"))
+    u, new_conv = _causal_conv(u, lp["conv"], conv_state)
+    if decode:
+        r, new_h = _lru_step(u, lp, h0)
+    else:
+        r, new_h = _lru_scan(u, lp, h0)
+    out = (r * y) @ lp["w_out"]
+    return shard_hint(x + out, ("batch", None, None)), (new_conv, new_h)
+
+
+def _mlp(x, lp):
+    h = rms_norm(x, lp["ln2"])
+    y = shard_hint(jax.nn.silu(h @ lp["w_gate"]) * (h @ lp["w_up"]),
+                   ("batch", None, "mlp"))
+    return shard_hint(x + y @ lp["w_down"], ("batch", None, None))
+
+
+def _attn_block(cfg, x, lp, sin, cos, *, q_offset=0):
+    B, S, D = x.shape
+    Hq, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    h = rms_norm(x, lp["ln1"])
+    q = apply_rope(shard_hint((h @ lp["wq"]).reshape(B, S, Hq, hd),
+                              ("batch", None, "heads", None)), sin, cos)
+    k = apply_rope(shard_hint((h @ lp["wk"]).reshape(B, S, KV, hd),
+                              ("batch", None, "kv_heads", None)), sin, cos)
+    v = shard_hint((h @ lp["wv"]).reshape(B, S, KV, hd),
+                   ("batch", None, "kv_heads", None))
+    out = flash_attention_xla(q, k, v, causal=True, window=cfg.local_window,
+                              block_q=cfg.attn_block_q,
+                              block_k=cfg.attn_block_k, q_offset=q_offset)
+    out = shard_hint(out.reshape(B, S, Hq * hd), ("batch", None, "heads"))
+    return shard_hint(x + out @ lp["wo"], ("batch", None, None)), (k, v)
+
+
+def _split_stacks(params, cfg):
+    n_lru, n_attn, n_groups = _counts(cfg)
+    lru = {k.split("/", 1)[1]: v for k, v in params.items()
+           if k.startswith("lru/")}
+    attn = {k.split("/", 1)[1]: v for k, v in params.items()
+            if k.startswith("attn/")}
+    n_body = n_groups * 2
+    lru_body = jax.tree.map(
+        lambda a: a[:n_body].reshape(n_groups, 2, *a.shape[1:]), lru)
+    lru_tail = jax.tree.map(lambda a: a[n_body:], lru)
+    return lru_body, lru_tail, attn, n_lru - n_body
+
+
+# ------------------------------------------------------------------ train
+def forward_hidden(params, cfg: ModelConfig, x, sin, cos):
+    lru_body, lru_tail, attn, n_tail = _split_stacks(params, cfg)
+
+    def group(x, xs):
+        lg, ag = xs
+        x, _ = _lru_block(x, jax.tree.map(lambda a: a[0], lg))
+        x = _mlp(x, jax.tree.map(lambda a: a[0], lg))
+        x, _ = _lru_block(x, jax.tree.map(lambda a: a[1], lg))
+        x = _mlp(x, jax.tree.map(lambda a: a[1], lg))
+        x, _ = _attn_block(cfg, x, ag, sin, cos)
+        x = _mlp(x, ag)
+        return x, None
+
+    body = jax.checkpoint(group) if cfg.remat else group
+    x, _ = lax.scan(body, x, (lru_body, attn))
+    for i in range(n_tail):
+        lp = jax.tree.map(lambda a: a[i], lru_tail)
+        x, _ = _lru_block(x, lp)
+        x = _mlp(x, lp)
+    return rms_norm(x, params["final_norm"])
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    x = shard_hint(jnp.take(params["embed"], batch["tokens"], axis=0),
+                   ("batch", None, None))
+    x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(x.dtype)
+    B, S = batch["tokens"].shape
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    sin, cos = rope_angles(pos, cfg.head_dim_, cfg.rope_theta)
+    hidden = forward_hidden(params, cfg, x, sin, cos)
+    total, count = chunked_softmax_xent(
+        hidden, shard_hint(params["embed"].astype(jnp.bfloat16).T,
+                           (None, "vocab")),
+        batch["targets"], batch["mask"],
+        chunk=cfg.vocab_chunk or min(512, S))
+    return total / jnp.maximum(count, 1.0), {}
+
+
+# ---------------------------------------------------------------- serving
+def cache_specs(cfg: ModelConfig, B: int, Smax: int):
+    n_lru, n_attn, _ = _counts(cfg)
+    W = cfg.lru_width or cfg.d_model
+    win = min(cfg.local_window, Smax)
+    sds = jax.ShapeDtypeStruct
+    return {
+        "k": sds((n_attn, B, win, cfg.num_kv_heads, cfg.head_dim_), cfg.dtype),
+        "v": sds((n_attn, B, win, cfg.num_kv_heads, cfg.head_dim_), cfg.dtype),
+        "h": sds((n_lru, B, W), "float32"),
+        "conv": sds((n_lru, B, cfg.conv_width - 1, W), cfg.dtype),
+        "length": sds((), "int32"),
+    }
+
+
+def cache_axes(cfg: ModelConfig):
+    return {"k": ("layers", "batch", "kv_seq", "kv_heads", None),
+            "v": ("layers", "batch", "kv_seq", "kv_heads", None),
+            "h": ("layers", "batch", "mlp"),
+            "conv": ("layers", "batch", None, "mlp"),
+            "length": ()}
+
+
+def prefill(params, cfg: ModelConfig, batch, Smax: int | None = None):
+    """Sequential (layer-python-loop) prefill filling ring-buffer caches."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    Smax = Smax or S
+    win = min(cfg.local_window, Smax)
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(x.dtype)
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    sin, cos = rope_angles(pos, cfg.head_dim_, cfg.rope_theta)
+    lru_i = attn_i = 0
+    hs, convs, ks, vs = [], [], [], []
+    for kind in cfg.layer_kinds():
+        if kind == "lru":
+            lp = {k.split("/", 1)[1]: v[lru_i] for k, v in params.items()
+                  if k.startswith("lru/")}
+            x, (cstate, h) = _lru_block(x, lp)
+            x = _mlp(x, lp)
+            hs.append(h)
+            convs.append(cstate)
+            lru_i += 1
+        else:
+            ap = {k.split("/", 1)[1]: v[attn_i] for k, v in params.items()
+                  if k.startswith("attn/")}
+            x, (k_, v_) = _attn_block(cfg, x, ap, sin, cos)
+            x = _mlp(x, ap)
+            ks.append(k_[:, -win:])
+            vs.append(v_[:, -win:])
+            attn_i += 1
+    hidden = rms_norm(x, params["final_norm"])
+    logits = hidden[:, -1].astype(F32) @ params["embed"].astype(F32).T
+    pad = win - min(win, S)
+    cache = {
+        "k": jnp.stack([jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                        for a in ks]),
+        "v": jnp.stack([jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                        for a in vs]),
+        "h": jnp.stack([h.astype(F32) for h in hs]),
+        "conv": jnp.stack(convs),
+        "length": jnp.int32(S),
+    }
+    return logits, cache
+
+
+def decode_step(params, cfg: ModelConfig, cache, batch):
+    B = batch["token"].shape[0]
+    win = cache["k"].shape[2]
+    length = cache["length"]
+    x = jnp.take(params["embed"], batch["token"], axis=0)
+    x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(x.dtype)
+    sin, cos = rope_angles(batch["pos"][:, None], cfg.head_dim_,
+                           cfg.rope_theta)
+    Hq, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    lru_i = attn_i = 0
+    new_h, new_conv, new_k, new_v = [], [], [], []
+    for kind in cfg.layer_kinds():
+        if kind == "lru":
+            lp = {k.split("/", 1)[1]: v[lru_i] for k, v in params.items()
+                  if k.startswith("lru/")}
+            x, (cstate, h) = _lru_block(x, lp, conv_state=cache["conv"][lru_i],
+                                        h0=cache["h"][lru_i], decode=True)
+            x = _mlp(x, lp)
+            new_h.append(h)
+            new_conv.append(cstate)
+            lru_i += 1
+        else:
+            ap = {k.split("/", 1)[1]: v[attn_i] for k, v in params.items()
+                  if k.startswith("attn/")}
+            h_in = rms_norm(x, ap["ln1"])
+            q = apply_rope((h_in @ ap["wq"]).reshape(B, 1, Hq, hd), sin, cos)
+            k1 = apply_rope((h_in @ ap["wk"]).reshape(B, 1, KV, hd), sin, cos)
+            v1 = (h_in @ ap["wv"]).reshape(B, 1, KV, hd)
+            slot = length % win                      # ring buffer
+            kc = lax.dynamic_update_slice_in_dim(cache["k"][attn_i], k1,
+                                                 slot, axis=1)
+            vc = lax.dynamic_update_slice_in_dim(cache["v"][attn_i], v1,
+                                                 slot, axis=1)
+            # ring buffer: all filled slots are within the window by
+            # construction, so plain length masking suffices
+            out = decode_attention(q, kc, vc,
+                                   jnp.minimum(length + 1, win))
+            x = x + out.reshape(B, 1, Hq * hd) @ ap["wo"]
+            x = _mlp(x, ap)
+            new_k.append(kc)
+            new_v.append(vc)
+            attn_i += 1
+    hidden = rms_norm(x, params["final_norm"])
+    logits = hidden[:, -1].astype(F32) @ params["embed"].astype(F32).T
+    cache = {"k": jnp.stack(new_k), "v": jnp.stack(new_v),
+             "h": jnp.stack(new_h), "conv": jnp.stack(new_conv),
+             "length": length + 1}
+    return logits, cache
+
+
+def build(cfg: ModelConfig) -> ModelApi:
+    return ModelApi(
+        cfg=cfg,
+        param_specs=param_specs(cfg),
+        loss=lambda params, batch: loss_fn(params, cfg, batch),
+        prefill=lambda params, batch, Smax=None: prefill(params, cfg, batch,
+                                                         Smax),
+        decode_step=lambda params, cache, batch: decode_step(params, cfg,
+                                                             cache, batch),
+        input_specs=functools.partial(token_batch_specs, cfg),
+        cache_specs=functools.partial(cache_specs, cfg),
+        cache_axes=functools.partial(cache_axes, cfg),
+    )

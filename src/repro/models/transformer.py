@@ -1,0 +1,366 @@
+"""Decoder-only LM family: GQA, qk-norm, softcaps, local/global alternation,
+RoPE / M-RoPE, tied embeddings, optional MoE FFN.
+
+Covers smollm-135m, gemma2-2b, qwen3-1.7b/4b, qwen2-vl-7b (embeds input +
+M-RoPE), granite-moe and kimi-k2 (MoE).  Layers are scanned (stacked [L, ...]
+parameters) with a per-layer kind flag, so the HLO stays one while-loop body
+regardless of depth — essential for 512-way compile times and for the
+roofline's trip-count accounting.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distrib.context import mesh_context, shard_hint
+from repro.models import moe as moe_lib
+from repro.models.api import ModelApi, ParamSpec, token_batch_specs
+from repro.models.layers import (
+    apply_rope,
+    chunked_softmax_xent,
+    decode_attention,
+    flash_attention_xla,
+    mrope_angles,
+    naive_attention,
+    rope_angles,
+    rms_norm,
+)
+
+F32 = jnp.float32
+
+
+# ------------------------------------------------------------- param specs
+def param_specs(cfg: ModelConfig) -> dict[str, ParamSpec]:
+    D, Hq, KV, hd, F, V, L = (cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                              cfg.head_dim_, cfg.d_ff, cfg.vocab,
+                              cfg.num_layers)
+    dt = cfg.dtype
+    p: dict[str, ParamSpec] = {
+        "embed": ParamSpec((V, D), ("vocab", "embed"), dt),
+        "final_norm": ParamSpec((D,), ("embed",), dt, init="zeros"),
+        "ln1": ParamSpec((L, D), ("layers", "embed"), dt, init="zeros"),
+        "ln2": ParamSpec((L, D), ("layers", "embed"), dt, init="zeros"),
+        "wq": ParamSpec((L, D, Hq * hd), ("layers", "embed", "heads"), dt),
+        "wk": ParamSpec((L, D, KV * hd), ("layers", "embed", "kv_heads"), dt),
+        "wv": ParamSpec((L, D, KV * hd), ("layers", "embed", "kv_heads"), dt),
+        "wo": ParamSpec((L, Hq * hd, D), ("layers", "heads", "embed"), dt),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = ParamSpec((V, D), ("vocab", "embed"), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = ParamSpec((L, hd), ("layers", None), dt, init="zeros")
+        p["k_norm"] = ParamSpec((L, hd), ("layers", None), dt, init="zeros")
+    if cfg.moe is not None:
+        E, Fe = cfg.moe.num_experts_padded, cfg.moe.d_ff_expert
+        p["router"] = ParamSpec((L, D, E), ("layers", "embed", None), dt)
+        p["we_gate"] = ParamSpec((L, E, D, Fe),
+                                 ("layers", "experts", "expert_in", "expert_mlp"), dt)
+        p["we_up"] = ParamSpec((L, E, D, Fe),
+                               ("layers", "experts", "expert_in", "expert_mlp"), dt)
+        p["we_down"] = ParamSpec((L, E, Fe, D),
+                                 ("layers", "experts", "expert_mlp", "expert_in"), dt)
+    else:
+        p["w_gate"] = ParamSpec((L, D, F), ("layers", "embed", "mlp"), dt)
+        p["w_up"] = ParamSpec((L, D, F), ("layers", "embed", "mlp"), dt)
+        p["w_down"] = ParamSpec((L, F, D), ("layers", "mlp", "embed"), dt)
+    return p
+
+
+def _layer_windows(cfg: ModelConfig) -> jnp.ndarray:
+    """Per-layer sliding-window size (0 = full attention)."""
+    return jnp.array([cfg.local_window if k == "local" else 0
+                      for k in cfg.layer_kinds()], dtype=jnp.int32)
+
+
+# ------------------------------------------------------------ forward core
+def _attention(cfg: ModelConfig, x, lp, sin, cos, *, window, q_offset=0):
+    B, S, D = x.shape
+    Hq, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    h = rms_norm(x, lp["ln1"])
+    q = shard_hint((h @ lp["wq"]).reshape(B, S, Hq, hd),
+                   ("batch", None, "heads", None))
+    k = shard_hint((h @ lp["wk"]).reshape(B, S, KV, hd),
+                   ("batch", None, "kv_heads", None))
+    v = shard_hint((h @ lp["wv"]).reshape(B, S, KV, hd),
+                   ("batch", None, "kv_heads", None))
+    if cfg.qk_norm:
+        q = rms_norm(q, lp["q_norm"])
+        k = rms_norm(k, lp["k_norm"])
+    q = apply_rope(q, sin, cos)
+    k = apply_rope(k, sin, cos)
+    if cfg.attention_impl == "naive":
+        out = naive_attention(q, k, v, causal=True, window=window,
+                              softcap=cfg.attn_softcap, q_offset=q_offset)
+    elif (cfg.attention_impl == "pallas"
+          and cfg.layer_pattern == "all_global"):
+        # Pallas kernel path: needs a STATIC window, so it engages for
+        # uniform-window patterns (mixed local/global layers would need
+        # an unrolled-by-kind scan; they fall through to the XLA path)
+        from repro.kernels.flash_attention.ops import flash_attention_vjp
+
+        out = flash_attention_vjp(q, k, v, True, 0, cfg.attn_softcap,
+                                  cfg.attn_block_q, cfg.attn_block_k,
+                                  int(q_offset), None)
+    else:
+        out = flash_attention_xla(q, k, v, causal=True, window=window,
+                                  softcap=cfg.attn_softcap,
+                                  block_q=cfg.attn_block_q,
+                                  block_k=cfg.attn_block_k,
+                                  q_offset=q_offset)
+    out = shard_hint(out.reshape(B, S, Hq * hd), ("batch", None, "heads"))
+    return shard_hint(x + out @ lp["wo"], ("batch", None, None)), (k, v)
+
+
+def _ffn(cfg: ModelConfig, x, lp):
+    h = rms_norm(x, lp["ln2"])
+    if cfg.moe is not None:
+        ctx = mesh_context()
+        if cfg.moe.impl == "ep" and ctx is not None:
+            y, aux = moe_lib.moe_ffn_ep(
+                h, lp["router"], lp["we_gate"], lp["we_up"], lp["we_down"],
+                top_k=cfg.moe.top_k,
+                capacity_factor=cfg.moe.capacity_factor,
+                num_real=cfg.moe.num_experts, mesh=ctx.mesh,
+                dp_axes=ctx.dp_axes, ep_axis=ctx.ep_axis,
+                fsdp_axis=ctx.fsdp_axis)
+        else:
+            y, aux = moe_lib.moe_ffn(
+                h, lp["router"], lp["we_gate"], lp["we_up"], lp["we_down"],
+                top_k=cfg.moe.top_k,
+                capacity_factor=cfg.moe.capacity_factor,
+                num_real=cfg.moe.num_experts)
+    else:
+        y = shard_hint(jax.nn.silu(h @ lp["w_gate"]) * (h @ lp["w_up"]),
+                       ("batch", None, "mlp"))
+        y = y @ lp["w_down"]
+        aux = jnp.float32(0.0)
+    return shard_hint(x + y, ("batch", None, None)), aux
+
+
+def _layer_params(params, cfg):
+    """The stacked per-layer parameter subtree (scanned over dim 0)."""
+    keys = ["ln1", "ln2", "wq", "wk", "wv", "wo"]
+    if cfg.qk_norm:
+        keys += ["q_norm", "k_norm"]
+    if cfg.moe is not None:
+        keys += ["router", "we_gate", "we_up", "we_down"]
+    else:
+        keys += ["w_gate", "w_up", "w_down"]
+    return {k: params[k] for k in keys}
+
+
+def forward_hidden(params, cfg: ModelConfig, x, sin, cos, *, q_offset=0):
+    """Run all layers (scan); x [B, S, D] -> hidden [B, S, D], aux loss.
+
+    ``cfg.remat_group = G > 1`` checkpoints every G layers instead of
+    every layer: saved remat carries shrink G-fold (the knob that fits
+    kimi-k2; EXPERIMENTS.md §Perf P1.c) at the cost of re-running G
+    layers per group in the backward pass (which remat does anyway).
+    A non-dividing tail of L %% G layers runs as a second per-layer scan.
+    """
+    windows = _layer_windows(cfg)
+    lstack = _layer_params(params, cfg)
+
+    def body(carry, xs):
+        x, aux = carry
+        lp, window = xs
+        x, _ = _attention(cfg, x, lp, sin, cos, window=window,
+                          q_offset=q_offset)
+        x, a = _ffn(cfg, x, lp)
+        return (x, aux + a), None
+
+    G = max(1, cfg.remat_group)
+    L = cfg.num_layers
+    carry = (x, jnp.float32(0.0))
+    if G > 1 and L >= G:
+        n_groups = L // G
+        head = jax.tree.map(
+            lambda a: a[:n_groups * G].reshape(n_groups, G, *a.shape[1:]),
+            lstack)
+        head_w = windows[:n_groups * G].reshape(n_groups, G)
+
+        def group_body(carry, xs):
+            lp_g, win_g = xs
+            carry, _ = lax.scan(body, carry, (lp_g, win_g))
+            return carry, None
+
+        group_fn = jax.checkpoint(group_body) if cfg.remat else group_body
+        carry, _ = lax.scan(group_fn, carry, (head, head_w))
+        tail = jax.tree.map(lambda a: a[n_groups * G:], lstack)
+        tail_w = windows[n_groups * G:]
+        if L - n_groups * G:
+            body_fn = jax.checkpoint(body) if cfg.remat else body
+            carry, _ = lax.scan(body_fn, carry, (tail, tail_w))
+    else:
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        carry, _ = lax.scan(body_fn, carry, (lstack, windows))
+    x, aux = carry
+    return rms_norm(x, params["final_norm"]), aux
+
+
+def _angles(cfg: ModelConfig, positions):
+    if cfg.mrope:
+        return mrope_angles(positions, cfg.head_dim_, cfg.rope_theta,
+                            cfg.mrope_sections())
+    return rope_angles(positions, cfg.head_dim_, cfg.rope_theta)
+
+
+def _embed_in(params, cfg, batch):
+    if cfg.input_mode == "embeds":
+        x = batch["embeds"].astype(cfg.dtype)
+        positions = batch["positions"]
+    else:
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+        x = shard_hint(x, ("batch", None, None))
+        x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(x.dtype)
+        B, S = batch["tokens"].shape
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                     (B, S))
+    return x, positions
+
+
+def _unembed(params, cfg):
+    w = params.get("unembed", params["embed"])
+    return shard_hint(w.astype(jnp.bfloat16).T, (None, "vocab"))  # [D, V]
+
+
+# -------------------------------------------------------------------- loss
+def loss_fn(params, cfg: ModelConfig, batch):
+    x, positions = _embed_in(params, cfg, batch)
+    sin, cos = _angles(cfg, positions)
+    hidden, aux = forward_hidden(params, cfg, x, sin, cos)
+    total, count = chunked_softmax_xent(
+        hidden, _unembed(params, cfg), batch["targets"], batch["mask"],
+        chunk=cfg.vocab_chunk or min(512, hidden.shape[1]),
+        softcap=cfg.logit_softcap)
+    loss = total / jnp.maximum(count, 1.0) + 0.01 * aux
+    return loss, {"xent": total / jnp.maximum(count, 1.0), "aux": aux}
+
+
+# ---------------------------------------------------------------- serving
+def cache_specs(cfg: ModelConfig, B: int, Smax: int):
+    KV, hd, L = cfg.num_kv_heads, cfg.head_dim_, cfg.num_layers
+    sds = jax.ShapeDtypeStruct
+    return {
+        "k": sds((L, B, Smax, KV, hd), cfg.dtype),
+        "v": sds((L, B, Smax, KV, hd), cfg.dtype),
+        "length": sds((), "int32"),
+    }
+
+
+def cache_axes(cfg: ModelConfig):
+    return {"k": ("layers", "batch", "kv_seq", "kv_heads", None),
+            "v": ("layers", "batch", "kv_seq", "kv_heads", None),
+            "length": ()}
+
+
+def prefill(params, cfg: ModelConfig, batch, Smax: int | None = None):
+    """Full-sequence forward; returns (last-token logits, filled cache)."""
+    x, positions = _embed_in(params, cfg, batch)
+    B, S, _ = x.shape
+    Smax = Smax or S
+    sin, cos = _angles(cfg, positions)
+    windows = _layer_windows(cfg)
+    lstack = _layer_params(params, cfg)
+
+    def body(x, xs):
+        lp, window = xs
+        x, (k, v) = _attention(cfg, x, lp, sin, cos, window=window)
+        x, _ = _ffn(cfg, x, lp)
+        return x, (k, v)
+
+    x, (ks, vs) = lax.scan(body, x, (lstack, windows))
+    hidden = rms_norm(x, params["final_norm"])
+    logits = hidden[:, -1].astype(F32) @ _unembed(params, cfg).astype(F32)
+    if cfg.logit_softcap:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    pad = Smax - S
+    cache = {
+        "k": jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+        "v": jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+        "length": jnp.int32(S),
+    }
+    return logits, cache
+
+
+def decode_step(params, cfg: ModelConfig, cache, batch):
+    """One token in, one token's logits out; cache updated in place.
+
+    batch: token [B, 1] (or embeds [B, 1, D]), pos [B].
+
+    ``cache["length"]`` may be a scalar (all sequences in step, the
+    dry-run/serve_step shape) or a PER-SLOT [B] vector (the
+    continuous-batching engine: sequences admitted at different times
+    decode together, each writing its own cache position)."""
+    if cfg.input_mode == "embeds" and "embeds" in batch:
+        x = batch["embeds"].astype(cfg.dtype)
+        positions = batch["positions"]
+    else:
+        x = jnp.take(params["embed"], batch["token"], axis=0)
+        x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(x.dtype)
+        positions = batch["pos"][:, None]
+    if cfg.mrope and positions.ndim == 2:
+        positions = jnp.stack([positions] * 3, axis=-1)
+    sin, cos = _angles(cfg, positions)
+    windows = _layer_windows(cfg)
+    lstack = _layer_params(params, cfg)
+    length = cache["length"]
+    B = x.shape[0]
+    Hq, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+
+    def body(x, xs):
+        lp, window, kc, vc = xs
+        h = rms_norm(x, lp["ln1"])
+        q = shard_hint((h @ lp["wq"]).reshape(B, 1, Hq, hd),
+                       ("batch", None, "heads", None))
+        k = shard_hint((h @ lp["wk"]).reshape(B, 1, KV, hd),
+                       ("batch", None, "kv_heads", None))
+        v = shard_hint((h @ lp["wv"]).reshape(B, 1, KV, hd),
+                       ("batch", None, "kv_heads", None))
+        if cfg.qk_norm:
+            q = rms_norm(q, lp["q_norm"])
+            k = rms_norm(k, lp["k_norm"])
+        q = apply_rope(q, sin, cos)
+        k = apply_rope(k, sin, cos)
+        if length.ndim == 0:
+            kc = lax.dynamic_update_slice_in_dim(kc, k, length, axis=1)
+            vc = lax.dynamic_update_slice_in_dim(vc, v, length, axis=1)
+        else:                            # per-slot lengths [B]
+            rows = jnp.arange(B)
+            kc = kc.at[rows, length].set(k[:, 0])
+            vc = vc.at[rows, length].set(v[:, 0])
+        out = decode_attention(q, kc, vc, length + 1, window=window,
+                               softcap=cfg.attn_softcap)
+        x = x + out.reshape(B, 1, Hq * hd) @ lp["wo"]
+        x, _ = _ffn(cfg, x, lp)
+        return x, (kc, vc)
+
+    x, (ks, vs) = lax.scan(body, x, (lstack, windows, cache["k"], cache["v"]))
+    hidden = rms_norm(x, params["final_norm"])
+    logits = hidden[:, -1].astype(F32) @ _unembed(params, cfg).astype(F32)
+    if cfg.logit_softcap:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    new_cache = {"k": ks, "v": vs, "length": length + 1}
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------- assembly
+def build(cfg: ModelConfig) -> ModelApi:
+    return ModelApi(
+        cfg=cfg,
+        param_specs=param_specs(cfg),
+        loss=lambda params, batch: loss_fn(params, cfg, batch),
+        prefill=lambda params, batch, Smax=None: prefill(params, cfg, batch,
+                                                         Smax),
+        decode_step=lambda params, cache, batch: decode_step(params, cfg,
+                                                             cache, batch),
+        input_specs=functools.partial(token_batch_specs, cfg),
+        cache_specs=functools.partial(cache_specs, cfg),
+        cache_axes=functools.partial(cache_axes, cfg),
+    )

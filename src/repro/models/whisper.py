@@ -1,0 +1,241 @@
+"""Whisper-style encoder-decoder (audio backbone; conv frontend is a STUB —
+``input_specs`` provides precomputed frame embeddings, per the assignment).
+
+Encoder: bidirectional attention over frames.  Decoder: causal self-attention
++ cross-attention over encoder states.  Serving: the cross K/V are computed
+once at prefill and reused every decode step (the enc-dec analogue of the
+paper's 'save the section once, stream the vectors').
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.distrib.context import shard_hint
+from repro.models.api import ModelApi, ParamSpec, token_batch_specs
+from repro.models.layers import (
+    apply_rope, chunked_softmax_xent, decode_attention, flash_attention_xla,
+    rms_norm, rope_angles,
+)
+
+F32 = jnp.float32
+
+
+def param_specs(cfg: ModelConfig) -> dict[str, ParamSpec]:
+    D, Hq, KV, hd, F, V = (cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                           cfg.head_dim_, cfg.d_ff, cfg.vocab)
+    Le, Ld = cfg.encoder_layers, cfg.num_layers
+    dt = cfg.dtype
+    p = {
+        "embed": ParamSpec((V, D), ("vocab", "embed"), dt),
+        "final_norm": ParamSpec((D,), ("embed",), dt, init="zeros"),
+        "enc_norm": ParamSpec((D,), ("embed",), dt, init="zeros"),
+    }
+    for pre, L in (("enc", Le), ("dec", Ld)):
+        p[f"{pre}/ln1"] = ParamSpec((L, D), ("layers", "embed"), dt, init="zeros")
+        p[f"{pre}/ln2"] = ParamSpec((L, D), ("layers", "embed"), dt, init="zeros")
+        p[f"{pre}/wq"] = ParamSpec((L, D, Hq * hd), ("layers", "embed", "heads"), dt)
+        p[f"{pre}/wk"] = ParamSpec((L, D, KV * hd), ("layers", "embed", "kv_heads"), dt)
+        p[f"{pre}/wv"] = ParamSpec((L, D, KV * hd), ("layers", "embed", "kv_heads"), dt)
+        p[f"{pre}/wo"] = ParamSpec((L, Hq * hd, D), ("layers", "heads", "embed"), dt)
+        p[f"{pre}/w_gate"] = ParamSpec((L, D, F), ("layers", "embed", "mlp"), dt)
+        p[f"{pre}/w_up"] = ParamSpec((L, D, F), ("layers", "embed", "mlp"), dt)
+        p[f"{pre}/w_down"] = ParamSpec((L, F, D), ("layers", "mlp", "embed"), dt)
+    # decoder cross-attention
+    p["dec/ln_x"] = ParamSpec((Ld, D), ("layers", "embed"), dt, init="zeros")
+    p["dec/xq"] = ParamSpec((Ld, D, Hq * hd), ("layers", "embed", "heads"), dt)
+    p["dec/xk"] = ParamSpec((Ld, D, KV * hd), ("layers", "embed", "kv_heads"), dt)
+    p["dec/xv"] = ParamSpec((Ld, D, KV * hd), ("layers", "embed", "kv_heads"), dt)
+    p["dec/xo"] = ParamSpec((Ld, Hq * hd, D), ("layers", "heads", "embed"), dt)
+    return p
+
+
+def _stack(params, pre):
+    return {k.split("/", 1)[1]: v for k, v in params.items()
+            if k.startswith(pre + "/")}
+
+
+def _sa(cfg, x, lp, sin, cos, *, causal):
+    B, S, D = x.shape
+    Hq, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    h = rms_norm(x, lp["ln1"])
+    q = apply_rope(shard_hint((h @ lp["wq"]).reshape(B, S, Hq, hd),
+                              ("batch", None, "heads", None)), sin, cos)
+    k = apply_rope(shard_hint((h @ lp["wk"]).reshape(B, S, KV, hd),
+                              ("batch", None, "kv_heads", None)), sin, cos)
+    v = shard_hint((h @ lp["wv"]).reshape(B, S, KV, hd),
+                   ("batch", None, "kv_heads", None))
+    out = flash_attention_xla(q, k, v, causal=causal,
+                              block_q=cfg.attn_block_q,
+                              block_k=cfg.attn_block_k)
+    out = shard_hint(out.reshape(B, S, Hq * hd), ("batch", None, "heads"))
+    return shard_hint(x + out @ lp["wo"], ("batch", None, None)), (k, v)
+
+
+def _mlp(x, lp):
+    h = rms_norm(x, lp["ln2"])
+    y = shard_hint(jax.nn.silu(h @ lp["w_gate"]) * (h @ lp["w_up"]),
+                   ("batch", None, "mlp"))
+    return shard_hint(x + y @ lp["w_down"], ("batch", None, None))
+
+
+def _cross(cfg, x, lp, enc_k, enc_v):
+    """Cross-attention; enc_k/enc_v [B, Se, KV, hd] precomputed."""
+    B, S, D = x.shape
+    Hq, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    h = rms_norm(x, lp["ln_x"])
+    q = shard_hint((h @ lp["xq"]).reshape(B, S, Hq, hd),
+                   ("batch", None, "heads", None))
+    out = flash_attention_xla(q, enc_k, enc_v, causal=False,
+                              block_q=cfg.attn_block_q,
+                              block_k=cfg.attn_block_k)
+    out = shard_hint(out.reshape(B, S, Hq * hd), ("batch", None, "heads"))
+    return shard_hint(x + out @ lp["xo"], ("batch", None, None))
+
+
+def encode(params, cfg: ModelConfig, frames):
+    """frames [B, Se, D] (stub conv output) -> encoder states [B, Se, D]."""
+    B, Se, D = frames.shape
+    pos = jnp.broadcast_to(jnp.arange(Se, dtype=jnp.int32)[None], (B, Se))
+    sin, cos = rope_angles(pos, cfg.head_dim_, cfg.rope_theta)
+    stack = _stack(params, "enc")
+
+    def body(x, lp):
+        x, _ = _sa(cfg, x, lp, sin, cos, causal=False)
+        x = _mlp(x, lp)
+        return x, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = lax.scan(body_fn, frames.astype(cfg.dtype), stack)
+    return rms_norm(x, params["enc_norm"])
+
+
+def _decoder_hidden(params, cfg, tokens, enc_states):
+    B, S = tokens.shape
+    x = shard_hint(jnp.take(params["embed"], tokens, axis=0),
+                   ("batch", None, None))
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    sin, cos = rope_angles(pos, cfg.head_dim_, cfg.rope_theta)
+    KV, hd = cfg.num_kv_heads, cfg.head_dim_
+    stack = _stack(params, "dec")
+
+    def body(x, lp):
+        x, (k, v) = _sa(cfg, x, lp, sin, cos, causal=True)
+        ek = shard_hint((enc_states @ lp["xk"]).reshape(B, -1, KV, hd),
+                        ("batch", None, "kv_heads", None))
+        ev = shard_hint((enc_states @ lp["xv"]).reshape(B, -1, KV, hd),
+                        ("batch", None, "kv_heads", None))
+        x = _cross(cfg, x, lp, ek, ev)
+        x = _mlp(x, lp)
+        return x, (k, v, ek, ev)
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, caches = lax.scan(body_fn, x, stack)
+    return rms_norm(x, params["final_norm"]), caches
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    enc = encode(params, cfg, batch["enc_frames"])
+    hidden, _ = _decoder_hidden(params, cfg, batch["tokens"], enc)
+    total, count = chunked_softmax_xent(
+        hidden, shard_hint(params["embed"].astype(jnp.bfloat16).T,
+                           (None, "vocab")),
+        batch["targets"], batch["mask"],
+        chunk=cfg.vocab_chunk or min(512, hidden.shape[1]))
+    return total / jnp.maximum(count, 1.0), {}
+
+
+# ----------------------------------------------------------------- serving
+def cache_specs(cfg: ModelConfig, B: int, Smax: int):
+    KV, hd, Ld = cfg.num_kv_heads, cfg.head_dim_, cfg.num_layers
+    Se = cfg.encoder_seq
+    sds = jax.ShapeDtypeStruct
+    return {
+        "k": sds((Ld, B, Smax, KV, hd), cfg.dtype),
+        "v": sds((Ld, B, Smax, KV, hd), cfg.dtype),
+        "xk": sds((Ld, B, Se, KV, hd), cfg.dtype),   # cross K/V: computed once
+        "xv": sds((Ld, B, Se, KV, hd), cfg.dtype),
+        "length": sds((), "int32"),
+    }
+
+
+def cache_axes(cfg: ModelConfig):
+    return {"k": ("layers", "batch", "kv_seq", "kv_heads", None),
+            "v": ("layers", "batch", "kv_seq", "kv_heads", None),
+            "xk": ("layers", "batch", None, "kv_heads", None),
+            "xv": ("layers", "batch", None, "kv_heads", None),
+            "length": ()}
+
+
+def prefill(params, cfg: ModelConfig, batch, Smax: int | None = None):
+    enc = encode(params, cfg, batch["enc_frames"])
+    tokens = batch.get("tokens")
+    if tokens is None:
+        tokens = jnp.zeros((enc.shape[0], 1), jnp.int32)   # BOS priming
+    B, S = tokens.shape
+    Smax = Smax or S
+    hidden, (ks, vs, xks, xvs) = _decoder_hidden(params, cfg, tokens, enc)
+    logits = hidden[:, -1].astype(F32) @ params["embed"].astype(F32).T
+    pad = Smax - S
+    cache = {
+        "k": jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+        "v": jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+        "xk": xks, "xv": xvs, "length": jnp.int32(S),
+    }
+    return logits, cache
+
+
+def decode_step(params, cfg: ModelConfig, cache, batch):
+    B = batch["token"].shape[0]
+    Hq, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    x = jnp.take(params["embed"], batch["token"], axis=0)
+    sin, cos = rope_angles(batch["pos"][:, None], cfg.head_dim_,
+                           cfg.rope_theta)
+    length = cache["length"]
+    stack = _stack(params, "dec")
+
+    def body(x, xs):
+        lp, kc, vc, ek, ev = xs
+        h = rms_norm(x, lp["ln1"])
+        q = apply_rope((h @ lp["wq"]).reshape(B, 1, Hq, hd), sin, cos)
+        k1 = apply_rope((h @ lp["wk"]).reshape(B, 1, KV, hd), sin, cos)
+        v1 = (h @ lp["wv"]).reshape(B, 1, KV, hd)
+        kc = lax.dynamic_update_slice_in_dim(kc, k1, length, axis=1)
+        vc = lax.dynamic_update_slice_in_dim(vc, v1, length, axis=1)
+        out = decode_attention(q, kc, vc, length + 1)
+        x = x + out.reshape(B, 1, Hq * hd) @ lp["wo"]
+        # cross attention against the fixed encoder K/V
+        hx = rms_norm(x, lp["ln_x"])
+        qx = (hx @ lp["xq"]).reshape(B, 1, Hq, hd)
+        outx = decode_attention(qx, ek, ev, jnp.int32(ek.shape[1]))
+        x = x + outx.reshape(B, 1, Hq * hd) @ lp["xo"]
+        x = _mlp(x, lp)
+        return x, (kc, vc)
+
+    x, (ks, vs) = lax.scan(body, x, (stack, cache["k"], cache["v"],
+                                     cache["xk"], cache["xv"]))
+    hidden = rms_norm(x, params["final_norm"])
+    logits = hidden[:, -1].astype(F32) @ params["embed"].astype(F32).T
+    new_cache = {"k": ks, "v": vs, "xk": cache["xk"], "xv": cache["xv"],
+                 "length": length + 1}
+    return logits, new_cache
+
+
+def build(cfg: ModelConfig) -> ModelApi:
+    return ModelApi(
+        cfg=cfg,
+        param_specs=param_specs(cfg),
+        loss=lambda params, batch: loss_fn(params, cfg, batch),
+        prefill=lambda params, batch, Smax=None: prefill(params, cfg, batch,
+                                                         Smax),
+        decode_step=lambda params, cache, batch: decode_step(params, cfg,
+                                                             cache, batch),
+        input_specs=functools.partial(token_batch_specs, cfg),
+        cache_specs=functools.partial(cache_specs, cfg),
+        cache_axes=functools.partial(cache_axes, cfg),
+    )

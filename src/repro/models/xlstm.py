@@ -1,0 +1,294 @@
+"""xLSTM family: alternating mLSTM (matrix-memory, parallelizable) and sLSTM
+(scalar-memory, sequential) blocks — attention-free, O(1) decode state, so
+this family runs the ``long_500k`` cell.
+
+mLSTM is implemented in *chunkwise* form (gated linear attention): within a
+chunk the quadratic form with cumulative decays, across chunks a recurrent
+matrix state [H, dk, dv] — sub-quadratic in S.  sLSTM uses the exponential-
+gating stabilised recurrence of the paper (m_t running max) with a per-head
+block-diagonal recurrent matrix, scanned over time.
+
+Simplifications vs. arXiv:2405.04517 (recorded in DESIGN.md): no causal conv
+frontend inside the blocks; mLSTM normaliser is the decayed key sum without
+the secondary max-stabiliser.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.distrib.context import shard_hint
+from repro.models.api import ModelApi, ParamSpec, token_batch_specs
+from repro.models.layers import chunked_softmax_xent, rms_norm
+
+F32 = jnp.float32
+
+
+def _counts(cfg):
+    kinds = cfg.layer_kinds()
+    return sum(k == "mlstm" for k in kinds), sum(k == "slstm" for k in kinds)
+
+
+def param_specs(cfg: ModelConfig) -> dict[str, ParamSpec]:
+    D, H, V = cfg.d_model, cfg.num_heads, cfg.vocab
+    Di = 2 * D                       # mLSTM inner width (up-projection x2)
+    hd = Di // H
+    n_m, n_s = _counts(cfg)
+    dt = cfg.dtype
+    p = {
+        "embed": ParamSpec((V, D), ("vocab", "embed"), dt),
+        "final_norm": ParamSpec((D,), ("embed",), dt, init="zeros"),
+        # mLSTM blocks
+        "m/ln": ParamSpec((n_m, D), ("layers", "embed"), dt, init="zeros"),
+        "m/w_up": ParamSpec((n_m, D, Di), ("layers", "embed", "mlp"), dt),
+        "m/w_gate": ParamSpec((n_m, D, Di), ("layers", "embed", "mlp"), dt),
+        "m/wq": ParamSpec((n_m, Di, Di), ("layers", "mlp", "heads"), dt),
+        "m/wk": ParamSpec((n_m, Di, Di), ("layers", "mlp", "heads"), dt),
+        "m/wv": ParamSpec((n_m, Di, Di), ("layers", "mlp", "heads"), dt),
+        "m/w_if": ParamSpec((n_m, Di, 2 * H), ("layers", "mlp", None), dt),
+        "m/w_down": ParamSpec((n_m, Di, D), ("layers", "mlp", "embed"), dt),
+        # sLSTM blocks (4 gates: i, f, z, o), per-head recurrent matrices
+        "s/ln": ParamSpec((n_s, D), ("layers", "embed"), dt, init="zeros"),
+        "s/w": ParamSpec((n_s, D, 4 * D), ("layers", "embed", "mlp"), dt),
+        "s/r": ParamSpec((n_s, H, D // H, 4 * (D // H)),
+                         ("layers", "heads", None, None), dt),
+        "s/b": ParamSpec((n_s, 4 * D), ("layers", "mlp"), dt, init="zeros"),
+        "s/w_out": ParamSpec((n_s, D, D), ("layers", "mlp", "embed"), dt),
+    }
+    return p
+
+
+# ------------------------------------------------------------------- mLSTM
+def _mlstm_chunk(q, k, v, log_f, log_i, state, norm, chunk: int):
+    """Chunkwise gated linear attention.
+
+    q,k,v [B,S,H,hd]; log_f/log_i [B,S,H]; state [B,H,hd,hd]; norm [B,H,hd].
+    Returns (y [B,S,H,hd], state', norm')."""
+    B, S, H, hd = q.shape
+    n = -(-S // chunk)
+    pad = n * chunk - S
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        log_f = jnp.pad(log_f, ((0, 0), (0, pad), (0, 0)))
+        log_i = jnp.pad(log_i, ((0, 0), (0, pad), (0, 0)), constant_values=-30.0)
+
+    def to_chunks(x):
+        return x.reshape(B, n, chunk, *x.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc = to_chunks(q), to_chunks(k), to_chunks(v)
+    fc, ic = to_chunks(log_f), to_chunks(log_i)
+
+    def body(carry, xs):
+        S_st, n_st = carry                      # [B,H,hd,hd], [B,H,hd]
+        qi, ki, vi, fi, ii = xs                 # [B,c,H,*]
+        csum = jnp.cumsum(fi, axis=1)           # within-chunk decay prefix
+        total = csum[:, -1]                     # [B,H]
+        # intra-chunk quadratic term with relative decay
+        # D[t,s] = exp(csum_t - csum_s + log_i_s) for s <= t
+        rel = csum[:, :, None] - csum[:, None] + ii[:, None]
+        tri = jnp.tril(jnp.ones((qi.shape[1], qi.shape[1]), bool))
+        rel = jnp.where(tri[None, :, :, None], rel, -jnp.inf)
+        gate = jnp.exp(rel)                     # [B,t,s,H]
+        scores = jnp.einsum("bthd,bshd->btsh", qi.astype(F32),
+                            ki.astype(F32)) / math.sqrt(qi.shape[-1])
+        intra = jnp.einsum("btsh,btsh,bshd->bthd", scores, gate,
+                           vi.astype(F32))
+        # inter-chunk: contribution of the carried state
+        qdec = qi.astype(F32) * jnp.exp(csum)[..., None] / math.sqrt(qi.shape[-1])
+        inter = jnp.einsum("bthd,bhde->bthe", qdec, S_st)
+        # normaliser n_t = decayed sum of gated keys; denom = max(|q.n_t|, 1)
+        norm_inter = jnp.einsum("bthd,bhd->bth", qdec, n_st)
+        norm_intra = jnp.einsum("btsh,btsh->bth", scores, gate)
+        denom = jnp.maximum(jnp.abs(norm_inter + norm_intra), 1.0)
+        y = (intra + inter) / denom[..., None]
+        # state update: S' = exp(total) S + sum_s exp(total - csum_s + i_s) k v^T
+        w = jnp.exp(total[:, None] - csum + ii)          # [B,c,H]
+        S_new = jnp.exp(total)[..., None, None] * S_st + jnp.einsum(
+            "bshd,bsh,bshe->bhde", ki.astype(F32), w, vi.astype(F32))
+        n_new = jnp.exp(total)[..., None] * n_st + jnp.einsum(
+            "bshd,bsh->bhd", ki.astype(F32), w)
+        return (S_new, n_new), y
+
+    init = (state.astype(F32), norm.astype(F32))
+    (S_st, n_st), ys = lax.scan(body, init, (qc, kc, vc, fc, ic))
+    y = ys.swapaxes(0, 1).reshape(B, n * chunk, H, hd)[:, :S]
+    return y, S_st, n_st
+
+
+def _mlstm_block(x, lp, *, state=None, norm=None, chunk=128, decode=False):
+    B, S, D = x.shape
+    h = rms_norm(x, lp["ln"])
+    u = shard_hint(h @ lp["w_up"], ("batch", None, "mlp"))
+    gate = shard_hint(jax.nn.silu(h @ lp["w_gate"]), ("batch", None, "mlp"))
+    Di = u.shape[-1]
+    H = lp["w_if"].shape[-1] // 2
+    hd = Di // H
+    q = (u @ lp["wq"]).reshape(B, S, H, hd)
+    k = (u @ lp["wk"]).reshape(B, S, H, hd)
+    v = (u @ lp["wv"]).reshape(B, S, H, hd)
+    gif = (u.astype(F32) @ lp["w_if"].astype(F32)).reshape(B, S, H, 2)
+    log_i = -jax.nn.softplus(-gif[..., 0])      # log sigmoid
+    log_f = -jax.nn.softplus(-gif[..., 1])
+    if state is None:
+        state = jnp.zeros((B, H, hd, hd), F32)
+        norm = jnp.zeros((B, H, hd), F32)
+    y, S_st, n_st = _mlstm_chunk(q, k, v, log_f, log_i, state, norm,
+                                 chunk=1 if decode else chunk)
+    y = shard_hint(y.reshape(B, S, Di).astype(x.dtype), ("batch", None, "mlp")) * gate
+    return shard_hint(x + y @ lp["w_down"], ("batch", None, None)), (S_st, n_st)
+
+
+# ------------------------------------------------------------------- sLSTM
+def _slstm_block(x, lp, *, state=None):
+    """Sequential sLSTM: states (c, n, h, m) each [B, D]."""
+    B, S, D = x.shape
+    H = lp["r"].shape[0]                        # r [H, hd, 4*hd]
+    hd = D // H
+    xin = rms_norm(x, lp["ln"])
+    pre = shard_hint(xin @ lp["w"] + lp["b"], ("batch", None, "mlp"))  # [B,S,4D]
+    if state is None:
+        state = (jnp.zeros((B, D), F32), jnp.full((B, D), 1e-6, F32),
+                 jnp.zeros((B, D), F32), jnp.full((B, D), -10.0, F32))
+
+    r = lp["r"].astype(F32)                     # [H, hd, 4hd]
+
+    def step(carry, pre_t):
+        c, n, h, m = carry
+        rec = jnp.einsum("bhd,hde->bhe", h.reshape(B, H, hd), r).reshape(B, 4 * D)
+        z_all = pre_t.astype(F32) + rec
+        zi, zf, zz, zo = jnp.split(z_all, 4, axis=-1)
+        m_new = jnp.maximum(zf + m, zi)
+        i = jnp.exp(zi - m_new)
+        f = jnp.exp(zf + m - m_new)
+        c_new = f * c + i * jnp.tanh(zz)
+        n_new = f * n + i
+        h_new = jax.nn.sigmoid(zo) * c_new / jnp.maximum(n_new, 1e-6)
+        return (c_new, n_new, h_new, m_new), h_new
+
+    carry, hs = lax.scan(step, state, pre.swapaxes(0, 1))
+    y = hs.swapaxes(0, 1).astype(x.dtype)       # [B,S,D]
+    return x + y @ lp["w_out"], carry
+
+
+def _stacks(params, prefix):
+    return {k.split("/", 1)[1]: v for k, v in params.items()
+            if k.startswith(prefix + "/")}
+
+
+# ------------------------------------------------------------------- train
+def forward_hidden(params, cfg: ModelConfig, x):
+    n_m, n_s = _counts(cfg)
+    assert n_m == n_s, "xlstm_alt pattern pairs mLSTM with sLSTM"
+    m_stack, s_stack = _stacks(params, "m"), _stacks(params, "s")
+
+    def group(x, xs):
+        mp, sp = xs
+        x, _ = _mlstm_block(x, mp)
+        x, _ = _slstm_block(x, sp)
+        return x, None
+
+    body = jax.checkpoint(group) if cfg.remat else group
+    x, _ = lax.scan(body, x, (m_stack, s_stack))
+    return rms_norm(x, params["final_norm"])
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    x = shard_hint(jnp.take(params["embed"], batch["tokens"], axis=0),
+                   ("batch", None, None))
+    hidden = forward_hidden(params, cfg, x)
+    total, count = chunked_softmax_xent(
+        hidden, shard_hint(params["embed"].astype(jnp.bfloat16).T,
+                           (None, "vocab")),
+        batch["targets"], batch["mask"],
+        chunk=cfg.vocab_chunk or min(512, x.shape[1]))
+    return total / jnp.maximum(count, 1.0), {}
+
+
+# ----------------------------------------------------------------- serving
+def cache_specs(cfg: ModelConfig, B: int, Smax: int):
+    D, H = cfg.d_model, cfg.num_heads
+    Di = 2 * D
+    hd = Di // H
+    n_m, n_s = _counts(cfg)
+    sds = jax.ShapeDtypeStruct
+    return {
+        "m_state": sds((n_m, B, H, hd, hd), "float32"),
+        "m_norm": sds((n_m, B, H, hd), "float32"),
+        "s_c": sds((n_s, B, D), "float32"),
+        "s_n": sds((n_s, B, D), "float32"),
+        "s_h": sds((n_s, B, D), "float32"),
+        "s_m": sds((n_s, B, D), "float32"),
+        "length": sds((), "int32"),
+    }
+
+
+def cache_axes(cfg: ModelConfig):
+    return {"m_state": ("layers", "batch", "heads", None, None),
+            "m_norm": ("layers", "batch", "heads", None),
+            "s_c": ("layers", "batch", "embed"),
+            "s_n": ("layers", "batch", "embed"),
+            "s_h": ("layers", "batch", "embed"),
+            "s_m": ("layers", "batch", "embed"),
+            "length": ()}
+
+
+def _run(params, cfg, tokens, cache, decode):
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    m_stack, s_stack = _stacks(params, "m"), _stacks(params, "s")
+    n_m, _ = _counts(cfg)
+    ms, mn, sc, sn, sh, sm = [], [], [], [], [], []
+    for i in range(n_m):
+        mp = jax.tree.map(lambda a: a[i], m_stack)
+        sp = jax.tree.map(lambda a: a[i], s_stack)
+        mstate = (cache["m_state"][i], cache["m_norm"][i]) if cache else (None, None)
+        x, (S_st, n_st) = _mlstm_block(x, mp, state=mstate[0], norm=mstate[1],
+                                       decode=decode)
+        sstate = ((cache["s_c"][i], cache["s_n"][i], cache["s_h"][i],
+                   cache["s_m"][i]) if cache else None)
+        x, (c, n, h, m) = _slstm_block(x, sp, state=sstate)
+        ms.append(S_st)
+        mn.append(n_st)
+        sc.append(c)
+        sn.append(n)
+        sh.append(h)
+        sm.append(m)
+    hidden = rms_norm(x, params["final_norm"])
+    logits = hidden[:, -1].astype(F32) @ params["embed"].astype(F32).T
+    length = (cache["length"] if cache else 0) + S
+    new_cache = {"m_state": jnp.stack(ms), "m_norm": jnp.stack(mn),
+                 "s_c": jnp.stack(sc), "s_n": jnp.stack(sn),
+                 "s_h": jnp.stack(sh), "s_m": jnp.stack(sm),
+                 "length": jnp.int32(length)}
+    return logits, new_cache
+
+
+def prefill(params, cfg: ModelConfig, batch, Smax: int | None = None):
+    return _run(params, cfg, batch["tokens"], None, decode=False)
+
+
+def decode_step(params, cfg: ModelConfig, cache, batch):
+    return _run(params, cfg, batch["token"], cache, decode=True)
+
+
+def build(cfg: ModelConfig) -> ModelApi:
+    return ModelApi(
+        cfg=cfg,
+        param_specs=param_specs(cfg),
+        loss=lambda params, batch: loss_fn(params, cfg, batch),
+        prefill=lambda params, batch, Smax=None: prefill(params, cfg, batch,
+                                                         Smax),
+        decode_step=lambda params, cache, batch: decode_step(params, cfg,
+                                                             cache, batch),
+        input_specs=functools.partial(token_batch_specs, cfg),
+        cache_specs=functools.partial(cache_specs, cfg),
+        cache_axes=functools.partial(cache_axes, cfg),
+    )

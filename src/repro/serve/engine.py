@@ -1,0 +1,126 @@
+"""Continuous-batching serving engine (transformer / KV-cache families).
+
+Requests arrive at any time; the engine keeps a fixed pool of B cache
+slots.  A free slot admits the next queued request by running a B=1
+prefill and splicing its K/V into the batched cache at the slot index;
+all active slots then decode TOGETHER, each writing its own cache
+position (per-slot length vectors — see transformer.decode_step).
+Finished sequences (max_new reached or EOS) free their slot immediately,
+so long and short requests share a batch without head-of-line blocking —
+the standard continuous-batching discipline (vLLM-style, at slot
+granularity rather than page granularity).
+
+Everything is jit-compiled once per (prompt-bucket) shape: prefill_one,
+splice, and decode_all.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # [P] int32
+    max_new: int
+    eos_id: int | None = None
+    generated: list = dataclasses.field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        if len(self.generated) >= self.max_new:
+            return True
+        return (self.eos_id is not None and self.generated
+                and self.generated[-1] == self.eos_id)
+
+
+class ServeEngine:
+    def __init__(self, api, params, *, slots: int, max_seq: int,
+                 prompt_bucket: int = 32):
+        self.api = api
+        self.cfg: ModelConfig = api.cfg
+        self.params = params
+        self.B = slots
+        self.max_seq = max_seq
+        self.bucket = prompt_bucket
+        self.queue: list[Request] = []
+        self.active: list[Request | None] = [None] * slots
+        self.finished: list[Request] = []
+        self._steps = 0
+
+        # batched cache with PER-SLOT lengths
+        c_specs = api.cache_specs(slots, max_seq)
+        self.cache = {k: jnp.zeros(s.shape, s.dtype)
+                      for k, s in c_specs.items()}
+        self.cache["length"] = jnp.zeros((slots,), jnp.int32)
+
+        self._prefill_one = jax.jit(
+            lambda p, b: api.prefill(p, b, max_seq))
+        self._decode = jax.jit(api.decode_step)
+
+        def splice(cache, one, slot, plen):
+            out = dict(cache)
+            for key in ("k", "v"):
+                # one[key] [L, 1, S, KV, hd] -> slot row of [L, B, S, KV, hd]
+                out[key] = cache[key].at[:, slot].set(one[key][:, 0])
+            out["length"] = cache["length"].at[slot].set(plen)
+            return out
+
+        self._splice = jax.jit(splice, donate_argnums=(0,))
+
+    # ----------------------------------------------------------------- api
+    def submit(self, rid: int, prompt: np.ndarray, max_new: int,
+               eos_id: int | None = None):
+        self.queue.append(Request(rid, np.asarray(prompt, np.int32),
+                                  max_new, eos_id))
+
+    def _admit(self):
+        for slot in range(self.B):
+            if self.active[slot] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            P = len(req.prompt)
+            logits, one = self._prefill_one(
+                self.params, {"tokens": jnp.asarray(req.prompt[None, :])})
+            self.cache = self._splice(self.cache, one, slot, P)
+            first = int(jnp.argmax(logits[0]))
+            req.generated.append(first)
+            self.active[slot] = req
+
+    def step(self) -> int:
+        """Admit + one batched decode step; returns #active sequences."""
+        self._admit()
+        act = [i for i, r in enumerate(self.active) if r is not None]
+        if not act:
+            return 0
+        tok = np.zeros((self.B, 1), np.int32)
+        pos = np.asarray(self.cache["length"])
+        for i in act:
+            tok[i, 0] = self.active[i].generated[-1]
+        logits, self.cache = self._decode(
+            self.params, self.cache,
+            {"token": jnp.asarray(tok), "pos": jnp.asarray(pos, jnp.int32)})
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        self._steps += 1
+        for i in act:
+            req = self.active[i]
+            req.generated.append(int(nxt[i]))
+            if req.done or int(self.cache["length"][i]) + 1 >= self.max_seq:
+                req.generated = req.generated[:req.max_new]
+                self.finished.append(req)
+                self.active[i] = None          # slot freed immediately
+        return len(act)
+
+    def run(self) -> dict[int, list[int]]:
+        """Drain queue + active slots; returns rid -> generated tokens."""
+        while self.queue or any(r is not None for r in self.active):
+            self.step()
+        return {r.rid: r.generated[:r.max_new] for r in self.finished}

@@ -1,0 +1,11 @@
+from repro.train.optim import AdamW, Adafactor, make_optimizer
+from repro.train.schedule import warmup_cosine
+from repro.train.data import SyntheticLM
+from repro.train.step import (
+    TrainStep,
+    init_train_state,
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+    train_state_specs,
+)

@@ -1,0 +1,19 @@
+"""Learning-rate schedules (pure functions of the step scalar)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, base_lr: float = 3e-4, warmup: int = 100,
+                  total: int = 10_000, min_frac: float = 0.1):
+    step = step.astype(jnp.float32)
+    warm = base_lr * jnp.minimum(step / max(warmup, 1), 1.0)
+    prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < warmup, warm, base_lr * cos)
+
+
+def constant(step, *, base_lr: float = 3e-4):
+    import jax.numpy as jnp
+    return jnp.full((), base_lr, jnp.float32)

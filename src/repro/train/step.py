@@ -1,0 +1,260 @@
+"""Step builders: jit-compiled, sharding-annotated train / prefill /
+decode steps for any (architecture x shape x mesh) cell.
+
+The train state is a FLAT dict (checkpoint-friendly: every leaf is one
+named array — the paper's 'function space' analogue):
+
+    state = {"params/<name>": ..., "opt/<slot>/<name>": ..., "step": i32}
+
+All shardings derive from the per-arch RuleTable; the builders return a
+:class:`TrainStep` whose ``.lower(...)`` is what the multi-pod dry-run
+compiles and whose ``__call__`` is what the training loop runs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distrib.context import MeshContext, use_mesh_context
+from repro.distrib.rules import (
+    RuleTable,
+    batch_shardings,
+    cache_shardings,
+    param_shardings,
+)
+from repro.models.api import ModelApi, ParamSpec
+from repro.train.optim import AdamW
+
+F32 = jnp.float32
+
+
+# --------------------------------------------------------------- state spec
+def train_state_specs(api: ModelApi, optimizer) -> dict[str, ParamSpec]:
+    """Flat ParamSpec table for the full train state (params + opt)."""
+    out = {f"params/{n}": s for n, s in api.param_specs.items()}
+    for k, s in optimizer.state_specs(api.param_specs).items():
+        out[f"opt/{k}"] = s
+    out["step"] = ParamSpec((), (), "int32", init="zeros")
+    return out
+
+
+def init_train_state(api: ModelApi, optimizer, key) -> dict[str, jax.Array]:
+    params = api.init(key)
+    state = {f"params/{n}": v for n, v in params.items()}
+    for k, v in optimizer.init(api.param_specs).items():
+        state[f"opt/{k}"] = v
+    state["step"] = jnp.zeros((), jnp.int32)
+    return state
+
+
+def state_shardings(mesh, rules: RuleTable, specs: dict[str, ParamSpec]):
+    return {name: rules.sharding_for(mesh, spec.axes, spec.shape)
+            for name, spec in specs.items()}
+
+
+def _split_state(state):
+    params = {k[len("params/"):]: v for k, v in state.items()
+              if k.startswith("params/")}
+    opt = {k[len("opt/"):]: v for k, v in state.items()
+           if k.startswith("opt/")}
+    return params, opt, state["step"]
+
+
+def _join_state(params, opt, step):
+    out = {f"params/{n}": v for n, v in params.items()}
+    out.update({f"opt/{k}": v for k, v in opt.items()})
+    out["step"] = step
+    return out
+
+
+# ------------------------------------------------------------------- train
+@dataclasses.dataclass
+class TrainStep:
+    fn: Callable                       # jitted (state, batch) -> (state, metrics)
+    state_specs: dict[str, ParamSpec]
+    state_shardings: dict[str, NamedSharding]
+    batch_shardings: dict[str, NamedSharding]
+    abstract_state: dict[str, jax.ShapeDtypeStruct]
+    abstract_batch: dict[str, jax.ShapeDtypeStruct]
+    ctx: MeshContext
+
+    def __call__(self, state, batch):
+        return self.fn(state, batch)
+
+    def lower(self):
+        """Abstract lowering for the dry-run — no allocation."""
+        return self.fn.lower(self.abstract_state, self.abstract_batch)
+
+
+def _abstract(specs_or_sds, shardings):
+    out = {}
+    for k, s in specs_or_sds.items():
+        shape = tuple(s.shape)
+        dtype = s.dtype
+        out[k] = jax.ShapeDtypeStruct(shape, dtype, sharding=shardings[k])
+    return out
+
+
+def make_train_step(api: ModelApi, optimizer, schedule, mesh,
+                    rules: RuleTable, shape: ShapeConfig,
+                    donate: bool = True, microbatches: int = 1) -> TrainStep:
+    """``microbatches > 1`` runs gradient accumulation: the global batch
+    is split on its leading dim and scanned, accumulating mean grads in
+    the GRAD DTYPE (bf16 for bf16 params — the 1T-param regime cannot
+    afford an fp32 accumulator; recorded in DESIGN.md).  Remat carries
+    shrink by the same factor — the knob that makes kimi-k2 fit."""
+    fsdp_entry = rules.table.get("embed")
+    fsdp_axes = fsdp_entry if fsdp_entry else None
+    ctx = MeshContext(mesh=mesh, dp_axes=rules.batch_axes,
+                      ep_axis="model",
+                      fsdp_axis=fsdp_axes,
+                      rules=rules)
+    specs = train_state_specs(api, optimizer)
+    st_sh = state_shardings(mesh, rules, specs)
+    b_specs = api.input_specs(shape)
+    b_sh = batch_shardings(mesh, rules, b_specs)
+    A = microbatches
+    assert shape.global_batch % max(A, 1) == 0
+
+    def step_fn(state, batch):
+        with use_mesh_context(ctx):
+            params, opt, step = _split_state(state)
+
+            def loss_fn(p, b):
+                loss, metrics = api.loss(p, b)
+                return loss.astype(F32), metrics
+
+            if A <= 1:
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, batch)
+            else:
+                mb = jax.tree.map(
+                    lambda x: x.reshape(A, x.shape[0] // A, *x.shape[1:]),
+                    batch)
+
+                def accum(carry, b):
+                    g_acc, l_acc = carry
+                    (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                        params, b)
+                    g_acc = jax.tree.map(
+                        lambda a, gi: a + (gi / A).astype(a.dtype),
+                        g_acc, g)
+                    return (g_acc, l_acc + l / A), None
+
+                g0 = jax.tree.map(jnp.zeros_like, params)
+                (grads, loss), _ = jax.lax.scan(accum,
+                                                (g0, jnp.float32(0.0)), mb)
+                metrics = {}
+            lr = schedule(step)
+            new_params, new_opt = optimizer.update(params, grads, opt, lr,
+                                                   step)
+            new_state = _join_state(new_params, new_opt, step + 1)
+            gnorm = jnp.sqrt(sum(jnp.sum(g.astype(F32) ** 2)
+                                 for g in grads.values()))
+            out_metrics = {"loss": loss, "lr": lr, "grad_norm": gnorm}
+            out_metrics.update({k: v for k, v in metrics.items()})
+            return new_state, out_metrics
+
+    fn = jax.jit(
+        step_fn,
+        in_shardings=(st_sh, b_sh),
+        out_shardings=(st_sh, None),
+        donate_argnums=(0,) if donate else (),
+    )
+    return TrainStep(
+        fn=fn, state_specs=specs, state_shardings=st_sh,
+        batch_shardings=b_sh,
+        abstract_state=_abstract(specs, st_sh),
+        abstract_batch=_abstract(b_specs, b_sh),
+        ctx=ctx,
+    )
+
+
+# ------------------------------------------------------------------ serving
+@dataclasses.dataclass
+class ServeStep:
+    fn: Callable
+    abstract_args: tuple
+    ctx: MeshContext
+
+    def __call__(self, *args):
+        return self.fn(*args)
+
+    def lower(self):
+        return self.fn.lower(*self.abstract_args)
+
+
+def make_prefill_step(api: ModelApi, mesh, rules: RuleTable,
+                      shape: ShapeConfig, cache_len: int | None = None
+                      ) -> ServeStep:
+    """prefill(params, batch) -> (logits, cache) with sharded cache."""
+    fsdp_entry = rules.table.get("embed")
+    ctx = MeshContext(mesh=mesh, dp_axes=rules.batch_axes, ep_axis="model",
+                      fsdp_axis=fsdp_entry if fsdp_entry else None,
+                      rules=rules)
+    p_sh = param_shardings(mesh, rules, api.param_specs)
+    b_specs = api.input_specs(shape)
+    b_sh = batch_shardings(mesh, rules, b_specs)
+    Smax = cache_len or shape.seq_len
+    c_specs = api.cache_specs(shape.global_batch, Smax)
+    c_sh = cache_shardings(mesh, rules, c_specs, api.cache_axes())
+
+    def fn(params, batch):
+        with use_mesh_context(ctx):
+            return api.prefill(params, batch, Smax)
+
+    jfn = jax.jit(fn, in_shardings=(p_sh, b_sh),
+                  out_shardings=(NamedSharding(mesh, P()), c_sh))
+    abstract_params = {
+        n: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=p_sh[n])
+        for n, s in api.param_specs.items()}
+    return ServeStep(fn=jfn,
+                     abstract_args=(abstract_params, _abstract(b_specs, b_sh)),
+                     ctx=ctx)
+
+
+def make_decode_step(api: ModelApi, mesh, rules: RuleTable,
+                     shape: ShapeConfig) -> ServeStep:
+    """decode(params, cache, batch) -> (logits, cache), cache donated.
+
+    For decode shapes the cache holds ``shape.seq_len`` KV entries and
+    the batch is a single new token per sequence — the assignment's
+    'one new token with a KV cache of seq_len'.
+    """
+    fsdp_entry = rules.table.get("embed")
+    ctx = MeshContext(mesh=mesh, dp_axes=rules.batch_axes, ep_axis="model",
+                      fsdp_axis=fsdp_entry if fsdp_entry else None,
+                      rules=rules)
+    p_sh = param_shardings(mesh, rules, api.param_specs)
+    B, Smax = shape.global_batch, shape.seq_len
+    c_specs = api.cache_specs(B, Smax)
+    c_sh = cache_shardings(mesh, rules, c_specs, api.cache_axes())
+    b_specs = {"token": jax.ShapeDtypeStruct((B, 1), "int32"),
+               "pos": jax.ShapeDtypeStruct((B,), "int32")}
+    b_sh = batch_shardings(mesh, rules, b_specs)
+
+    def fn(params, cache, batch):
+        with use_mesh_context(ctx):
+            return api.decode_step(params, cache, batch)
+
+    jfn = jax.jit(fn, in_shardings=(p_sh, c_sh, b_sh),
+                  out_shardings=(NamedSharding(mesh, P()), c_sh),
+                  donate_argnums=(1,))
+    abstract_params = {
+        n: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=p_sh[n])
+        for n, s in api.param_specs.items()}
+    abstract_cache = {k: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                              sharding=c_sh[k])
+                      for k, s in c_specs.items()}
+    return ServeStep(
+        fn=jfn,
+        abstract_args=(abstract_params, abstract_cache,
+                       _abstract(b_specs, b_sh)),
+        ctx=ctx)

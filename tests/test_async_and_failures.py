@@ -1,0 +1,149 @@
+"""Fault-tolerance contract: async writes, atomic commit, restart recovery.
+
+The failure model: a job dies at an arbitrary point during checkpointing.
+The invariant (paper §1: 'long-running applications can sometimes be
+unexpectedly terminated'): the last *committed* step is always loadable, on
+any process count.
+"""
+
+import numpy as np
+
+from repro.core.async_io import AsyncCheckpointer
+from repro.core.chunk_layout import ArraySpec, StateLayout
+from repro.core.comm import Comm
+from repro.core.store import DatasetStore
+from repro.core.tensor_ckpt import (
+    TensorCheckpoint, balanced_chunk_partition, shards_from_arrays,
+)
+from repro.distrib.sharding import canonical_regions
+
+LAYOUT = StateLayout((
+    ArraySpec("w", (20, 8), "float64", (5, 8)),
+    ArraySpec("mu", (20, 8), "float64", (5, 8)),
+))
+
+
+def _state(seed):
+    rng = np.random.default_rng(seed)
+    return {"w": rng.normal(size=(20, 8)), "mu": rng.normal(size=(20, 8))}
+
+
+def _shards(arrays, N):
+    return shards_from_arrays(LAYOUT, arrays,
+                              balanced_chunk_partition(LAYOUT, N))
+
+
+def _check(ck, step, ref, M):
+    plan = [{s.name: canonical_regions(s.shape, M)[m] for s in LAYOUT.arrays}
+            for m in range(M)]
+    out = ck.load_state(plan, Comm(M), step=step)
+    got_w = np.concatenate([a for m in range(M) for a in out[m]["w"]])
+    np.testing.assert_array_equal(got_w, ref["w"])
+
+
+def test_async_checkpoint_roundtrip(tmp_path):
+    store = DatasetStore(str(tmp_path), "w")
+    ck = TensorCheckpoint(store)
+    ck.save_layout(LAYOUT)
+    ac = AsyncCheckpointer(ck, Comm(2))
+    states = {s: _state(s) for s in (0, 1, 2)}
+    for s in (0, 1, 2):
+        ac.submit(_shards(states[s], 2), step=s)
+    ac.wait()
+    assert ck.steps() == [0, 1, 2]
+    for s in (0, 1, 2):
+        _check(ck, s, states[s], M=3)
+
+
+def test_snapshot_isolation(tmp_path):
+    """Mutating the live state after submit must not corrupt the write."""
+    store = DatasetStore(str(tmp_path), "w")
+    ck = TensorCheckpoint(store)
+    ck.save_layout(LAYOUT)
+    ac = AsyncCheckpointer(ck, Comm(2))
+    arrays = _state(7)
+    shards = _shards(arrays, 2)
+    ac.submit(shards, step=0)
+    for st in shards:                       # trainer keeps mutating
+        for sh in st.values():
+            for a in sh.data.values():
+                a[...] = -1.0
+    ac.wait()
+    _check(ck, 0, arrays, M=2)
+
+
+def test_injected_failure_keeps_last_committed(tmp_path):
+    """Crash mid-write of step 1: step 0 stays the loadable restart point;
+    step 1 is invisible (never committed)."""
+    store = DatasetStore(str(tmp_path), "w")
+    ck = TensorCheckpoint(store)
+    ck.save_layout(LAYOUT)
+    ac = AsyncCheckpointer(ck, Comm(2))
+    s0, s1, s2 = _state(0), _state(1), _state(2)
+    ac.submit(_shards(s0, 2), step=0)
+    ac.wait()
+    ac.fail_on_step = 1
+    ac.submit(_shards(s1, 2), step=1)
+    try:
+        ac.wait()
+        raised = False
+    except RuntimeError:
+        raised = True
+    assert raised
+    assert ck.steps() == [0]
+    _check(ck, 0, s0, M=4)
+    # recovery: elastic restart writes the next step on a DIFFERENT rank count
+    ac2 = AsyncCheckpointer(ck, Comm(3))
+    ac2.submit(_shards(s2, 3), step=2)
+    ac2.wait()
+    assert ck.steps() == [0, 2]
+    _check(ck, 2, s2, M=1)
+
+
+def test_partial_write_files_invisible(tmp_path):
+    """A vec file written without commit is simply not listed in steps() —
+    the atomic-commit protocol (store.json replaced via os.replace)."""
+    store = DatasetStore(str(tmp_path), "w")
+    ck = TensorCheckpoint(store)
+    ck.save_layout(LAYOUT)
+    ck.save_state(_shards(_state(0), 2), Comm(2), step=0)
+    meta = store.get_attrs("meta")
+    # simulate: files of step 1 exist but commit never happened
+    store.create("w/e0/s1/vec", 160, dtype="float64")
+    assert ck.steps() == [0]
+
+
+def test_corruption_detected_by_crc(tmp_path):
+    """Flip bytes in a saved vec file: verify_step must catch it."""
+    import os
+
+    import numpy as np
+
+    from repro.core.chunk_layout import ArraySpec, StateLayout
+    from repro.core.comm import Comm
+    from repro.core.store import DatasetStore
+    from repro.core.tensor_ckpt import (
+        TensorCheckpoint,
+        balanced_chunk_partition,
+        shards_from_arrays,
+    )
+
+    layout = StateLayout((ArraySpec("w", (64,), "float64", (16,)),))
+    arrays = {"w": np.arange(64, dtype=np.float64)}
+    per_rank = shards_from_arrays(layout, arrays,
+                                  balanced_chunk_partition(layout, 2))
+    store = DatasetStore(str(tmp_path), "w")
+    ck = TensorCheckpoint(store)
+    ck.save_layout(layout)
+    comm = Comm(2)
+    ck.save_state(per_rank, comm, 0)
+    assert ck.verify_step(comm, 0)
+
+    # corrupt 8 bytes in the middle of the vec file (simulated bitrot)
+    vec_files = [f for f in os.listdir(tmp_path) if "vec" in f]
+    assert vec_files
+    p = tmp_path / vec_files[0]
+    raw = bytearray(p.read_bytes())
+    raw[100:108] = b"\xde\xad\xbe\xef\xde\xad\xbe\xef"
+    p.write_bytes(bytes(raw))
+    assert not ck.verify_step(comm, 0), "crc must detect bitrot"

@@ -1,0 +1,19 @@
+"""End-to-end mini dry-run (subprocess: needs its own device count)."""
+
+import os
+import pathlib
+import subprocess
+import sys
+
+
+def test_mini_dryrun_compiles_and_analyzes():
+    repo = pathlib.Path(__file__).resolve().parents[1]
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = str(repo / "src")
+    proc = subprocess.run(
+        [sys.executable, str(repo / "tests" / "helpers" / "dryrun_mini.py")],
+        env=env, capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, (
+        f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}")
+    assert "dryrun_mini OK" in proc.stdout

@@ -1,0 +1,60 @@
+"""JAX-facing checkpoint contract (single process; multi-rank behaviour is
+covered by the numpy-level tests)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.jax_io import layout_from_jax, load_jax, save_jax, tree_names
+from repro.core.store import DatasetStore
+from repro.core.tensor_ckpt import TensorCheckpoint
+
+
+def _tree():
+    k = jax.random.PRNGKey(0)
+    return {
+        "params": {
+            "embed": jax.random.normal(k, (32, 8), dtype=jnp.float32),
+            "layers": [jnp.arange(12, dtype=jnp.int32).reshape(3, 4),
+                       jnp.ones((5,), dtype=jnp.bfloat16)],
+        },
+        "step": jnp.array(7, dtype=jnp.int32),
+    }
+
+
+def test_tree_names_stable():
+    names, leaves, _ = tree_names(_tree())
+    assert names == ["params/embed", "params/layers/0", "params/layers/1",
+                     "step"]
+
+
+def test_jax_roundtrip(tmp_path):
+    tree = _tree()
+    store = DatasetStore(str(tmp_path), "w")
+    ck = TensorCheckpoint(store)
+    ck.save_layout(layout_from_jax(tree))
+    save_jax(ck, tree, step=0)
+    target = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=a.sharding),
+        tree)
+    loaded = jax.tree.map(np.asarray, load_jax(ck, target, step=0))
+    ref = jax.tree.map(np.asarray, tree)
+    for a, b in zip(jax.tree.leaves(loaded), jax.tree.leaves(ref)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_jax_bf16_bytes_exact(tmp_path):
+    tree = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(16, 4)),
+                             dtype=jnp.bfloat16)}
+    store = DatasetStore(str(tmp_path), "w")
+    ck = TensorCheckpoint(store)
+    ck.save_layout(layout_from_jax(tree))
+    save_jax(ck, tree, step=3)
+    target = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=a.sharding),
+        tree)
+    loaded = load_jax(ck, target, step=3)
+    assert loaded["w"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(loaded["w"], dtype=np.float32),
+                                  np.asarray(tree["w"], dtype=np.float32))

@@ -1,0 +1,24 @@
+"""EP (shard_map) MoE vs dense-dispatch oracle, on 8 simulated devices.
+
+Runs in a subprocess because --xla_force_host_platform_device_count must
+be set before the first JAX initialisation (the main pytest process keeps
+the 1-device view the smoke tests rely on).
+"""
+
+import os
+import pathlib
+import subprocess
+import sys
+
+
+def test_moe_ep_matches_dense_oracle():
+    repo = pathlib.Path(__file__).resolve().parents[1]
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = str(repo / "src")
+    proc = subprocess.run(
+        [sys.executable, str(repo / "tests" / "helpers" / "moe_ep_check.py")],
+        env=env, capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, (
+        f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}")
+    assert "moe_ep_check OK" in proc.stdout

@@ -1,0 +1,223 @@
+"""Sharding-rule engine + HLO-analysis unit tests (incl. property tests
+on the invariants the dry-run relies on)."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.launch.hlo_analysis import (
+    Metrics,
+    analyze,
+    dot_flops,
+    parse_module,
+    shape_bytes,
+)
+
+
+# ------------------------------------------------------------------ rules
+def _mesh16():
+    # metadata-only stand-in: spec_for only reads mesh.shape
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+
+    return FakeMesh()
+
+
+def test_rules_divisibility_fallback():
+    from repro.distrib.rules import rules_for
+
+    rules = rules_for("whisper-base")
+    mesh = _mesh16()
+    # vocab 51865 is odd: replicated by the whisper override
+    spec = rules.spec_for(("vocab", "embed"), (51865, 512), mesh)
+    assert spec[0] is None
+    # kv_heads 8 does not divide 16: graceful fallback to replication
+    rules2 = rules_for("qwen3-1.7b")
+    spec2 = rules2.spec_for(("layers", "batch", "kv_seq", "kv_heads", None),
+                            (28, 128, 32768, 8, 128), mesh)
+    assert spec2[2] == "model" and (len(spec2) < 4 or spec2[3] is None)
+
+
+def test_rules_no_axis_used_twice():
+    from repro.distrib.rules import rules_for
+
+    rules = rules_for("qwen3-4b")
+    mesh = _mesh16()
+    spec = rules.spec_for(("heads", "kv_heads", "mlp"), (4096, 1024, 9728),
+                          mesh)
+    used = [s for s in spec if s is not None]
+    assert used == ["model"], spec      # first dim wins; rest dropped
+
+
+def test_batch_axes_multi_pod():
+    from repro.distrib.rules import rules_for
+
+    rules = rules_for("smollm-135m", multi_pod=True)
+    assert rules.batch_axes == ("pod", "data")
+    p = rules.batch_spec(2)
+    assert p[0] == ("pod", "data")
+
+
+# ----------------------------------------------------------- hlo analysis
+def test_shape_bytes():
+    assert shape_bytes("bf16[4,8]{1,0}") == 64
+    assert shape_bytes("f32[2,3]") == 24
+    assert shape_bytes("(s32[], bf16[8,32]{1,0})") == 4 + 512
+    assert shape_bytes("pred[7]") == 7
+    assert shape_bytes("token[]") == 0
+
+
+def test_dot_flops():
+    # [16,512] @ [512,128] -> 2*16*128*512
+    assert dot_flops("f32[16,128]{1,0}", "f32[16,512]{1,0}", [1]) \
+        == 2 * 16 * 128 * 512
+
+
+HLO_SAMPLE = """\
+HloModule test
+
+%body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,8]{1,0} get-tuple-element(%p), index=1
+  %d = f32[8,8]{1,0} dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,8]{1,0} all-reduce(%d), replica_groups={}, to_apply=%add
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,8]{1,0}) tuple(%ni, %ar)
+}
+
+%cond (p: (s32[], f32[8,8])) -> pred[] {
+  %p = (s32[], f32[8,8]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(5)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main (x: f32[8,8]) -> f32[8,8] {
+  %x = f32[8,8]{1,0} parameter(0)
+  %zero = s32[] constant(0)
+  %t0 = (s32[], f32[8,8]{1,0}) tuple(%zero, %x)
+  %w = (s32[], f32[8,8]{1,0}) while(%t0), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"5"}}
+  ROOT %out = f32[8,8]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_analyze_trip_count_multiplication():
+    res = analyze(HLO_SAMPLE)
+    # dot: 2*8*8*8 = 1024 flops per trip, x5 trips
+    assert res["flops"] == 5 * 1024
+    # all-reduce operand: 8*8*4 = 256 bytes per trip, x5
+    assert res["coll_bytes"] == 5 * 256
+    assert res["coll_by_kind"] == {"all-reduce": 5 * 256.0}
+    assert res["unknown_trips"] == 0
+
+
+def test_analyze_unknown_trip_flagged():
+    txt = HLO_SAMPLE.replace(
+        ', backend_config={"known_trip_count":{"n":"5"}}', "")
+    res = analyze(txt)
+    assert res["unknown_trips"] == 1
+    assert res["flops"] == 1024          # counted once, flagged
+
+
+def test_parse_module_structure():
+    comps = parse_module(HLO_SAMPLE)
+    assert set(comps) == {"body", "cond", "add", "main"}
+    assert comps["main"].is_entry
+    body_ops = {o.opcode for o in comps["body"].ops}
+    assert "dot" in body_ops and "all-reduce" in body_ops
+
+
+# ------------------------------------------------- partition property tests
+@settings(max_examples=50, deadline=None)
+@given(total=st.integers(0, 10_000), n=st.integers(1, 64))
+def test_partition_formula_properties(total, n):
+    """Paper eq. 2.6: contiguous, near-equal (differ by at most 1), and
+    a bijection onto {0..total-1}."""
+    from repro.core.star_forest import partition_sizes, partition_starts
+
+    sizes = partition_sizes(total, n)
+    starts = partition_starts(total, n)
+    assert sizes.sum() == total
+    assert int(sizes.max()) - int(sizes.min()) <= 1
+    assert starts[0] == 0 and starts[-1] == total
+    assert (np.diff(starts) == sizes).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(total=st.integers(1, 2000), n=st.integers(1, 16),
+       m=st.integers(1, 16), seed=st.integers(0, 2**31 - 1))
+def test_location_roundtrip_property(total, n, m, seed):
+    """Global numbers scattered over N ranks resolve correctly through
+    the canonical-partition directory queried from M ranks."""
+    from repro.core.comm import Comm
+    from repro.core.star_forest import StarForest
+
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(total)
+    bounds = np.sort(rng.integers(0, total + 1, size=n - 1)) \
+        if n > 1 else np.array([], dtype=int)
+    holders = np.split(perm, bounds)
+    sf = StarForest.from_global_numbers([h.astype(np.int64)
+                                         for h in holders], total, m)
+    # broadcasting the canonical identity through the SF returns each
+    # leaf its own global number
+    from repro.core.star_forest import partition_starts
+
+    starts = partition_starts(total, m)
+    ident = [np.arange(starts[r], starts[r + 1], dtype=np.int64)
+             for r in range(m)]
+    got = sf.bcast(ident)
+    for h, g in zip(holders, got):
+        np.testing.assert_array_equal(np.asarray(g), h)
+
+
+# ---------------------------------------------- write-balance (stragglers)
+@settings(max_examples=30, deadline=None)
+@given(nranks=st.integers(1, 12), arrays=st.integers(1, 4),
+       seed=st.integers(0, 2**31 - 1))
+def test_balanced_chunk_partition_is_contiguous_and_balanced(nranks, arrays,
+                                                             seed):
+    """Write-side straggler mitigation: chunk->rank assignment follows
+    global entity order (contiguous writes) and is element-balanced to
+    within one chunk's size."""
+    from repro.core.chunk_layout import ArraySpec, StateLayout
+    from repro.core.tensor_ckpt import balanced_chunk_partition
+
+    rng = np.random.default_rng(seed)
+    specs = []
+    for i in range(arrays):
+        n = int(rng.integers(8, 200))
+        c = int(rng.integers(1, 32))
+        specs.append(ArraySpec(f"a{i}", (n,), "float32", (c,)))
+    layout = StateLayout(tuple(specs))
+    own = balanced_chunk_partition(layout, nranks)
+
+    # every chunk owned exactly once
+    for spec in specs:
+        seen = np.concatenate([own[r].get(spec.name, np.empty(0, np.int64))
+                               for r in range(nranks)])
+        assert sorted(seen.tolist()) == list(range(spec.grid.num_chunks))
+
+    # byte balance: no rank exceeds the fair share by more than the
+    # largest chunk
+    loads = np.zeros(nranks)
+    max_chunk = 0
+    for spec in specs:
+        for r in range(nranks):
+            for o in own[r].get(spec.name, []):
+                sz = spec.grid.chunk_box(int(o)).size
+                loads[r] += sz
+                max_chunk = max(max_chunk, sz)
+    fair = loads.sum() / nranks
+    assert loads.max() <= fair + max_chunk

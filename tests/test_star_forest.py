@@ -1,0 +1,175 @@
+"""Unit + property tests for the star-forest algebra (PetscSF analogue).
+
+These test the exact objects of the paper: the canonical partition map
+(eq. 2.6/2.15), SFs built from LocG-style global-number arrays, PetscSFBcast /
+PetscSFReduce / PetscSFCompose analogues, and inversion of bijective SFs
+(eq. 2.17's ``(χ_{I_P}^{L_P})^{-1}``).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.comm import Comm
+from repro.core.star_forest import (
+    StarForest,
+    partition_rank_of,
+    partition_sizes,
+    partition_starts,
+)
+
+
+# ------------------------------------------------------------------ partition
+@given(total=st.integers(0, 10_000), nranks=st.integers(1, 64))
+def test_partition_sizes_properties(total, nranks):
+    sizes = partition_sizes(total, nranks)
+    assert len(sizes) == nranks
+    assert sizes.sum() == total
+    assert sizes.max() - sizes.min() <= 1
+    starts = partition_starts(total, nranks)
+    assert starts[0] == 0 and starts[-1] == total
+    np.testing.assert_array_equal(np.diff(starts), sizes)
+
+
+@given(total=st.integers(1, 2000), nranks=st.integers(1, 16), seed=st.integers(0, 2**31))
+def test_partition_rank_of_consistent(total, nranks, seed):
+    rng = np.random.default_rng(seed)
+    idx = rng.integers(0, total, size=32)
+    ranks = partition_rank_of(idx, total, nranks)
+    starts = partition_starts(total, nranks)
+    for g, r in zip(idx, ranks):
+        assert starts[r] <= g < starts[r + 1]
+
+
+# ------------------------------------------------------------------- bcast
+def test_bcast_simple():
+    # 2 roots on rank0, 1 root on rank1; leaves scattered over 2 ranks.
+    sf = StarForest.from_edges(
+        nranks=2,
+        nroots=[2, 1],
+        nleaves=[3, 2],
+        edges=[
+            ((0, 0), (0, 1)),   # leaf (0,0) <- root (0,1)
+            ((0, 2), (1, 0)),   # leaf (0,2) <- root (1,0)
+            ((1, 0), (0, 0)),   # leaf (1,0) <- root (0,0)
+            ((1, 1), (1, 0)),   # leaf (1,1) <- root (1,0)
+        ],
+    )
+    roots = [np.array([10.0, 11.0]), np.array([20.0])]
+    leaves = sf.bcast(roots)
+    np.testing.assert_array_equal(leaves[0], [11.0, 0.0, 20.0])  # (0,1) unattached
+    np.testing.assert_array_equal(leaves[1], [10.0, 20.0])
+
+
+def test_bcast_multidim_payload():
+    sf = StarForest.from_partition(6, nranks_root=2, nranks_leaf=3)
+    roots = [np.arange(6, dtype=np.float64).reshape(3, 2) * (r + 1) for r, n in
+             [(0, 3), (1, 3)]]
+    leaves = sf.bcast(roots)
+    flat = np.concatenate(leaves, axis=0)
+    expect = np.concatenate(roots, axis=0)
+    np.testing.assert_array_equal(flat, expect)
+
+
+# ------------------------------------------------------------------- reduce
+def test_reduce_sum_and_replace():
+    sf = StarForest.from_edges(
+        nranks=2, nroots=[2, 0], nleaves=[2, 2],
+        edges=[((0, 0), (0, 0)), ((0, 1), (0, 0)), ((1, 0), (0, 1)), ((1, 1), (0, 1))],
+    )
+    leaves = [np.array([1.0, 2.0]), np.array([3.0, 4.0])]
+    roots = sf.reduce(leaves, "sum", [np.zeros(2), np.zeros(0)])
+    np.testing.assert_array_equal(roots[0], [3.0, 7.0])
+    roots = sf.reduce(leaves, "max", [np.full(2, -np.inf), np.zeros(0)])
+    np.testing.assert_array_equal(roots[0], [2.0, 4.0])
+
+
+# ------------------------------------------ canonical partition SF properties
+@given(total=st.integers(0, 500), n=st.integers(1, 8), m=st.integers(1, 8))
+@settings(max_examples=60)
+def test_partition_sf_bcast_is_repartition(total, n, m):
+    """Bcast through χ-partition SF == repartitioning a global array."""
+    sf = StarForest.from_partition(total, nranks_root=n, nranks_leaf=m)
+    glob = np.arange(total, dtype=np.int64) * 7 + 3
+    root_sizes = partition_sizes(total, n)
+    starts = np.concatenate([[0], np.cumsum(root_sizes)])
+    roots = [glob[starts[r]:starts[r + 1]] for r in range(n)]
+    leaves = sf.bcast(roots)
+    np.testing.assert_array_equal(np.concatenate(leaves) if m else [], glob)
+
+
+@given(total=st.integers(1, 300), n=st.integers(1, 6), m=st.integers(1, 6))
+@settings(max_examples=60)
+def test_partition_sf_invert_roundtrip(total, n, m):
+    sf = StarForest.from_partition(total, nranks_root=n, nranks_leaf=m)
+    inv = sf.invert()
+    assert inv.nroots == sf.nleaves
+    # invert . bcast == identity repartition in the other direction
+    glob = np.arange(total, dtype=np.int64)
+    leaf_sizes = partition_sizes(total, m)
+    lstarts = np.concatenate([[0], np.cumsum(leaf_sizes)])
+    leaf_data = [glob[lstarts[r]:lstarts[r + 1]] for r in range(m)]
+    root_back = inv.bcast(leaf_data)
+    np.testing.assert_array_equal(np.concatenate(root_back), glob)
+
+
+# ------------------------------------------------------------------ compose
+@given(
+    total=st.integers(1, 200),
+    a=st.integers(1, 5), b=st.integers(1, 5), c=st.integers(1, 5),
+    seed=st.integers(0, 2**31),
+)
+@settings(max_examples=60)
+def test_compose_matches_pointwise(total, a, b, c, seed):
+    """compose(χ_{A→B}, χ_{B→C}) delivers the same values as two bcasts."""
+    rng = np.random.default_rng(seed)
+    # SF1: leaves on a ranks -> canonical roots on b ranks (from global numbers)
+    leaf_sizes = partition_sizes(total, a)
+    perm = rng.permutation(total)
+    lstarts = np.concatenate([[0], np.cumsum(leaf_sizes)])
+    leaf_globals = [perm[lstarts[r]:lstarts[r + 1]] for r in range(a)]
+    sf1 = StarForest.from_global_numbers(leaf_globals, total, b)
+    # SF2: canonical b-partition -> canonical c-partition
+    sf2 = StarForest.from_partition(total, nranks_root=c, nranks_leaf=b)
+    comp = sf1.compose(sf2)
+    data_c_sizes = partition_sizes(total, c)
+    cstarts = np.concatenate([[0], np.cumsum(data_c_sizes)])
+    glob = rng.normal(size=total)
+    roots_c = [glob[cstarts[r]:cstarts[r + 1]] for r in range(c)]
+    via_comp = comp.bcast(roots_c)
+    via_two = sf1.bcast(sf2.bcast(roots_c))
+    for x, y in zip(via_comp, via_two):
+        np.testing.assert_array_equal(x, y)
+    # and the values are the right global entries
+    for r in range(a):
+        np.testing.assert_array_equal(via_comp[r], glob[leaf_globals[r]])
+
+
+def test_compose_space_mismatch_raises():
+    sf1 = StarForest.from_partition(10, nranks_root=2, nranks_leaf=2)
+    sf2 = StarForest.from_partition(11, nranks_root=2, nranks_leaf=2)
+    with pytest.raises(AssertionError):
+        sf1.compose(sf2)
+
+
+# --------------------------------------------------------------------- comm
+def test_comm_alltoallv_and_accounting():
+    comm = Comm(3)
+    send = [[np.full(s + d, s * 10 + d, dtype=np.int32) for d in range(3)]
+            for s in range(3)]
+    recv = comm.alltoallv(send)
+    for d in range(3):
+        for s in range(3):
+            np.testing.assert_array_equal(recv[d][s], send[s][d])
+    total = sum(send[s][d].nbytes for s in range(3) for d in range(3) if s != d)
+    assert comm.stats.bytes_moved == total
+    assert comm.stats.rounds == 1
+
+
+def test_comm_exscan_and_allreduce():
+    comm = Comm(4)
+    assert comm.exscan_sum([5, 0, 7, 1]) == [0, 5, 5, 12]
+    out = comm.allreduce_sum([np.array([1.0]), np.array([2.0]),
+                              np.array([3.0]), np.array([4.0])])
+    for o in out:
+        np.testing.assert_array_equal(o, [10.0])

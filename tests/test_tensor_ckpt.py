@@ -1,0 +1,247 @@
+"""Tensor-state N-to-M checkpoint tests (the training-framework adaptation).
+
+Same protocol as the FE tests: save a state from N ranks under one
+distribution, load it on M ranks under a completely different one (regions
+need not align with saved chunks), and require bitwise equality.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.chunk_layout import (
+    ArraySpec, Box, ChunkGrid, StateLayout, row_major_ids,
+)
+from repro.core.comm import Comm
+from repro.core.resharder import reshard
+from repro.core.star_forest import partition_starts
+from repro.core.store import DatasetStore
+from repro.core.tensor_ckpt import (
+    TensorCheckpoint, balanced_chunk_partition, shards_from_arrays,
+)
+from repro.distrib.sharding import (
+    canonical_regions, device_box, is_owner, rank_regions,
+)
+
+
+def _layout():
+    return StateLayout((
+        ArraySpec("w/embed", (50, 16), "float64", (16, 16)),
+        ArraySpec("w/dense", (24, 24), "float32", (8, 12)),
+        ArraySpec("opt/mu", (7,), "float64", (3,)),
+        ArraySpec("step", (1,), "int64", (1,)),
+    ))
+
+
+def _arrays(layout, seed=0):
+    rng = np.random.default_rng(seed)
+    out = {}
+    for spec in layout.arrays:
+        if np.issubdtype(np.dtype(spec.dtype), np.integer):
+            out[spec.name] = rng.integers(0, 1000, spec.shape).astype(spec.dtype)
+        else:
+            out[spec.name] = rng.normal(size=spec.shape).astype(spec.dtype)
+    return out
+
+
+def _roundtrip(tmp, layout, arrays, N, M, plan):
+    own = balanced_chunk_partition(layout, N)
+    per_rank = shards_from_arrays(layout, arrays, own)
+    store = DatasetStore(str(tmp), "w")
+    ck = TensorCheckpoint(store)
+    ck.save_layout(layout)
+    ck.save_state(per_rank, Comm(N), step=0)
+    return ck.load_state(plan, Comm(M), step=0)
+
+
+# --------------------------------------------------------------- chunk math
+def test_chunk_grid_boxes():
+    g = ChunkGrid((10, 7), (4, 3))
+    assert g.counts == (3, 3)
+    assert g.chunk_box(0) == Box((0, 0), (4, 3))
+    assert g.chunk_box(8) == Box((8, 6), (10, 7))   # ragged edge chunk
+    assert sum(b.size for _, b in g.iter_boxes()) == 70
+    assert g.chunks_intersecting(Box((3, 2), (5, 4))) == [0, 1, 3, 4]
+
+
+def test_row_major_ids_is_cone_order():
+    within = Box((4, 6), (8, 10))
+    sub = Box((5, 7), (7, 9))
+    ids = row_major_ids(sub, within)
+    # positions of sub's elements in within's row-major flattening
+    ref = np.arange(16).reshape(4, 4)[1:3, 1:3].reshape(-1)
+    np.testing.assert_array_equal(ids, ref)
+
+
+# ------------------------------------------------------------ sharding math
+def test_device_box_and_owner():
+    mesh = {"data": 2, "model": 4}
+    spec = (("data",), ("model",))
+    b = device_box((8, 16), mesh, spec, {"data": 1, "model": 2})
+    assert b == Box((4, 8), (8, 12))
+    # replicated over 'data': only data==0 owns
+    spec2 = (None, ("model",))
+    assert is_owner(mesh, spec2, {"data": 0, "model": 3}, 2)
+    assert not is_owner(mesh, spec2, {"data": 1, "model": 3}, 2)
+
+
+def test_rank_regions_dedup_replicas():
+    mesh = {"data": 2, "model": 2}
+    regions = rank_regions((8,), mesh, (("model",),), nranks=2)
+    # 4 devices, 2 ranks; array sharded over model only -> 2 distinct boxes
+    boxes = [b for r in regions for b in r]
+    assert len(boxes) == 2
+    assert {(b.start, b.stop) for b in boxes} == {((0,), (4,)), ((4,), (8,))}
+
+
+# ----------------------------------------------------------- roundtrip suite
+@pytest.mark.parametrize("N,M", [(1, 1), (3, 2), (2, 5), (4, 3), (1, 4)])
+def test_roundtrip_canonical_targets(tmp_path, N, M):
+    layout = _layout()
+    arrays = _arrays(layout)
+    plan = [{spec.name: canonical_regions(spec.shape, M)[m]
+             for spec in layout.arrays} for m in range(M)]
+    out = _roundtrip(tmp_path, layout, arrays, N, M, plan)
+    for m in range(M):
+        for spec in layout.arrays:
+            for box, got in zip(plan[m].get(spec.name, []),
+                                out[m].get(spec.name, [])):
+                np.testing.assert_array_equal(got, arrays[spec.name][box.slices()])
+
+
+def test_roundtrip_misaligned_regions(tmp_path):
+    """Target regions cut across chunk boundaries arbitrarily."""
+    layout = _layout()
+    arrays = _arrays(layout, seed=3)
+    plan = [
+        {"w/embed": [Box((5, 3), (17, 11))], "w/dense": [Box((0, 0), (24, 5))]},
+        {"w/embed": [Box((0, 0), (5, 16)), Box((17, 0), (50, 16))],
+         "opt/mu": [Box((2,), (7,))]},
+        {"w/dense": [Box((11, 5), (13, 24))], "step": [Box((0,), (1,))]},
+    ]
+    out = _roundtrip(tmp_path, layout, arrays, 2, 3, plan)
+    for m, rank_plan in enumerate(plan):
+        for name, boxes in rank_plan.items():
+            for box, got in zip(boxes, out[m][name]):
+                np.testing.assert_array_equal(got, arrays[name][box.slices()])
+
+
+def test_same_count_fast_path(tmp_path):
+    """M == N with identical regions: verbatim contiguous reads, no index
+    math — one read per (rank, array)."""
+    layout = _layout()
+    arrays = _arrays(layout, seed=5)
+    N = 3
+    own = balanced_chunk_partition(layout, N)
+    per_rank = shards_from_arrays(layout, arrays, own)
+    store = DatasetStore(str(tmp_path), "w")
+    ck = TensorCheckpoint(store)
+    ck.save_layout(layout)
+    ck.save_state(per_rank, Comm(N), step=0)
+    plan = [{name: [layout.spec(name).grid.chunk_box(int(o))
+                    for o in own[r][name]]
+             for name in own[r]} for r in range(N)]
+    reads_before = store.stats.read_calls
+    out = ck.load_state(plan, Comm(N), step=0)
+    nread = store.stats.read_calls - reads_before
+    n_pairs = sum(1 for r in range(N) for name in own[r] if len(own[r][name]))
+    assert nread == n_pairs, f"fast path should do {n_pairs} reads, did {nread}"
+    for r in range(N):
+        for name in own[r]:
+            for o, got in zip(own[r][name], out[r][name]):
+                box = layout.spec(name).grid.chunk_box(int(o))
+                np.testing.assert_array_equal(got, arrays[name][box.slices()])
+
+
+def test_ownership_epochs_section_reuse(tmp_path):
+    """§2.2.7: same ownership -> section written once; new ownership -> new
+    epoch, and both steps stay loadable."""
+    layout = _layout()
+    arrays = _arrays(layout, seed=7)
+    store = DatasetStore(str(tmp_path), "w")
+    ck = TensorCheckpoint(store)
+    ck.save_layout(layout)
+    own2 = balanced_chunk_partition(layout, 2)
+    ck.save_state(shards_from_arrays(layout, arrays, own2), Comm(2), step=0)
+    n_sections_0 = sum(1 for d in store.datasets() if d.endswith("/G"))
+    arrays2 = _arrays(layout, seed=8)
+    ck.save_state(shards_from_arrays(layout, arrays2, own2), Comm(2), step=1)
+    assert sum(1 for d in store.datasets() if d.endswith("/G")) == n_sections_0
+    # ownership change -> new epoch sections
+    own3 = balanced_chunk_partition(layout, 3)
+    arrays3 = _arrays(layout, seed=9)
+    ck.save_state(shards_from_arrays(layout, arrays3, own3), Comm(3), step=2)
+    assert sum(1 for d in store.datasets() if d.endswith("/G")) == 2 * n_sections_0
+    M = 4
+    plan = [{spec.name: canonical_regions(spec.shape, M)[m]
+             for spec in layout.arrays} for m in range(M)]
+    for step, ref in [(0, arrays), (1, arrays2), (2, arrays3)]:
+        out = ck.load_state(plan, Comm(M), step=step)
+        for m in range(M):
+            for spec in layout.arrays:
+                for box, got in zip(plan[m][spec.name],
+                                    out[m].get(spec.name, [])):
+                    np.testing.assert_array_equal(got, ref[spec.name][box.slices()])
+
+
+def test_verify_step_detects_corruption(tmp_path):
+    layout = _layout()
+    arrays = _arrays(layout, seed=11)
+    own = balanced_chunk_partition(layout, 2)
+    store = DatasetStore(str(tmp_path), "w")
+    ck = TensorCheckpoint(store)
+    ck.save_layout(layout)
+    ck.save_state(shards_from_arrays(layout, arrays, own), Comm(2), step=0)
+    assert ck.verify_step(Comm(3), step=0)
+    # flip one byte in one vec file
+    path = store._path("w/dense/e0/s0/vec")
+    with open(path, "r+b") as f:
+        f.seek(17)
+        b = f.read(1)
+        f.seek(17)
+        f.write(bytes([b[0] ^ 0xFF]))
+    assert not ck.verify_step(Comm(3), step=0)
+
+
+# -------------------------------------------------------------- resharder
+@pytest.mark.parametrize("N,M", [(2, 3), (4, 2), (1, 3), (3, 1)])
+def test_inmemory_reshard(N, M):
+    layout = _layout()
+    arrays = _arrays(layout, seed=13)
+    own = balanced_chunk_partition(layout, N)
+    source = shards_from_arrays(layout, arrays, own)
+    plan = [{spec.name: canonical_regions(spec.shape, M)[m]
+             for spec in layout.arrays} for m in range(M)]
+    out = reshard(layout, source, plan, Comm(N), Comm(M))
+    for m in range(M):
+        for spec in layout.arrays:
+            for box, got in zip(plan[m].get(spec.name, []),
+                                out[m].get(spec.name, [])):
+                np.testing.assert_array_equal(got, arrays[spec.name][box.slices()])
+
+
+# ------------------------------------------------------------ property sweep
+@settings(max_examples=15, deadline=None)
+@given(
+    rows=st.integers(1, 40), cols=st.integers(1, 17),
+    cr=st.integers(1, 9), cc=st.integers(1, 9),
+    n=st.integers(1, 4), m=st.integers(1, 4), seed=st.integers(0, 99),
+)
+def test_property_roundtrip(tmp_path_factory, rows, cols, cr, cc, n, m, seed):
+    layout = StateLayout((ArraySpec("a", (rows, cols), "float64",
+                                    (min(cr, rows), min(cc, cols))),))
+    arrays = _arrays(layout, seed=seed)
+    rng = np.random.default_rng(seed)
+    # random disjoint target regions: random row split + random col split
+    rsplit = np.sort(rng.choice(np.arange(1, rows), size=min(m - 1, rows - 1),
+                                replace=False)) if rows > 1 and m > 1 else []
+    bounds = [0, *map(int, rsplit), rows]
+    plan = [dict() for _ in range(m)]
+    for i in range(len(bounds) - 1):
+        plan[i % m].setdefault("a", []).append(
+            Box((bounds[i], 0), (bounds[i + 1], cols)))
+    tmp = tmp_path_factory.mktemp("prop")
+    out = _roundtrip(tmp, layout, arrays, n, m, plan)
+    for mm in range(m):
+        for box, got in zip(plan[mm].get("a", []), out[mm].get("a", [])):
+            np.testing.assert_array_equal(got, arrays["a"][box.slices()])

@@ -1,0 +1,193 @@
+"""Training-loop integration: checkpoint/restart determinism, preemption
+recovery, optimizer correctness."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.configs.base import ShapeConfig
+from repro.distrib.rules import rules_for
+from repro.launch.mesh import make_debug_mesh
+from repro.models.api import build_model
+from repro.train.data import SyntheticLM
+from repro.train.loop import SimulatedPreemption, Trainer, TrainerConfig
+from repro.train.optim import Adafactor, AdamW, make_optimizer
+from repro.train.schedule import warmup_cosine
+from repro.train.step import (
+    init_train_state,
+    make_train_step,
+    train_state_specs,
+)
+
+SHAPE = ShapeConfig("t", 32, 4, "train")
+
+
+def _trainer(tmp_path, arch="smollm_135m", ckpt_every=5, seed=0):
+    cfg = get_smoke_config(arch)
+    api = build_model(cfg)
+    mesh = make_debug_mesh(1, 1)
+    rules = rules_for(cfg.arch)
+    opt = make_optimizer(cfg.optimizer)
+    sched = functools.partial(warmup_cosine, base_lr=1e-3, warmup=2,
+                              total=100)
+    step = make_train_step(api, opt, sched, mesh, rules, SHAPE)
+    data = SyntheticLM(cfg.vocab, SHAPE.seq_len, SHAPE.global_batch,
+                       seed=seed)
+    tcfg = TrainerConfig(ckpt_dir=str(tmp_path / "ck"),
+                         ckpt_every=ckpt_every, log_every=1)
+    return Trainer(step, data, tcfg,
+                   init_state_fn=lambda: init_train_state(
+                       api, opt, jax.random.key(seed)))
+
+
+def test_restart_is_bitwise_deterministic(tmp_path):
+    """10 straight steps == 5 steps + restart + 5 steps, bit for bit.
+    The N-to-M save/load cycle must not perturb the trajectory."""
+    t1 = _trainer(tmp_path / "a", ckpt_every=5)
+    r1 = t1.run(10)
+    loss_straight = [h["loss"] for h in t1.history]
+
+    t2 = _trainer(tmp_path / "b", ckpt_every=5)
+    with pytest.raises(SimulatedPreemption):
+        t2.run(10, fail_at=7)          # dies after committing step 5
+    t3 = _trainer(tmp_path / "b", ckpt_every=5)
+    r3 = t3.run(10)
+    loss_resumed = [h["loss"] for h in t3.history]
+
+    assert loss_resumed == loss_straight[5:]
+    s1 = r1["state"]
+    s3 = r3["state"]
+    for k in s1:
+        np.testing.assert_array_equal(np.asarray(s1[k]).astype(np.float32),
+                                      np.asarray(s3[k]).astype(np.float32),
+                                      err_msg=k)
+
+
+def test_preemption_before_first_checkpoint(tmp_path):
+    t = _trainer(tmp_path, ckpt_every=50)
+    with pytest.raises(SimulatedPreemption):
+        t.run(10, fail_at=3)
+    t2 = _trainer(tmp_path, ckpt_every=50)
+    state, start = t2.restore_latest()
+    assert start == 0                     # cold start: nothing committed
+
+
+def test_moe_arch_trains_and_restarts(tmp_path):
+    t = _trainer(tmp_path, arch="granite_moe_3b_a800m", ckpt_every=4)
+    t.run(4)
+    t2 = _trainer(tmp_path, arch="granite_moe_3b_a800m", ckpt_every=4)
+    state, start = t2.restore_latest()
+    assert start == 4
+    t2.run(8, start_state=state, start_step=start)
+    assert t2.history[-1]["step"] == 8
+
+
+# ------------------------------------------------------------- optimizers
+def test_adamw_matches_reference():
+    """One AdamW step against a hand-rolled reference."""
+    opt = AdamW(b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1)
+    rng = np.random.default_rng(0)
+    p = jnp.asarray(rng.normal(size=(4, 3)), jnp.float32)
+    g = jnp.asarray(rng.normal(size=(4, 3)), jnp.float32)
+    from repro.models.api import ParamSpec
+
+    specs = {"w": ParamSpec((4, 3), (None, None), "float32")}
+    state = opt.init(specs)
+    new_p, new_s = opt.update({"w": p}, {"w": g}, state,
+                              jnp.float32(1e-2), jnp.int32(0))
+    m = 0.1 * np.asarray(g)
+    v = 0.05 * np.asarray(g) ** 2
+    mhat = m / (1 - 0.9)
+    vhat = v / (1 - 0.95)
+    want = np.asarray(p) - 1e-2 * (mhat / (np.sqrt(vhat) + 1e-8)
+                                   + 0.1 * np.asarray(p))
+    np.testing.assert_allclose(np.asarray(new_p["w"]), want, rtol=1e-5)
+
+
+def test_adafactor_state_is_factored():
+    opt = Adafactor()
+    from repro.models.api import ParamSpec
+
+    specs = {"w": ParamSpec((64, 32), ("embed", "mlp"), "bfloat16"),
+             "b": ParamSpec((64,), ("embed",), "bfloat16")}
+    st = opt.state_specs(specs)
+    assert st["vr/w"].shape == (64,)
+    assert st["vc/w"].shape == (32,)
+    assert st["v/b"].shape == (64,)
+    # factored state is ~ (64+32)/(64*32) of AdamW's
+    adamw_elems = 2 * 64 * 32
+    ada_elems = 64 + 32
+    assert ada_elems < adamw_elems / 20
+
+
+def test_state_specs_cover_all_params():
+    cfg = get_smoke_config("qwen3_4b")
+    api = build_model(cfg)
+    for opt in (AdamW(), Adafactor()):
+        specs = train_state_specs(api, opt)
+        for n in api.param_specs:
+            assert f"params/{n}" in specs
+        assert "step" in specs
+
+
+def test_pipeline_is_counter_based():
+    """Same (seed, step) -> same global batch; restart-safe by design."""
+    d1 = SyntheticLM(128, 16, 4, seed=3)
+    d2 = SyntheticLM(128, 16, 4, seed=3)
+    b1, b2 = d1.batch(7), d2.batch(7)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert not np.array_equal(d1.batch(8)["tokens"], b1["tokens"])
+    # shard slicing is consistent with the global batch
+    sh = d1.shard_rows(7, 1, 3)
+    np.testing.assert_array_equal(sh["tokens"], b1["tokens"][1:3])
+
+
+def test_microbatched_grads_match_full_batch():
+    """A=2 accumulation == A=1 within bf16-accumulation tolerance."""
+    cfg = get_smoke_config("smollm_135m")
+    api = build_model(cfg)
+    mesh = make_debug_mesh(1, 1)
+    rules = rules_for(cfg.arch)
+    opt = make_optimizer(cfg.optimizer)
+    sched = functools.partial(warmup_cosine, base_lr=1e-3, warmup=2,
+                              total=100)
+    shape = ShapeConfig("mb", 16, 4, "train")
+    s1 = make_train_step(api, opt, sched, mesh, rules, shape,
+                         microbatches=1, donate=False)
+    s2 = make_train_step(api, opt, sched, mesh, rules, shape,
+                         microbatches=2, donate=False)
+    state = init_train_state(api, opt, jax.random.key(0))
+    data = SyntheticLM(cfg.vocab, 16, 4, seed=0)
+    batch = data.batch(0)
+    _, m1 = s1(dict(state), batch)
+    _, m2 = s2(dict(state), batch)
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 5e-2
+    assert abs(float(m1["grad_norm"]) - float(m2["grad_norm"])) \
+        / max(float(m1["grad_norm"]), 1e-9) < 0.1
+
+
+def test_async_checkpointing_restart(tmp_path):
+    """Async (double-buffered) checkpoint writes are restart-equivalent
+    to synchronous ones."""
+    t1 = _trainer(tmp_path / "sync", ckpt_every=5)
+    t1.cfg.async_ckpt = False
+    t1.run(10)
+    t2 = _trainer(tmp_path / "async", ckpt_every=5)
+    t2.cfg.async_ckpt = True
+    t2.run(10)
+
+    r1 = _trainer(tmp_path / "sync", ckpt_every=5)
+    r2 = _trainer(tmp_path / "async", ckpt_every=5)
+    s1, st1 = r1.restore_latest()
+    s2, st2 = r2.restore_latest()
+    assert st1 == st2 == 10
+    for k in s1:
+        np.testing.assert_array_equal(
+            np.asarray(s1[k]).astype(np.float32),
+            np.asarray(s2[k]).astype(np.float32), err_msg=k)
