@@ -187,6 +187,55 @@ def timeseries_append(elems_per_rank: int = 1 << 16,
             "later_steps_s": round(float(np.mean(times[1:])), 4)}
 
 
+def rank_scaling_roundtrip(ranks=(2, 4, 8, 16, 32, 64),
+                           elems_per_rank: int = 1 << 14) -> list[dict]:
+    """Rank-scaling sweep (the paper's headline axis, §6): full save +
+    general-path N-to-M load round-trip at growing simulated rank counts.
+
+    Infeasible pre-refactor: the dense list-of-lists collectives and the
+    per-rank-pair star-forest loops made R > ~16 quadratically slow.  With
+    the packed plans this sweeps to R = 64 in seconds; wire bytes come from
+    the exact CommStats accounting (Tables 6.3–6.5 analogues)."""
+    rows = []
+    for nranks in ranks:
+        total = nranks * elems_per_rank
+        # two chunks per rank so the canonical load regions do NOT coincide
+        # with the saved chunk boxes — forces the general N-to-M path, not
+        # the same-count shortcut
+        layout = StateLayout((ArraySpec("vec", (total,), "float64",
+                                        (elems_per_rank // 2,)),))
+        rng = np.random.default_rng(0)
+        arrays = {"vec": rng.normal(size=total)}
+        ownership = balanced_chunk_partition(layout, nranks)
+        per_rank = shards_from_arrays(layout, arrays, ownership)
+        comm = Comm(nranks)
+        tmp = tempfile.mkdtemp(prefix="rank_scale_")
+        t0 = time.perf_counter()
+        store, ck = _save(tmp, layout, per_rank, comm)
+        t_save = time.perf_counter() - t0
+        comm_m = Comm(nranks)
+        plan = [{"vec": regs} for regs in
+                canonical_regions((len(arrays["vec"]),), nranks)]
+        t1 = time.perf_counter()
+        out = ck.load_state(plan, comm_m, 0)
+        t_load = time.perf_counter() - t1
+        got = np.concatenate([np.concatenate([b.reshape(-1) for b in
+                                              r["vec"]])
+                              for r in out if r])
+        assert np.array_equal(got, arrays["vec"])
+        gib = (nranks * elems_per_rank * 8) / 2 ** 30
+        rows.append({
+            "ranks": nranks,
+            "save_s": round(t_save, 3),
+            "load_s": round(t_load, 3),
+            "save_GiB_per_s": round(gib / max(t_save, 1e-9), 2),
+            "load_GiB_per_s": round(gib / max(t_load, 1e-9), 2),
+            "read_MiB": round(store.stats.bytes_read / 2 ** 20, 2),
+        })
+        shutil.rmtree(tmp)
+    return rows
+
+
 def reshard_bench(elems: int = 1 << 22) -> list[dict]:
     """In-memory elastic reshard N -> M (beyond-paper): wall time + wire
     bytes from the comm accounting."""

@@ -1,0 +1,101 @@
+"""CommStats probe: deterministic fem + tensor save/load round-trips.
+
+Prints one JSON object per workload/rank-count with the full CommStats,
+so the accounting can be compared byte-for-byte across implementations
+(the acceptance gate for the packed-collective refactor: identical
+``bytes_moved`` at R in {2, 4, 8} on the same workload).
+
+    PYTHONPATH=src python -m benchmarks.commstats_probe
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import shutil
+import tempfile
+
+import numpy as np
+
+from repro.core.comm import Comm
+from repro.core.store import DatasetStore
+from repro.core.tensor_ckpt import (
+    TensorCheckpoint,
+    balanced_chunk_partition,
+    shards_from_arrays,
+)
+from repro.core.chunk_layout import ArraySpec, StateLayout
+from repro.distrib.sharding import canonical_regions
+from repro.fem import (
+    Element, FEMCheckpoint, FunctionSpace, distribute, interpolate, tri_mesh,
+)
+
+
+def _field(pts):
+    x = pts[:, 0]
+    y = pts[:, 1] if pts.shape[1] > 1 else 0 * x
+    return np.sin(3 * x) * (2 + np.cos(5 * y)) + x * y
+
+
+def fem_roundtrip(R: int) -> dict:
+    """Save a P2 function from R ranks, reload on R ranks (random part)."""
+    mesh = tri_mesh(4, 4, seed=9)
+    element = Element("P", 2, "triangle")
+    comm_s = Comm(R)
+    plexes, _, _ = distribute(mesh, R, method="contiguous", seed=0)
+    tmp = tempfile.mkdtemp(prefix="probe_fem_")
+    try:
+        store = DatasetStore(tmp, "w")
+        ck = FEMCheckpoint(store)
+        ck.save_mesh("m", plexes, comm_s,
+                     labels={"bnd": [lp.dims.copy() for lp in plexes]})
+        spaces = [FunctionSpace(lp, element) for lp in plexes]
+        funcs = [interpolate(sp, _field) for sp in spaces]
+        ck.save_function("m", "f", funcs, comm_s)
+        comm_l = Comm(R)
+        loaded = ck.load_mesh("m", comm_l, partition="random", seed=11)
+        ck.load_function(loaded, "f", comm_l)
+        return {"save": dataclasses.asdict(comm_s.stats),
+                "load": dataclasses.asdict(comm_l.stats)}
+    finally:
+        shutil.rmtree(tmp)
+
+
+def tensor_roundtrip(R: int, elems_per_rank: int = 1 << 10) -> dict:
+    """Tensor save at R ranks + general-path load at R+1 ranks."""
+    total = R * elems_per_rank
+    layout = StateLayout((ArraySpec("vec", (total,), "float64",
+                                    (elems_per_rank // 2,)),))
+    rng = np.random.default_rng(0)
+    arrays = {"vec": rng.normal(size=total)}
+    ownership = balanced_chunk_partition(layout, R)
+    per_rank = shards_from_arrays(layout, arrays, ownership)
+    comm_s = Comm(R)
+    tmp = tempfile.mkdtemp(prefix="probe_tensor_")
+    try:
+        store = DatasetStore(tmp, "w")
+        ck = TensorCheckpoint(store)
+        ck.save_layout(layout)
+        ck.save_state(per_rank, comm_s, 0)
+        M = R + 1
+        comm_l = Comm(M)
+        plan = [{"vec": regs} for regs in canonical_regions((total,), M)]
+        out = ck.load_state(plan, comm_l, 0)
+        got = np.concatenate([np.concatenate([b.reshape(-1) for b in r["vec"]])
+                              for r in out if r])
+        assert np.array_equal(got, arrays["vec"])
+        return {"save": dataclasses.asdict(comm_s.stats),
+                "load": dataclasses.asdict(comm_l.stats)}
+    finally:
+        shutil.rmtree(tmp)
+
+
+def probe(ranks=(2, 4, 8)) -> dict:
+    return {
+        "fem": {R: fem_roundtrip(R) for R in ranks},
+        "tensor": {R: tensor_roundtrip(R) for R in ranks},
+    }
+
+
+if __name__ == "__main__":
+    print(json.dumps(probe(), indent=1, sort_keys=True))

@@ -38,6 +38,9 @@ def main(argv=None):
                  bc.weak_scaling_load(elems_per_rank=scale))
     _print_table("Table 6.5 analogue: same-count exact reload",
                  bc.weak_scaling_load_exact(elems_per_rank=scale))
+    _print_table("Rank scaling: save/load round-trip to R=64",
+                 bc.rank_scaling_roundtrip(
+                     elems_per_rank=max(scale >> 3, 1 << 10)))
     print("\n== §2.2.7: time-series appends (section saved once) ==")
     print(json.dumps(bc.timeseries_append(elems_per_rank=scale // 2),
                      indent=1))

@@ -10,6 +10,19 @@ transfers unchanged to a real multi-host runtime (where ``Comm`` would be
 backed by ``jax.experimental.multihost_utils`` / a filesystem, exactly as the
 paper's HDF5 path is backed by a shared parallel filesystem).
 
+The primitives come in two tiers, mirroring how PetscSF compiles star-forest
+graphs into packed message plans [Zhang et al., IEEE TPDS 2022]:
+
+  * **packed collectives** — :meth:`Comm.alltoallv_packed` (dense count
+    matrix, flat per-rank buffers) and :meth:`Comm.neighbor_alltoallv`
+    (CSR edge list; only nonempty src→dst pairs are ever touched).  Both
+    move data with a single vectorised segment permutation and do O(edges)
+    byte accounting — no R×R Python loops anywhere, which is what makes
+    simulated rank counts of 64+ practical.
+  * **list collectives** — the original ``send[src][dst]`` API, kept as a
+    thin shim over the packed engine during migration (it still accepts
+    heterogeneous per-pair dtypes, falling back to the reference path).
+
 All methods do byte accounting: :attr:`Comm.stats` records per-round traffic
 so benchmarks can report communication volume alongside wall time (the paper
 reports bandwidth per phase in Tables 6.3–6.5).
@@ -21,6 +34,21 @@ import dataclasses
 from typing import Sequence
 
 import numpy as np
+
+_INT = np.int64
+
+
+def ragged_arange(starts: np.ndarray, lengths: np.ndarray) -> np.ndarray:
+    """Concatenation of ``arange(s, s + n)`` for each (s, n) pair, fully
+    vectorised — the workhorse of every CSR gather in this package."""
+    starts = np.asarray(starts, dtype=_INT)
+    lengths = np.asarray(lengths, dtype=_INT)
+    total = int(lengths.sum())
+    if total == 0:
+        return np.empty(0, _INT)
+    out_starts = np.cumsum(lengths) - lengths
+    idx = np.arange(total, dtype=_INT)
+    return idx - np.repeat(out_starts, lengths) + np.repeat(starts, lengths)
 
 
 @dataclasses.dataclass
@@ -54,32 +82,103 @@ class Comm:
         local = int(np.trace(per_pair_bytes))
         self.stats.record(moved, local)
 
-    # --------------------------------------------------------- collectives
+    # ----------------------------------------------------- packed collectives
+    def neighbor_alltoallv(self, src: np.ndarray, dst: np.ndarray,
+                           cnt: np.ndarray, send_flat: Sequence[np.ndarray]
+                           ) -> list[np.ndarray]:
+        """Sparse (neighborhood) all-to-all over an explicit edge list.
+
+        ``(src[e], dst[e], cnt[e])`` enumerates the nonempty src→dst pairs,
+        sorted by ``(src, dst)``; ``send_flat[s]`` is ONE array per source
+        rank — the concatenation, in ascending-destination order, of
+        everything rank ``s`` sends (``cnt`` counts leading-dim rows).
+
+        Returns ``recv_flat`` with ``recv_flat[d]`` = the concatenation, in
+        ascending-source order, of everything sent to ``d``.  Only the listed
+        edges are touched: work and accounting are O(edges + data), never
+        O(R²).
+        """
+        R = self.nranks
+        src = np.asarray(src, dtype=_INT)
+        dst = np.asarray(dst, dtype=_INT)
+        cnt = np.asarray(cnt, dtype=_INT)
+        assert src.shape == dst.shape == cnt.shape
+        if src.size:
+            key = src * R + dst
+            assert (np.diff(key) > 0).all(), \
+                "edges must be strictly sorted by (src, dst)"
+        data = [np.asarray(b) for b in send_flat]
+        assert len(data) == R
+        flat = np.concatenate(data) if R > 1 else data[0]
+        # uniform row type across the exchange (one MPI datatype per call)
+        row_nbytes = flat.itemsize * int(np.prod(flat.shape[1:], initial=1))
+        sent_rows = np.bincount(src, weights=cnt, minlength=R).astype(_INT)
+        assert np.array_equal(sent_rows, np.array([len(d) for d in data])), \
+            "edge counts must cover every row of send_flat"
+
+        wire = cnt * row_nbytes
+        off_wire = src != dst
+        self.stats.record(int(wire[off_wire].sum()),
+                          int(wire[~off_wire].sum()))
+
+        # permute segments from (src, dst)-major to (dst, src)-major
+        in_starts = np.cumsum(cnt) - cnt
+        order = np.lexsort((src, dst))
+        gather = ragged_arange(in_starts[order], cnt[order])
+        out_flat = flat[gather]
+        per_dst = np.bincount(dst, weights=cnt, minlength=R).astype(_INT)
+        offs = np.concatenate([[0], np.cumsum(per_dst)])
+        return [out_flat[offs[d]:offs[d + 1]] for d in range(R)]
+
+    def alltoallv_packed(self, counts: np.ndarray,
+                         send_flat: Sequence[np.ndarray]) -> list[np.ndarray]:
+        """Dense-plan packed all-to-all: ``counts[s, d]`` rows go s→d.
+
+        ``send_flat[s]`` is the ascending-destination concatenation of rank
+        ``s``'s outgoing rows; the return value is the ascending-source
+        concatenation per destination (segmentation = ``counts[:, d]``).
+        Zero-count pairs cost nothing — the exchange is compiled down to the
+        nonempty edge list and handed to :meth:`neighbor_alltoallv`.
+        """
+        R = self.nranks
+        counts = np.asarray(counts, dtype=_INT)
+        assert counts.shape == (R, R), counts.shape
+        src, dst = np.nonzero(counts)          # row-major == (src, dst) sorted
+        return self.neighbor_alltoallv(src, dst, counts[src, dst], send_flat)
+
+    # ------------------------------------------------------- list collectives
     def alltoallv(
         self, send: Sequence[Sequence[np.ndarray]]
     ) -> list[list[np.ndarray]]:
-        """``send[src][dst]`` is the buffer src sends to dst.
+        """``send[src][dst]`` is the buffer src sends to dst (legacy API).
 
-        Returns ``recv`` with ``recv[dst][src]`` = that buffer.  This is the
-        only primitive the checkpoint algorithm needs beyond the star-forest
-        bcast/reduce (which are themselves built from grouped gathers).
+        Returns ``recv`` with ``recv[dst][src]`` = that buffer.  Kept as a
+        thin shim over :meth:`alltoallv_packed` for callers not yet migrated;
+        heterogeneous per-pair dtypes/row-shapes fall back to the reference
+        list path with identical accounting.
         """
         R = self.nranks
         assert len(send) == R and all(len(s) == R for s in send)
-        pair = np.zeros((R, R), dtype=np.int64)
-        for s in range(R):
-            for d in range(R):
-                pair[s, d] = send[s][d].nbytes
-        self._account(pair)
-        return [[send[s][d] for s in range(R)] for d in range(R)]
+        first = send[0][0]
+        uniform = all(b.dtype == first.dtype and b.shape[1:] == first.shape[1:]
+                      for row in send for b in row)
+        if not uniform:
+            pair = np.array([[b.nbytes for b in row] for row in send],
+                            dtype=_INT)
+            self._account(pair)
+            return [[send[s][d] for s in range(R)] for d in range(R)]
+        counts = np.array([[len(b) for b in row] for row in send], dtype=_INT)
+        flat = [np.concatenate(row) if R > 1 else row[0] for row in send]
+        recv_flat = self.alltoallv_packed(counts, flat)
+        splits = [np.cumsum(counts[:, d])[:-1] for d in range(R)]
+        return [np.split(recv_flat[d], splits[d]) for d in range(R)]
 
     def allgather(self, values: Sequence[np.ndarray]) -> list[list[np.ndarray]]:
         """Every rank receives every rank's value."""
         R = self.nranks
-        pair = np.zeros((R, R), dtype=np.int64)
-        for s in range(R):
-            pair[s, :] = values[s].nbytes
-        self._account(pair)
+        nbytes = np.array([v.nbytes for v in values], dtype=_INT)
+        total = int(nbytes.sum())
+        self.stats.record(total * (R - 1), total)
         return [[values[s] for s in range(R)] for _ in range(R)]
 
     def allreduce_sum(self, values: Sequence[np.ndarray]) -> list[np.ndarray]:
@@ -88,22 +187,15 @@ class Comm:
         for v in values[1:]:
             total = total + v
         # ring all-reduce traffic model: 2*(R-1)/R of the data per rank
-        nbytes = values[0].nbytes
-        pair = np.zeros((R, R), dtype=np.int64)
-        for s in range(R):
-            pair[s, (s + 1) % R] = 2 * nbytes * (R - 1) // max(R, 1)
-        self._account(pair)
+        per_rank = 2 * values[0].nbytes * (R - 1) // max(R, 1)
+        self.stats.record(per_rank * R if R > 1 else 0,
+                          per_rank if R == 1 else 0)
         return [total.copy() for _ in range(R)]
 
     def exscan_sum(self, values: Sequence[int]) -> list[int]:
         """Exclusive prefix sum of scalars (used for global offsets — the
         paper's 'global offset of 20 added on concatenation', §2.2.4)."""
-        out, acc = [], 0
-        for v in values:
-            out.append(acc)
-            acc += int(v)
-        pair = np.zeros((self.nranks, self.nranks), dtype=np.int64)
-        for s in range(self.nranks - 1):
-            pair[s, s + 1] = 8
-        self._account(pair)
-        return out
+        arr = np.asarray([int(v) for v in values], dtype=_INT)
+        out = (np.cumsum(arr) - arr).tolist()
+        self.stats.record(8 * (self.nranks - 1), 0)
+        return [int(v) for v in out]

@@ -71,16 +71,18 @@ def reshard(layout: StateLayout, source: PerRankState,
         # element-level SF: target element -> (source rank, vec position)
         rr, ri, placements = [], [], []
         for m in range(M):
-            rank_of = {int(g): int(a) for g, a in zip(needed[m], got_rank[m])}
-            base_of = {int(g): int(a) for g, a in zip(needed[m], got_base[m])}
+            # needed[m] is sorted: resolve chunk ordinals by binary search
+            # instead of per-chunk dict lookups
             rparts, iparts, pl, pos = [], [], [], 0
             for bi, b in enumerate(regions[m]):
                 for o in grid.chunks_intersecting(b):
+                    j = np.searchsorted(needed[m], o)
                     cbox = grid.chunk_box(o)
                     inter = b.intersect(cbox)
                     within = row_major_ids(inter, cbox)
-                    rparts.append(np.full(inter.size, rank_of[o], dtype=_INT))
-                    iparts.append(base_of[o] + within)
+                    rparts.append(np.full(inter.size, int(got_rank[m][j]),
+                                          dtype=_INT))
+                    iparts.append(int(got_base[m][j]) + within)
                     pl.append((bi, inter, pos))
                     pos += inter.size
             rr.append(np.concatenate(rparts) if rparts else np.empty(0, _INT))

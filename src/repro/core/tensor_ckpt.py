@@ -285,7 +285,7 @@ class TensorCheckpoint:
         dof_ids: list[np.ndarray] = []
         placements: list[list[tuple[int, Box, Box, int]]] = []
         for m in range(M):
-            off_of = {int(g): int(o) for g, o in zip(needed[m], OFF_T[m])}
+            # needed[m] is sorted: resolve chunk offsets by binary search
             ids_parts = []
             pl = []
             pos = 0
@@ -294,7 +294,8 @@ class TensorCheckpoint:
                     cbox = grid.chunk_box(o)
                     inter = b.intersect(cbox)
                     within = row_major_ids(inter, cbox)
-                    ids_parts.append(off_of[o] + within)
+                    off = int(OFF_T[m][np.searchsorted(needed[m], o)])
+                    ids_parts.append(off + within)
                     pl.append((bi, inter, cbox, pos))
                     pos += inter.size
             dof_ids.append(np.concatenate(ids_parts) if ids_parts

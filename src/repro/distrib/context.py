@@ -62,7 +62,10 @@ def use_mesh_context(ctx: MeshContext, *, set_jax_mesh: bool = False):
     _STATE.ctx = ctx
     try:
         if set_jax_mesh:
-            with jax.set_mesh(ctx.mesh):
+            # jax >= 0.6: jax.set_mesh(mesh); jax 0.4.x: the Mesh object is
+            # itself the ambient-mesh context manager
+            setter = getattr(jax, "set_mesh", None)
+            with (setter(ctx.mesh) if setter is not None else ctx.mesh):
                 yield ctx
         else:
             yield ctx

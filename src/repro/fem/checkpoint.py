@@ -33,11 +33,10 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.comm import Comm
+from repro.core.comm import Comm, ragged_arange
 from repro.core.star_forest import (
     StarForest,
     partition_rank_of,
-    partition_sizes,
     partition_starts,
 )
 from repro.core.store import DatasetStore
@@ -55,37 +54,44 @@ _INT = np.int64
 
 
 # ===================================================================== utils
+def _dest_pack(dest: np.ndarray, nranks: int
+               ) -> tuple[np.ndarray, np.ndarray]:
+    """CSR-pack one rank's send set: (stable order by destination, per-dest
+    row counts).  The permutation groups rows by ascending destination while
+    preserving source order within each destination — the packing PetscSF
+    compiles its graphs into."""
+    order = np.argsort(dest, kind="stable")
+    return order, np.bincount(dest, minlength=nranks).astype(_INT)
+
+
 def _route_rows(comm: Comm, total: int, ids: list[np.ndarray],
                 payloads: list[dict[str, np.ndarray]]
                 ) -> tuple[list[np.ndarray], list[dict[str, np.ndarray]]]:
     """Route per-rank (global id, payload-row) pairs to the canonical holder
     of each id.  Returns per-rank sorted ids and payloads for the holder's
     chunk.  Payload values may be 1-D (one scalar per id) or ragged via a
-    companion ``<name>__sizes`` convention handled by the caller."""
+    companion ``<name>__sizes`` convention handled by the caller.
+
+    One packed all-to-all per dataset (ids + each payload key); the per-rank
+    send sets are CSR-packed by destination, so nothing O(R²) is ever
+    materialised."""
     R = comm.nranks
-    send_ids = [[None] * R for _ in range(R)]
-    send_pay = [[{} for _ in range(R)] for _ in range(R)]
-    for r in range(R):
-        dest = partition_rank_of(ids[r], total, R)
-        for d in range(R):
-            sel = dest == d
-            send_ids[r][d] = ids[r][sel]
-            for k, v in payloads[r].items():
-                send_pay[r][d][k] = v[sel]
-    recv_ids = comm.alltoallv([[a.astype(_INT) for a in row] for row in send_ids])
-    out_ids, out_pay = [], []
     keys = list(payloads[0].keys()) if payloads else []
-    recv_pay = {k: comm.alltoallv([[send_pay[s][d][k] for d in range(R)]
-                                   for s in range(R)]) for k in keys}
-    for d in range(R):
-        cat = np.concatenate(recv_ids[d]) if recv_ids[d] else np.empty(0, _INT)
-        order = np.argsort(cat, kind="stable")
-        out_ids.append(cat[order])
-        pay = {}
+    counts = np.zeros((R, R), dtype=_INT)
+    ids_flat, pay_flat = [], {k: [] for k in keys}
+    for r in range(R):
+        g = np.asarray(ids[r], dtype=_INT)
+        order, counts[r] = _dest_pack(partition_rank_of(g, total, R), R)
+        ids_flat.append(g[order])
         for k in keys:
-            vals = np.concatenate(recv_pay[k][d])
-            pay[k] = vals[order]
-        out_pay.append(pay)
+            pay_flat[k].append(payloads[r][k][order])
+    recv_ids = comm.alltoallv_packed(counts, ids_flat)
+    recv_pay = {k: comm.alltoallv_packed(counts, pay_flat[k]) for k in keys}
+    out_ids, out_pay = [], []
+    for d in range(R):
+        order = np.argsort(recv_ids[d], kind="stable")
+        out_ids.append(recv_ids[d][order])
+        out_pay.append({k: recv_pay[k][d][order] for k in keys})
     return out_ids, out_pay
 
 
@@ -349,28 +355,24 @@ class FEMCheckpoint:
                                        int(starts[m]),
                                        int(starts[m + 1] - starts[m]))
                           for m in range(M)]
-            send = [[t00_cells[m][
-                owner_rows[m][t00_cells[m] - int(starts[m])] == d]
-                for d in range(M)] for m in range(M)]
+            dests = [owner_rows[m][t00_cells[m] - int(starts[m])].astype(_INT)
+                     for m in range(M)]
         elif partition == "contiguous":
-            send = [[None] * M for _ in range(M)]
-            for m in range(M):
-                ords = cell_bases[m] + np.arange(cell_counts[m], dtype=_INT)
-                dest = partition_rank_of(ords, ncells, M)
-                for d in range(M):
-                    send[m][d] = t00_cells[m][dest == d]
+            dests = [partition_rank_of(
+                cell_bases[m] + np.arange(cell_counts[m], dtype=_INT),
+                ncells, M) for m in range(M)]
         elif partition == "random":
-            send = [[None] * M for _ in range(M)]
-            for m in range(M):
-                dest = ((t00_cells[m] * np.int64(2654435761) + seed) % M
-                        ).astype(_INT)
-                for d in range(M):
-                    send[m][d] = t00_cells[m][dest == d]
+            dests = [((t00_cells[m] * np.int64(2654435761) + seed) % M
+                      ).astype(_INT) for m in range(M)]
         else:
             raise ValueError(partition)
-        recv = comm.alltoallv([[a.astype(_INT) for a in row] for row in send])
-        t0_cells = [np.sort(np.concatenate(r)) if r else np.empty(0, _INT)
-                    for r in recv]
+        counts = np.zeros((M, M), dtype=_INT)
+        cells_flat = []
+        for m in range(M):
+            order, counts[m] = _dest_pack(dests[m], M)
+            cells_flat.append(t00_cells[m][order])
+        recv = comm.alltoallv_packed(counts, cells_flat)
+        t0_cells = [np.sort(r) for r in recv]
 
         t0_locg, t0_cmap, t0_dmap = [], [], []
         for m in range(M):
@@ -561,7 +563,6 @@ def _grow_overlap(comm: Comm, E: int, dim: int, owned_cells: list[np.ndarray],
     vertex→cells directory: one alltoallv publish, one query, one answer."""
     assert layers == 1, "the loader grows one overlap layer, as in the paper"
     M = comm.nranks
-    visible = [set(int(c) for c in cs) for cs in owned_cells]
     # publish (vertex -> cell) incidences of owned cells
     pub_v, pub_c = [], []
     for m in range(M):
@@ -579,38 +580,43 @@ def _grow_overlap(comm: Comm, E: int, dim: int, owned_cells: list[np.ndarray],
                 stack.extend(int(q) for q in cone_maps[m][p])
         pub_v.append(np.array(vs, dtype=_INT))
         pub_c.append(np.array(cs, dtype=_INT))
-    send_v = [[None] * M for _ in range(M)]
-    send_c = [[None] * M for _ in range(M)]
+    counts = np.zeros((M, M), dtype=_INT)
+    send_v, send_c = [], []
     for s in range(M):
-        dest = partition_rank_of(pub_v[s], E, M)
-        for d in range(M):
-            sel = dest == d
-            send_v[s][d] = pub_v[s][sel]
-            send_c[s][d] = pub_c[s][sel]
-    rv = comm.alltoallv(send_v)
-    rc = comm.alltoallv(send_c)
-    directory: list[dict[int, set]] = [dict() for _ in range(M)]
+        order, counts[s] = _dest_pack(partition_rank_of(pub_v[s], E, M), M)
+        send_v.append(pub_v[s][order])
+        send_c.append(pub_c[s][order])
+    rv = comm.alltoallv_packed(counts, send_v)
+    rc = comm.alltoallv_packed(counts, send_c)
+    # directory (per canonical rank): sorted unique (vertex, cell) incidences
+    # (2-column unique, not scalar v*E+c key packing, which would overflow
+    # int64 beyond ~3e9 entities — the paper's 8.2B-DoF scale)
+    dir_v, dir_c = [], []
     for d in range(M):
-        for arr_v, arr_c in zip(rv[d], rc[d]):
-            for v, c in zip(arr_v, arr_c):
-                directory[d].setdefault(int(v), set()).add(int(c))
+        vc = np.unique(np.stack([rv[d], rc[d]], axis=1), axis=0)
+        dir_v.append(vc[:, 0])
+        dir_c.append(vc[:, 1])
     # query: my vertices -> all incident cells anywhere
-    qry_v = [np.unique(pv) for pv in pub_v]
-    send_q = [[None] * M for _ in range(M)]
+    qcounts = np.zeros((M, M), dtype=_INT)
+    send_q = []
     for s in range(M):
-        dest = partition_rank_of(qry_v[s], E, M)
-        for d in range(M):
-            send_q[s][d] = qry_v[s][dest == d]
-    rq = comm.alltoallv(send_q)
-    ans = [[None] * M for _ in range(M)]
+        q = np.unique(pub_v[s])
+        order, qcounts[s] = _dest_pack(partition_rank_of(q, E, M), M)
+        send_q.append(q[order])
+    rq = comm.alltoallv_packed(qcounts, send_q)
+    # answer: per querying rank, the sorted-unique incident cells; built as
+    # one CSR expansion per directory rank (no per-(dst, src)-pair work)
+    acounts = np.zeros((M, M), dtype=_INT)
+    send_a = []
     for d in range(M):
-        for s in range(M):
-            cells = set()
-            for v in rq[d][s]:
-                cells.update(directory[d].get(int(v), ()))
-            ans[d][s] = np.array(sorted(cells), dtype=_INT)
-    back = comm.alltoallv(ans)
-    for m in range(M):
-        for arr in back[m]:
-            visible[m].update(int(c) for c in arr)
-    return [np.array(sorted(visible[m]), dtype=_INT) for m in range(M)]
+        src_of_q = np.repeat(np.arange(M, dtype=_INT), qcounts[:, d])
+        lo = np.searchsorted(dir_v[d], rq[d], side="left")
+        hi = np.searchsorted(dir_v[d], rq[d], side="right")
+        cells = dir_c[d][ragged_arange(lo, hi - lo)]
+        tags = np.repeat(src_of_q, hi - lo)
+        tc = np.unique(np.stack([tags, cells], axis=1), axis=0)
+        acounts[d] = np.bincount(tc[:, 0], minlength=M)
+        send_a.append(tc[:, 1])
+    back = comm.alltoallv_packed(acounts, send_a)
+    return [np.unique(np.concatenate([owned_cells[m], back[m]]))
+            for m in range(M)]

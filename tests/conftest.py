@@ -1,0 +1,11 @@
+"""Test bootstrap: make ``repro`` (src layout) and ``benchmarks`` importable
+without requiring PYTHONPATH, so plain ``python -m pytest`` works from any
+checkout."""
+
+import sys
+from pathlib import Path
+
+_REPO = Path(__file__).resolve().parents[1]
+for p in (str(_REPO / "src"), str(_REPO)):
+    if p not in sys.path:
+        sys.path.insert(0, p)

@@ -1,0 +1,117 @@
+"""Minimal vendored stand-in for ``hypothesis`` (property-based testing).
+
+The real library is an *optional* dependency (see requirements.txt); this
+container does not ship it, and a hard ``from hypothesis import ...`` used to
+abort collection of five test modules.  Importing from this module instead
+defers to the real hypothesis when it is installed and otherwise provides the
+small subset the suite uses:
+
+  * ``given(**kwargs)`` with keyword strategies,
+  * ``settings(max_examples=..., deadline=...)`` in either decorator order,
+  * ``strategies.integers(lo, hi)`` and ``strategies.sampled_from(seq)``.
+
+The shim draws deterministically (seeded per test name), always covers the
+strategy boundaries in the first examples, and reports the falsifying draw on
+failure.  It does not shrink.
+"""
+
+from __future__ import annotations
+
+try:                                      # real hypothesis wins when present
+    from hypothesis import given, settings, strategies  # type: ignore  # noqa: F401
+
+    HAVE_REAL_HYPOTHESIS = True
+except ImportError:
+    HAVE_REAL_HYPOTHESIS = False
+
+    import functools
+    import hashlib
+    import inspect
+
+    import numpy as np
+
+    _DEFAULT_MAX_EXAMPLES = 50
+
+    class _Strategy:
+        def draw(self, rng, index: int):
+            raise NotImplementedError
+
+    class _Integers(_Strategy):
+        def __init__(self, min_value: int, max_value: int):
+            assert min_value <= max_value
+            self.min_value, self.max_value = int(min_value), int(max_value)
+
+        def draw(self, rng, index: int) -> int:
+            if index == 0:
+                return self.min_value
+            if index == 1:
+                return self.max_value
+            return int(rng.integers(self.min_value, self.max_value + 1))
+
+        def __repr__(self):
+            return f"integers({self.min_value}, {self.max_value})"
+
+    class _SampledFrom(_Strategy):
+        def __init__(self, elements):
+            self.elements = list(elements)
+            assert self.elements
+
+        def draw(self, rng, index: int):
+            if index < len(self.elements):
+                return self.elements[index]
+            return self.elements[int(rng.integers(len(self.elements)))]
+
+        def __repr__(self):
+            return f"sampled_from({self.elements!r})"
+
+    class strategies:                      # namespace, like hypothesis.strategies
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Integers:
+            return _Integers(min_value, max_value)
+
+        @staticmethod
+        def sampled_from(elements) -> _SampledFrom:
+            return _SampledFrom(elements)
+
+    def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None,
+                 **_ignored):
+        """Works above or below ``@given`` (attribute read at call time)."""
+
+        def deco(fn):
+            fn._shim_settings = {"max_examples": int(max_examples)}
+            return fn
+
+        return deco
+
+    def given(**strats):
+        for name, s in strats.items():
+            assert isinstance(s, _Strategy), (name, s)
+
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                cfg = (getattr(wrapper, "_shim_settings", None)
+                       or getattr(fn, "_shim_settings", None) or {})
+                n = int(cfg.get("max_examples", _DEFAULT_MAX_EXAMPLES))
+                digest = hashlib.sha256(fn.__qualname__.encode()).digest()
+                rng = np.random.default_rng(int.from_bytes(digest[:8], "little"))
+                for i in range(n):
+                    draws = {k: s.draw(rng, i) for k, s in strats.items()}
+                    try:
+                        fn(*args, **kwargs, **draws)
+                    except Exception as e:
+                        raise AssertionError(
+                            f"falsifying example (call {i + 1}/{n} of "
+                            f"{fn.__name__}): {draws!r}\n  {type(e).__name__}: {e}"
+                        ) from e
+
+            # pytest must not see the drawn parameters as fixtures: publish a
+            # signature holding only the pass-through (fixture) parameters
+            sig = inspect.signature(fn)
+            keep = [p for pname, p in sig.parameters.items()
+                    if pname not in strats]
+            wrapper.__signature__ = sig.replace(parameters=keep)
+            del wrapper.__wrapped__
+            return wrapper
+
+        return deco

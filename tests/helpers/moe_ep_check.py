@@ -16,6 +16,12 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.models.moe import moe_ffn, moe_ffn_ep
 
 
+def _ambient_mesh(mesh):
+    """jax>=0.6 ``jax.set_mesh`` / jax 0.4.x Mesh-as-context-manager."""
+    setter = getattr(jax, "set_mesh", None)
+    return setter(mesh) if setter is not None else mesh
+
+
 def main():
     assert len(jax.devices()) == 8, jax.devices()
     mesh = jax.make_mesh((2, 4), ("data", "model"))
@@ -42,7 +48,7 @@ def main():
                             fsdp_axis="data")
         return y, aux
 
-    with jax.set_mesh(mesh):
+    with _ambient_mesh(mesh):
         xs = jax.device_put(x, NamedSharding(mesh, P("data", None, None)))
         wgs = jax.device_put(wg, NamedSharding(mesh, P("model", "data", None)))
         wus = jax.device_put(wu, NamedSharding(mesh, P("model", "data", None)))
@@ -79,7 +85,7 @@ def main():
     wg_p = jnp.pad(wg, ((0, E_pad - E), (0, 0), (0, 0)))
     wu_p = jnp.pad(wu, ((0, E_pad - E), (0, 0), (0, 0)))
     wd_p = jnp.pad(wd, ((0, E_pad - E), (0, 0), (0, 0)))
-    with jax.set_mesh(mesh):
+    with _ambient_mesh(mesh):
         y_pad, aux_pad = jax.jit(
             lambda x: moe_ffn_ep(x, router_p, wg_p, wu_p, wd_p, top_k=K,
                                  capacity_factor=CF, num_real=E, mesh=mesh,

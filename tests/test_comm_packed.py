@@ -1,0 +1,266 @@
+"""Property tests for the packed (CSR) communication substrate and the
+star-forest plan engine.
+
+Three contracts, per the PetscSF-compilation refactor:
+
+  1. ``alltoallv_packed`` / ``neighbor_alltoallv`` move exactly the same
+     data — and account exactly the same bytes — as the reference dense
+     ``send[src][dst]`` semantics;
+  2. plan-based ``bcast``/``reduce`` equal the seed's per-rank-pair
+     reference loops on random star forests (unattached leaves, duplicate
+     roots, multi-dim payloads, every reduce op);
+  3. the fem + tensor save/load round-trips produce byte-for-byte the
+     CommStats of the seed implementation (tests/data/commstats_seed.json,
+     captured before the refactor — the Tables 6.3–6.5 accounting).
+"""
+
+import json
+import pathlib
+
+import numpy as np
+import pytest
+from helpers.hypothesis_shim import given, settings, strategies as st
+
+from repro.core.comm import Comm, CommStats, ragged_arange
+from repro.core.star_forest import SFPlan, StarForest
+
+_INT = np.int64
+
+
+# ------------------------------------------------------- reference semantics
+def _ref_alltoallv(R, send):
+    """Seed implementation: dense transposition + per-pair nbytes."""
+    pair = np.array([[send[s][d].nbytes for d in range(R)] for s in range(R)],
+                    dtype=_INT)
+    stats = CommStats()
+    stats.record(int(pair.sum() - np.trace(pair)), int(np.trace(pair)))
+    return [[send[s][d] for s in range(R)] for d in range(R)], stats
+
+
+def _ref_bcast(sf, root_data):
+    out = []
+    for r in range(sf.nranks_leaf):
+        rr, ri = sf.root_rank[r], sf.root_idx[r]
+        buf = np.zeros((len(rr),) + root_data[0].shape[1:],
+                       dtype=root_data[0].dtype)
+        att = rr >= 0
+        for rtr in np.unique(rr[att]):
+            sel = att & (rr == rtr)
+            buf[sel] = root_data[rtr][ri[sel]]
+        out.append(buf)
+    return out
+
+
+def _ref_reduce(sf, leaf_data, op, root_data):
+    root_data = [a.copy() for a in root_data]
+    for r in range(sf.nranks_leaf):
+        rr, ri = sf.root_rank[r], sf.root_idx[r]
+        att = rr >= 0
+        if not att.any():
+            continue
+        vals, tgt_r, tgt_i = leaf_data[r][att], rr[att], ri[att]
+        for rtr in np.unique(tgt_r):
+            sel = tgt_r == rtr
+            idx, v = tgt_i[sel], vals[sel]
+            if op == "replace":
+                root_data[rtr][idx] = v
+            elif op == "sum":
+                np.add.at(root_data[rtr], idx, v)
+            elif op == "min":
+                np.minimum.at(root_data[rtr], idx, v)
+            elif op == "max":
+                np.maximum.at(root_data[rtr], idx, v)
+    return root_data
+
+
+def _random_sf(rng, n_leaf, n_root, max_n=12, p_unattached=0.3):
+    nroots = [int(rng.integers(0, max_n)) for _ in range(n_root - 1)]
+    nroots.append(int(rng.integers(1, max_n)))      # at least one root slot
+    nleaves = [int(rng.integers(0, max_n)) for _ in range(n_leaf)]
+    rr, ri = [], []
+    for nl in nleaves:
+        r = rng.integers(0, n_root, size=nl)
+        i = np.array([rng.integers(0, max(nroots[int(a)], 1)) for a in r])
+        ok = np.array([nroots[int(a)] > 0 for a in r], dtype=bool)
+        ok &= rng.random(nl) >= p_unattached
+        rr.append(np.where(ok, r, -1).astype(_INT))
+        ri.append(np.where(ok, i, -1).astype(_INT))
+    return StarForest(tuple(nroots), tuple(rr), tuple(ri))
+
+
+# ------------------------------------------------------------ ragged_arange
+@given(n=st.integers(0, 30), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=40)
+def test_ragged_arange(n, seed):
+    rng = np.random.default_rng(seed)
+    starts = rng.integers(0, 100, size=n)
+    lengths = rng.integers(0, 6, size=n)
+    got = ragged_arange(starts, lengths)
+    want = (np.concatenate([np.arange(s, s + l) for s, l in
+                            zip(starts, lengths)]) if n else np.empty(0, _INT))
+    np.testing.assert_array_equal(got, want)
+
+
+# ------------------------------------------------------- packed collectives
+@given(R=st.integers(1, 12), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=40)
+def test_packed_equals_list_alltoallv(R, seed):
+    rng = np.random.default_rng(seed)
+    counts = rng.integers(0, 6, size=(R, R)).astype(_INT)
+    send = [[rng.normal(size=int(counts[s, d])) for d in range(R)]
+            for s in range(R)]
+    ref, ref_stats = _ref_alltoallv(R, send)
+
+    c_list, c_packed = Comm(R), Comm(R)
+    got_list = c_list.alltoallv([[b.copy() for b in row] for row in send])
+    got_packed = c_packed.alltoallv_packed(
+        counts, [np.concatenate(row) for row in send])
+    for d in range(R):
+        for s in range(R):
+            np.testing.assert_array_equal(got_list[d][s], ref[d][s])
+        np.testing.assert_array_equal(
+            got_packed[d],
+            np.concatenate(ref[d]) if ref[d] else np.empty(0))
+    assert c_list.stats == ref_stats
+    assert c_packed.stats == ref_stats
+
+
+@given(R=st.integers(1, 12), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=40)
+def test_neighbor_equals_packed(R, seed):
+    rng = np.random.default_rng(seed)
+    counts = (rng.integers(0, 5, size=(R, R))
+              * (rng.random((R, R)) < 0.4)).astype(_INT)   # sparse
+    send_flat = [rng.integers(0, 1000, size=int(counts[s].sum()))
+                 .astype(_INT) for s in range(R)]
+    c_dense, c_sparse = Comm(R), Comm(R)
+    got_dense = c_dense.alltoallv_packed(counts, send_flat)
+    src, dst = np.nonzero(counts)
+    got_sparse = c_sparse.neighbor_alltoallv(src, dst, counts[src, dst],
+                                             send_flat)
+    for d in range(R):
+        np.testing.assert_array_equal(got_dense[d], got_sparse[d])
+    assert c_dense.stats == c_sparse.stats
+
+
+def test_packed_multidim_rows():
+    R = 3
+    rng = np.random.default_rng(0)
+    counts = rng.integers(0, 4, size=(R, R)).astype(_INT)
+    send = [[rng.normal(size=(int(counts[s, d]), 2, 3)) for d in range(R)]
+            for s in range(R)]
+    comm = Comm(R)
+    got = comm.alltoallv_packed(
+        counts, [np.concatenate(row) if R > 1 else row[0] for row in send])
+    for d in range(R):
+        want = np.concatenate([send[s][d] for s in range(R)])
+        np.testing.assert_array_equal(got[d], want)
+    nbytes = sum(send[s][d].nbytes for s in range(R) for d in range(R)
+                 if s != d)
+    assert comm.stats.bytes_moved == nbytes
+
+
+def test_neighbor_rejects_unsorted_edges():
+    comm = Comm(3)
+    with pytest.raises(AssertionError):
+        comm.neighbor_alltoallv(np.array([1, 0]), np.array([0, 1]),
+                                np.array([1, 1]),
+                                [np.zeros(1), np.zeros(1), np.zeros(0)])
+
+
+# ----------------------------------------------------------- star-forest plan
+@given(n_leaf=st.integers(1, 6), n_root=st.integers(1, 6),
+       seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=60)
+def test_plan_bcast_matches_reference(n_leaf, n_root, seed):
+    rng = np.random.default_rng(seed)
+    sf = _random_sf(rng, n_leaf, n_root)
+    for trailing in ((), (3,)):
+        root_data = [rng.normal(size=(n,) + trailing) for n in sf.nroots]
+        got = sf.bcast(root_data)
+        want = _ref_bcast(sf, root_data)
+        assert len(got) == len(want)
+        for g, w in zip(got, want):
+            np.testing.assert_array_equal(g, w)
+
+
+@given(n_leaf=st.integers(1, 6), n_root=st.integers(1, 6),
+       seed=st.integers(0, 2**31 - 1),
+       op=st.sampled_from(["replace", "sum", "min", "max"]))
+@settings(max_examples=60)
+def test_plan_reduce_matches_reference(n_leaf, n_root, seed, op):
+    rng = np.random.default_rng(seed)
+    sf = _random_sf(rng, n_leaf, n_root)
+    # integer payloads: duplicate-root resolution must match the reference
+    # rank-sequential order *exactly*, with no float-roundoff wiggle room
+    leaf_data = [rng.integers(-50, 50, size=nl).astype(_INT)
+                 for nl in sf.nleaves]
+    init = {"replace": 0, "sum": 0, "min": 10**6, "max": -10**6}[op]
+    root_data = [np.full(n, init, dtype=_INT) for n in sf.nroots]
+    want = _ref_reduce(sf, leaf_data, op, root_data)
+    got = sf.reduce(leaf_data, op, [a.copy() for a in root_data])
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(g, w)
+
+
+@given(n_leaf=st.integers(1, 5), n_root=st.integers(1, 5),
+       seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=40)
+def test_plan_invariants(n_leaf, n_root, seed):
+    rng = np.random.default_rng(seed)
+    sf = _random_sf(rng, n_leaf, n_root)
+    plan: SFPlan = sf.plan
+    n_att = int(sum(int((a >= 0).sum()) for a in sf.root_rank))
+    assert plan.n_attached == n_att == len(plan.scatter)
+    assert int(plan.pair_cnt.sum()) == n_att
+    assert plan.leaf_offsets[-1] == sum(sf.nleaves)
+    assert plan.root_offsets[-1] == sum(sf.nroots)
+    # pair list is the exact nonempty neighborhood
+    want_pairs = set()
+    for r, rr in enumerate(sf.root_rank):
+        for rtr in np.unique(rr[rr >= 0]):
+            want_pairs.add((int(rtr), r))
+    assert set(zip(plan.pair_src.tolist(), plan.pair_dst.tolist())) \
+        == want_pairs
+    # ...and is strictly (src, dst)-sorted, i.e. directly consumable by
+    # Comm.neighbor_alltoallv (square SFs only: one communicator)
+    if n_leaf == n_root and len(plan.pair_src):
+        key = plan.pair_src * n_leaf + plan.pair_dst
+        assert (np.diff(key) > 0).all()
+        send = [np.zeros(int(plan.pair_cnt[plan.pair_src == s].sum()))
+                for s in range(n_root)]
+        Comm(n_root).neighbor_alltoallv(plan.pair_src, plan.pair_dst,
+                                        plan.pair_cnt, send)
+    # split_leafwise inverts the leaf-space concatenation
+    flat = np.arange(int(plan.leaf_offsets[-1]))
+    parts = plan.split_leafwise(flat)
+    assert [len(p) for p in parts] == list(sf.nleaves)
+
+
+# ------------------------------------------------ CommStats byte-for-byte gate
+_SEED_STATS = json.loads(
+    (pathlib.Path(__file__).parent / "data" / "commstats_seed.json")
+    .read_text())
+
+
+@pytest.mark.parametrize("R", [2, 4, 8])
+def test_fem_roundtrip_commstats_match_seed(R):
+    from benchmarks.commstats_probe import fem_roundtrip
+
+    assert fem_roundtrip(R) == _SEED_STATS["fem"][str(R)]
+
+
+@pytest.mark.parametrize("R", [2, 4, 8])
+def test_tensor_roundtrip_commstats_match_seed(R):
+    from benchmarks.commstats_probe import tensor_roundtrip
+
+    assert tensor_roundtrip(R) == _SEED_STATS["tensor"][str(R)]
+
+
+def test_rank_scaling_roundtrip_64_ranks():
+    """Acceptance gate: the bench sweep's save/load round-trip completes at
+    64 simulated ranks (quadratic pre-refactor; linear with packed plans)."""
+    from benchmarks.bench_checkpoint import rank_scaling_roundtrip
+
+    rows = rank_scaling_roundtrip(ranks=(64,), elems_per_rank=1 << 8)
+    assert rows[0]["ranks"] == 64

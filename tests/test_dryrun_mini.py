@@ -5,7 +5,10 @@ import pathlib
 import subprocess
 import sys
 
+import pytest
 
+
+@pytest.mark.slow
 def test_mini_dryrun_compiles_and_analyzes():
     repo = pathlib.Path(__file__).resolve().parents[1]
     env = dict(os.environ)

@@ -13,7 +13,7 @@ import itertools
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from helpers.hypothesis_shim import given, settings, strategies as st
 
 from repro.core.comm import Comm
 from repro.core.star_forest import partition_starts, partition_sizes

@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from helpers.hypothesis_shim import given, settings, strategies as st
 
 from repro.kernels.ckpt_pack.ops import pack_chunks
 from repro.kernels.ckpt_pack.ref import ckpt_pack_ref

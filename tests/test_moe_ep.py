@@ -10,7 +10,10 @@ import pathlib
 import subprocess
 import sys
 
+import pytest
 
+
+@pytest.mark.slow
 def test_moe_ep_matches_dense_oracle():
     repo = pathlib.Path(__file__).resolve().parents[1]
     env = dict(os.environ)

@@ -5,7 +5,7 @@ from __future__ import annotations
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from helpers.hypothesis_shim import given, settings, strategies as st
 
 from repro.launch.hlo_analysis import (
     Metrics,

@@ -8,7 +8,7 @@ PetscSFReduce / PetscSFCompose analogues, and inversion of bijective SFs
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from helpers.hypothesis_shim import given, settings, strategies as st
 
 from repro.core.comm import Comm
 from repro.core.star_forest import (

@@ -7,7 +7,7 @@ need not align with saved chunks), and require bitwise equality.
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from helpers.hypothesis_shim import given, settings, strategies as st
 
 from repro.core.chunk_layout import (
     ArraySpec, Box, ChunkGrid, StateLayout, row_major_ids,

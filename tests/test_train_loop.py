@@ -25,6 +25,8 @@ from repro.train.step import (
     train_state_specs,
 )
 
+pytestmark = pytest.mark.slow      # jit-heavy end-to-end loops
+
 SHAPE = ShapeConfig("t", 32, 4, "train")
 
 
