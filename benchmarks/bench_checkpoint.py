@@ -67,6 +67,7 @@ def stripe_sweep(elems_per_rank: int = 1 << 17) -> list[dict]:
                          "GiB": round(gib, 3),
                          "seconds": round(dt, 3),
                          "GiB_per_s": round(gib / dt, 2)})
+            store.close()
             shutil.rmtree(tmp)
     return rows
 
@@ -99,6 +100,7 @@ def weak_scaling_save(elems_per_rank: int = 1 << 17) -> list[dict]:
             "vec_GiB_per_s": round(vec_bytes / 2 ** 30 / max(t_vec, 1e-9),
                                    2),
         })
+        store.close()
         shutil.rmtree(tmp)
     return rows
 
@@ -127,6 +129,7 @@ def weak_scaling_load(elems_per_rank: int = 1 << 17) -> list[dict]:
                      "seconds": round(dt, 3),
                      "read_GiB": round(gib, 3),
                      "GiB_per_s": round(gib / dt, 2)})
+        store.close()
         shutil.rmtree(tmp)
     return rows
 
@@ -158,6 +161,7 @@ def weak_scaling_load_exact(elems_per_rank: int = 1 << 17) -> list[dict]:
                      "exact_s": round(t_exact, 4),
                      "general_s": round(t_gen, 4),
                      "speedup": round(t_gen / max(t_exact, 1e-9), 2)})
+        store.close()
         shutil.rmtree(tmp)
     return rows
 
@@ -179,6 +183,7 @@ def timeseries_append(elems_per_rank: int = 1 << 16,
         times.append(time.perf_counter() - t0)
     sections = [d for d in store.datasets() if d.endswith("/G")]
     vecs = [d for d in store.datasets() if d.endswith("/vec")]
+    store.close()
     shutil.rmtree(tmp)
     return {"steps": steps,
             "sections_written": len(sections),
@@ -187,15 +192,17 @@ def timeseries_append(elems_per_rank: int = 1 << 16,
             "later_steps_s": round(float(np.mean(times[1:])), 4)}
 
 
-def rank_scaling_roundtrip(ranks=(2, 4, 8, 16, 32, 64),
-                           elems_per_rank: int = 1 << 14) -> list[dict]:
+def rank_scaling_roundtrip(ranks=(2, 4, 8, 16, 32, 64, 128, 256, 512, 1024),
+                           elems_per_rank: int = 1 << 12) -> list[dict]:
     """Rank-scaling sweep (the paper's headline axis, §6): full save +
     general-path N-to-M load round-trip at growing simulated rank counts.
 
     Infeasible pre-refactor: the dense list-of-lists collectives and the
-    per-rank-pair star-forest loops made R > ~16 quadratically slow.  With
-    the packed plans this sweeps to R = 64 in seconds; wire bytes come from
-    the exact CommStats accounting (Tables 6.3–6.5 analogues)."""
+    per-rank-pair star-forest loops made R > ~16 quadratically slow.  The
+    packed plans took the sweep to R = 64; with the CSR topology engine the
+    per-rank bookkeeping is O(edges), so the sweep now runs to R = 1024 in
+    seconds.  Wire bytes come from the exact CommStats accounting
+    (Tables 6.3–6.5 analogues)."""
     rows = []
     for nranks in ranks:
         total = nranks * elems_per_rank
@@ -232,6 +239,7 @@ def rank_scaling_roundtrip(ranks=(2, 4, 8, 16, 32, 64),
             "load_GiB_per_s": round(gib / max(t_load, 1e-9), 2),
             "read_MiB": round(store.stats.bytes_read / 2 ** 20, 2),
         })
+        store.close()
         shutil.rmtree(tmp)
     return rows
 

@@ -58,6 +58,31 @@ def fem_roundtrip(R: int) -> dict:
         return {"save": dataclasses.asdict(comm_s.stats),
                 "load": dataclasses.asdict(comm_l.stats)}
     finally:
+        store.close()
+        shutil.rmtree(tmp)
+
+
+def mesh_load(R: int) -> dict:
+    """Mesh-only load path: save once from 4 ranks, reload on R ranks under
+    both the contiguous and the random repartition (the Appendix B three-step
+    reconstruction, coordinates included)."""
+    mesh = tri_mesh(5, 4, seed=21)
+    comm_s = Comm(4)
+    plexes, _, _ = distribute(mesh, 4, method="contiguous", seed=0)
+    tmp = tempfile.mkdtemp(prefix="probe_meshload_")
+    try:
+        store = DatasetStore(tmp, "w")
+        ck = FEMCheckpoint(store)
+        ck.save_mesh("m", plexes, comm_s,
+                     labels={"dimlabel": [lp.dims.copy() for lp in plexes]})
+        out = {}
+        for part, seed in (("contiguous", 0), ("random", 29)):
+            comm_l = Comm(R)
+            ck.load_mesh("m", comm_l, partition=part, seed=seed)
+            out[part] = dataclasses.asdict(comm_l.stats)
+        return out
+    finally:
+        store.close()
         shutil.rmtree(tmp)
 
 
@@ -87,12 +112,14 @@ def tensor_roundtrip(R: int, elems_per_rank: int = 1 << 10) -> dict:
         return {"save": dataclasses.asdict(comm_s.stats),
                 "load": dataclasses.asdict(comm_l.stats)}
     finally:
+        store.close()
         shutil.rmtree(tmp)
 
 
 def probe(ranks=(2, 4, 8)) -> dict:
     return {
         "fem": {R: fem_roundtrip(R) for R in ranks},
+        "mesh_load": {R: mesh_load(R) for R in ranks},
         "tensor": {R: tensor_roundtrip(R) for R in ranks},
     }
 

@@ -38,8 +38,11 @@ def main(argv=None):
                  bc.weak_scaling_load(elems_per_rank=scale))
     _print_table("Table 6.5 analogue: same-count exact reload",
                  bc.weak_scaling_load_exact(elems_per_rank=scale))
-    _print_table("Rank scaling: save/load round-trip to R=64",
+    rank_sweep = (2, 4, 8, 16, 32, 64) if args.quick \
+        else (2, 4, 8, 16, 32, 64, 128, 256, 512, 1024)
+    _print_table("Rank scaling: save/load round-trip",
                  bc.rank_scaling_roundtrip(
+                     ranks=rank_sweep,
                      elems_per_rank=max(scale >> 3, 1 << 10)))
     print("\n== §2.2.7: time-series appends (section saved once) ==")
     print(json.dumps(bc.timeseries_append(elems_per_rank=scale // 2),
@@ -47,12 +50,18 @@ def main(argv=None):
     _print_table("Beyond-paper: in-memory elastic reshard",
                  bc.reshard_bench(elems=scale * 32))
 
-    from benchmarks.bench_fem import fem_weak_scaling
+    from benchmarks.bench_fem import fem_rank_sweep, fem_weak_scaling
 
     sizes = ((4, 4), (6, 6), (8, 8)) if args.quick \
         else ((8, 8), (12, 12), (16, 16))
     _print_table("Paper Tables 6.3/6.4 (FE path, P4 triangles)",
                  fem_weak_scaling(sizes=sizes))
+    if args.quick:
+        _print_table("FE mesh+function rank sweep (CSR topology engine)",
+                     fem_rank_sweep(ranks=(8, 32, 64), nx=32, ny=32))
+    else:
+        _print_table("FE mesh+function rank sweep (CSR topology engine)",
+                     fem_rank_sweep())
 
     from benchmarks import roofline
 

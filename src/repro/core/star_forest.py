@@ -194,6 +194,30 @@ class StarForest:
             ri.append(g - starts[r])
         return StarForest(tuple(int(s) for s in root_sizes), tuple(rr), tuple(ri))
 
+    @staticmethod
+    def from_sorted_global_numbers(
+        leaf_globals: Sequence[np.ndarray], total: int, nranks_root: int
+    ) -> "StarForest":
+        """:meth:`from_global_numbers` for *presorted* per-rank id arrays
+        (ascending).  The per-root-rank segmentation is found by bisecting the
+        R + 1 partition bounds into each sorted id array — O(R log n) per rank
+        instead of O(n log R) — and root indices follow from one ``repeat``.
+        The sorted-id case is the common one on the load path: closure ids,
+        ownership candidates, and directory publishes are all sorted sets."""
+        root_sizes = partition_sizes(total, nranks_root)
+        starts = np.concatenate([[0], np.cumsum(root_sizes)])
+        rr, ri = [], []
+        for g in leaf_globals:
+            g = np.asarray(g, dtype=_INT)
+            assert g.size == 0 or (np.diff(g) >= 0).all(), \
+                "from_sorted_global_numbers: ids must be ascending"
+            cut = np.searchsorted(g, starts)
+            r = np.repeat(np.arange(nranks_root, dtype=_INT), np.diff(cut))
+            rr.append(r)
+            ri.append(g - starts[r])
+        return StarForest(tuple(int(s) for s in root_sizes), tuple(rr),
+                          tuple(ri))
+
     # ------------------------------------------------------------- operations
     def bcast(self, root_data: Sequence[np.ndarray]) -> list[np.ndarray]:
         """Copy root values to attached leaves (PetscSFBcast).

@@ -68,6 +68,7 @@ class DatasetStore:
         self.mode = mode
         self.buffer_rows = buffer_rows
         self.stats = IOStats()
+        self._read_fds: dict[str, Any] = {}   # dataset -> cached read handle
         if mode == "w":
             os.makedirs(root, exist_ok=True)
             self._meta = {"datasets": {}, "attrs": {}}
@@ -75,6 +76,34 @@ class DatasetStore:
         else:
             with open(self._meta_path()) as f:
                 self._meta = json.load(f)
+
+    # ------------------------------------------------------ read-handle cache
+    def _reader(self, name: str):
+        """Cached read handle (the loader's closure fetch issues thousands of
+        scattered reads; re-opening per call dominated wall time)."""
+        f = self._read_fds.get(name)
+        if f is None:
+            f = open(self._path(name), "rb")
+            self._read_fds[name] = f
+        return f
+
+    def _invalidate_reader(self, name: str) -> None:
+        """Drop the cached handle before any write so no stale buffered data
+        survives a write-then-read on the same dataset."""
+        f = self._read_fds.pop(name, None)
+        if f is not None:
+            f.close()
+
+    def close(self) -> None:
+        for f in self._read_fds.values():
+            f.close()
+        self._read_fds.clear()
+
+    def __del__(self):  # best-effort; refcounting frees handles promptly
+        try:
+            self.close()
+        except Exception:
+            pass
 
     # ------------------------------------------------------------- metadata
     def _meta_path(self) -> str:
@@ -124,6 +153,7 @@ class DatasetStore:
         info = {"rows": int(rows), "row_shape": [int(s) for s in row_shape],
                 "dtype": str(np_dtype(dtype))}
         self._meta["datasets"][name] = info
+        self._invalidate_reader(name)
         nbytes = self._row_nbytes(info) * int(rows)
         with open(self._path(name), "wb") as f:
             if nbytes:
@@ -148,6 +178,7 @@ class DatasetStore:
         assert data.shape[1:] == tuple(info["row_shape"]), (
             f"{name}: row shape {data.shape[1:]} != {info['row_shape']}")
         assert 0 <= start and start + data.shape[0] <= info["rows"]
+        self._invalidate_reader(name)
         t0 = time.perf_counter()
         buf_rows = self.buffer_rows or data.shape[0] or 1
         with open(self._path(name), "r+b") as f:
@@ -169,6 +200,7 @@ class DatasetStore:
         assert row_idx.ndim == 1 and data.shape[0] == row_idx.shape[0]
         if row_idx.size == 0:
             return
+        self._invalidate_reader(name)
         order = np.argsort(row_idx, kind="stable")
         row_idx, data = row_idx[order], data[order]
         t0 = time.perf_counter()
@@ -189,9 +221,9 @@ class DatasetStore:
         info = self._info(name)
         rb = self._row_nbytes(info)
         t0 = time.perf_counter()
-        with open(self._path(name), "rb") as f:
-            f.seek(start * rb)
-            raw = f.read(count * rb)
+        f = self._reader(name)
+        f.seek(start * rb)
+        raw = f.read(count * rb)
         self.stats.read_seconds += time.perf_counter() - t0
         self.stats.read_calls += 1
         self.stats.bytes_read += len(raw)
@@ -212,14 +244,14 @@ class DatasetStore:
         starts = np.concatenate([[0], breaks, [sorted_idx.size]])
         rb = self._row_nbytes(info)
         t0 = time.perf_counter()
-        with open(self._path(name), "rb") as f:
-            for a, b in zip(starts[:-1], starts[1:]):
-                f.seek(int(sorted_idx[a]) * rb)
-                raw = f.read((b - a) * rb)
-                self.stats.read_calls += 1
-                self.stats.bytes_read += len(raw)
-                out[order[a:b]] = np.frombuffer(
-                    raw, dtype=np_dtype(info["dtype"])
-                ).reshape((b - a, *info["row_shape"]))
+        f = self._reader(name)
+        for a, b in zip(starts[:-1], starts[1:]):
+            f.seek(int(sorted_idx[a]) * rb)
+            raw = f.read((b - a) * rb)
+            self.stats.read_calls += 1
+            self.stats.bytes_read += len(raw)
+            out[order[a:b]] = np.frombuffer(
+                raw, dtype=np_dtype(info["dtype"])
+            ).reshape((b - a, *info["row_shape"]))
         self.stats.read_seconds += time.perf_counter() - t0
         return out

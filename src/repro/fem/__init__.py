@@ -11,7 +11,8 @@ The JAX training-framework adaptation of the same algorithm lives in
 ``repro.core.star_forest`` and ``repro.core.store``.
 """
 
-from repro.fem.plex import Plex, LocalPlex, distribute, interval_mesh, tri_mesh
+from repro.fem.plex import (Plex, LocalPlex, distribute, interval_mesh,
+                            tri_mesh, tri_mesh_fast)
 from repro.fem.element import Element
 from repro.fem.section import FunctionSpace
 from repro.fem.function import Function, interpolate, node_points
@@ -19,6 +20,7 @@ from repro.fem.checkpoint import FEMCheckpoint
 
 __all__ = [
     "Plex", "LocalPlex", "distribute", "interval_mesh", "tri_mesh",
+    "tri_mesh_fast",
     "Element", "FunctionSpace", "Function", "interpolate", "node_points",
     "FEMCheckpoint",
 ]

@@ -25,6 +25,19 @@ Load side (M ranks, M independent of N):
                           χ_{I_T}^{I_P} = (χ_{I_P}^{L_P})⁻¹ ∘ χ_{I_T}^{L_P}
                           (2.17), entity→DoF lift (2.22–2.23), and the final
                           broadcast VEC_T[j_T] = VEC_P[χ(j_T)] (2.24).
+
+CSR load path
+-------------
+Every transient per-rank topology fragment on the load side is a
+:class:`TopoCSR`: a *sorted* array of global ids with aligned dims and CSR
+cones whose entries are **positions into that id array** (a closed set always
+resolves).  Transitive closure of the on-disk topology
+(``_close_topology``), ownership resolution (``_resolve_owners``) and overlap
+growth (``_grow_overlap``) are frontier-based vectorised BFS over these
+arrays — O(edges) work and no per-entity Python — so simulated loader rank
+counts in the hundreds-to-thousands stay cheap while the CommStats byte
+accounting is unchanged from the reference implementation (locked by
+``tests/test_comm_packed.py`` against ``tests/data/commstats_seed.json``).
 """
 
 from __future__ import annotations
@@ -45,6 +58,10 @@ from repro.fem.function import Function
 from repro.fem.plex import (
     LocalPlex,
     _local_order,
+    csr_closure,
+    csr_closure_pairs,
+    csr_offsets,
+    in_sorted,
     location_directory,
     location_query,
 )
@@ -101,6 +118,63 @@ def chi_to_LP(loc_g_list: list[np.ndarray], total: int) -> StarForest:
     return StarForest.from_global_numbers(loc_g_list, total, len(loc_g_list))
 
 
+# ==================================================== transient CSR topology
+@dataclasses.dataclass
+class TopoCSR:
+    """A closed per-rank topology fragment read off disk.
+
+    ``ids`` is sorted unique global numbers; ``dims[i]`` the dimension of
+    ``ids[i]``; the cone of ``ids[i]`` is
+    ``cone_pos[offsets[i]:offsets[i + 1]]`` — *positions into* ``ids``
+    (closure guarantees resolution), order preserved from the file.
+    """
+
+    ids: np.ndarray                # [n] sorted global ids
+    dims: np.ndarray               # [n]
+    offsets: np.ndarray            # [n + 1]
+    cone_pos: np.ndarray           # [nnz] positions into ids
+
+    @classmethod
+    def empty(cls) -> "TopoCSR":
+        return cls(np.empty(0, _INT), np.empty(0, _INT), np.zeros(1, _INT),
+                   np.empty(0, _INT))
+
+    @property
+    def n(self) -> int:
+        return len(self.ids)
+
+    def positions_of(self, globals_: np.ndarray) -> np.ndarray:
+        """Positions of global ids (every id must be present) — one
+        searchsorted, guarded so an absent id fails loudly instead of
+        aliasing an unrelated position."""
+        g = np.asarray(globals_, dtype=_INT)
+        pos = np.minimum(np.searchsorted(self.ids, g),
+                         max(self.n - 1, 0))
+        assert g.size == 0 or (self.n > 0 and (self.ids[pos] == g).all()), \
+            "TopoCSR.positions_of: id not in this fragment"
+        return pos
+
+    def closure_of(self, cell_globals: np.ndarray) -> np.ndarray:
+        """Sorted global ids transitively reachable from ``cell_globals``."""
+        if len(cell_globals) == 0:
+            return np.empty(0, _INT)
+        pos = csr_closure(self.offsets, self.cone_pos,
+                          self.positions_of(cell_globals))
+        return self.ids[pos]
+
+    def vertex_incidence_of(self, cell_globals: np.ndarray
+                            ) -> tuple[np.ndarray, np.ndarray]:
+        """Unique (vertex global id, seed cell global id) incidence pairs of
+        the tagged closure — the published rows of overlap growth."""
+        if len(cell_globals) == 0:
+            return np.empty(0, _INT), np.empty(0, _INT)
+        tags, pts = csr_closure_pairs(self.offsets, self.cone_pos,
+                                      cell_globals,
+                                      self.positions_of(cell_globals))
+        m = self.dims[pts] == 0
+        return self.ids[pts[m]], tags[m]
+
+
 # ============================================================ loaded mesh box
 @dataclasses.dataclass
 class LoadedMesh:
@@ -123,7 +197,6 @@ class FEMCheckpoint:
     def save_mesh(self, name: str, plexes: list[LocalPlex], comm: Comm,
                   labels: dict[str, list[np.ndarray]] | None = None) -> None:
         st, N = self.store, comm.nranks
-        owned_counts = [int(lp.owned.sum()) for lp in plexes]
         owned_ids = [lp.loc_g[lp.owned] for lp in plexes]
         E = int(max((ids.max(initial=-1) for ids in owned_ids), default=-1)) + 1
         gdim = next((lp.vcoords.shape[1] for lp in plexes
@@ -131,17 +204,16 @@ class FEMCheckpoint:
         dim = plexes[0].dim
 
         # ---- topology: cones in global numbering, rows indexed by I --------
-        cone_sz = [np.array([len(plexes[r].cones[i])
-                             for i in np.flatnonzero(plexes[r].owned)], dtype=_INT)
-                   for r in range(N)]
-        cone_flat = [np.concatenate(
-            [plexes[r].loc_g[plexes[r].cones[i]]
-             for i in np.flatnonzero(plexes[r].owned)] or [np.empty(0, _INT)]
-        ).astype(_INT) for r in range(N)]
-        dims_payload = [plexes[r].dims[plexes[r].owned].astype(_INT)
-                        for r in range(N)]
-        owner_payload = [plexes[r].owner[plexes[r].owned].astype(_INT)
-                         for r in range(N)]
+        # one CSR gather per rank: owned entities' cone slices, local → global
+        cone_sz, cone_flat = [], []
+        for lp in plexes:
+            sel = np.flatnonzero(lp.owned)
+            sz = lp.cone_offsets[sel + 1] - lp.cone_offsets[sel]
+            flat = lp.cone_indices[ragged_arange(lp.cone_offsets[sel], sz)]
+            cone_sz.append(sz.astype(_INT))
+            cone_flat.append(lp.loc_g[flat].astype(_INT))
+        dims_payload = [lp.dims[lp.owned].astype(_INT) for lp in plexes]
+        owner_payload = [lp.owner[lp.owned].astype(_INT) for lp in plexes]
 
         ids_c, pay_c = _route_rows(
             comm, E, owned_ids,
@@ -201,9 +273,9 @@ class FEMCheckpoint:
             funcs = []
             for lp, sp in zip(plexes, spaces):
                 vals = np.zeros(sp.ndof_local)
-                for i in range(lp.num_entities):
-                    if lp.dims[i] == 0:
-                        vals[sp.loc_off[i]:sp.loc_off[i] + gdim] = lp.vcoords[i]
+                vm = np.flatnonzero(lp.dims == 0)
+                vals[sp.loc_off[vm][:, None] + np.arange(gdim)] = \
+                    lp.vcoords[vm]
                 funcs.append(Function(sp, vals))
             self.save_function(name, "__coordinates", funcs, comm)
 
@@ -253,66 +325,78 @@ class FEMCheckpoint:
         st.create(vec_name, D, dtype="float64")
         for r in range(N):
             sp, s = spaces[r], sel[r]
-            chunks = [funcs[r].values[sp.loc_off[i]:sp.loc_off[i] + sp.loc_dof[i]]
-                      for i in s]
-            vals = (np.concatenate(chunks) if chunks
-                    else np.empty(0, np.float64))
+            vals = funcs[r].values[ragged_arange(sp.loc_off[s], sp.loc_dof[s])]
             st.write_rows(vec_name, d_base[r], vals)
         st.set_attrs(f"{mesh}/func/{fname}/meta", {"section": key})
 
     # ------------------------------------------------------------- load mesh
     def _fetch_entities(self, name: str, ids: np.ndarray
-                        ) -> tuple[np.ndarray, np.ndarray, list[np.ndarray]]:
-        """Random-access read of (dims, cone) rows for arbitrary global ids —
-        the loader's closure fetch (a parallel-filesystem read, like HDF5)."""
+                        ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Random-access read of (dims, cone sizes, flat cones) for arbitrary
+        global ids — the loader's closure fetch (a parallel-filesystem read,
+        like HDF5).  Cones come back as one flat global-number array,
+        segmented by the returned sizes."""
         st = self.store
         dims = st.read_rows_at(f"{name}/topology/dims", ids)
-        off0 = st.read_rows_at(f"{name}/topology/cone_offsets", ids)
-        off1 = st.read_rows_at(f"{name}/topology/cone_offsets", ids + 1)
-        rows = np.concatenate([np.arange(a, b, dtype=_INT)
-                               for a, b in zip(off0, off1)] or
-                              [np.empty(0, _INT)])
-        flat = st.read_rows_at(f"{name}/topology/cones", rows)
-        cones, p = [], 0
-        for a, b in zip(off0, off1):
-            n = int(b - a)
-            cones.append(flat[p:p + n].astype(_INT))
-            p += n
-        return dims.astype(_INT), (off1 - off0).astype(_INT), cones
+        # one scattered read for both offset bounds: [id, id + 1] rows
+        # interleave into longer contiguous runs than two separate fetches
+        both = np.unique(np.concatenate([ids, ids + 1]))
+        offs = st.read_rows_at(f"{name}/topology/cone_offsets", both)
+        off0 = offs[np.searchsorted(both, ids)]
+        off1 = offs[np.searchsorted(both, ids + 1)]
+        sizes = (off1 - off0).astype(_INT)
+        rows = ragged_arange(off0.astype(_INT), sizes)
+        flat = st.read_rows_at(f"{name}/topology/cones", rows).astype(_INT)
+        return dims.astype(_INT), sizes, flat
 
-    def _close_topology(self, name: str, seed_ids: np.ndarray
-                        ) -> tuple[np.ndarray, dict[int, np.ndarray],
-                                   dict[int, int]]:
-        """Transitively fetch cones until closed; returns (sorted ids,
-        id->cone map (global numbers), id->dim map)."""
-        cones: dict[int, np.ndarray] = {}
-        dims: dict[int, int] = {}
-        frontier = np.unique(seed_ids.astype(_INT))
+    def _close_topology(self, name: str, seed_ids: np.ndarray) -> TopoCSR:
+        """Transitively fetch cones until closed.  Frontier BFS: each round
+        fetches the whole frontier in one scattered read and keeps the unseen
+        cone targets; the fetched batches are then stitched into one sorted
+        CSR fragment with a single argsort + ragged gather."""
+        seen = np.unique(np.asarray(seed_ids, dtype=_INT))
+        if seen.size == 0:
+            return TopoCSR.empty()
+        frontier = seen
+        b_ids, b_dims, b_sizes, b_flat = [], [], [], []
         while frontier.size:
-            d, _, cs = self._fetch_entities(name, frontier)
-            new = []
-            for g, dd, cone in zip(frontier, d, cs):
-                cones[int(g)] = cone
-                dims[int(g)] = int(dd)
-                new.append(cone)
-            nxt = np.unique(np.concatenate(new)) if new else np.empty(0, _INT)
-            frontier = nxt[~np.isin(nxt, np.fromiter(cones, _INT, len(cones)))]
-        ids = np.array(sorted(cones), dtype=_INT)
-        return ids, cones, dims
+            d, sz, flat = self._fetch_entities(name, frontier)
+            b_ids.append(frontier)
+            b_dims.append(d)
+            b_sizes.append(sz)
+            b_flat.append(flat)
+            nxt = np.unique(flat)
+            frontier = nxt[~in_sorted(nxt, seen)]
+            seen = np.union1d(seen, frontier)
+        ids = np.concatenate(b_ids)
+        dims = np.concatenate(b_dims)
+        sizes = np.concatenate(b_sizes)
+        flat = np.concatenate(b_flat)
+        starts = (np.cumsum(sizes) - sizes).astype(_INT)
+        order = np.argsort(ids)            # batches are disjoint -> unique
+        sizes_s = sizes[order]
+        offsets = csr_offsets(sizes_s)
+        flat_s = flat[ragged_arange(starts[order], sizes_s)]
+        ids_s = ids[order]
+        return TopoCSR(ids_s, dims[order], offsets,
+                       np.searchsorted(ids_s, flat_s).astype(_INT))
 
-    def _build_local(self, ids: np.ndarray, cones: dict[int, np.ndarray],
-                     dims: dict[int, int], rank: int,
+    def _build_local(self, topo: TopoCSR, rank: int,
                      dim: int, gdim: int) -> LocalPlex:
-        order_ids = _local_order(set(int(g) for g in ids), _DimsView(dims)) \
-            if ids.size else np.empty(0, _INT)
-        g2l = {int(g): i for i, g in enumerate(order_ids)}
-        lcones = [np.array([g2l[int(q)] for q in cones[int(g)]], dtype=_INT)
-                  for g in order_ids]
-        ldims = np.array([dims[int(g)] for g in order_ids], dtype=_INT) \
-            if order_ids.size else np.empty(0, _INT)
-        vc = np.full((len(order_ids), gdim), np.nan)
-        owner = np.full(len(order_ids), -1, dtype=_INT)
-        return LocalPlex(dim, ldims, lcones, order_ids, owner, rank, vc)
+        """Reorder a closed fragment into the deterministic local numbering
+        (cells, faces, vertices; ascending global id within a dimension) —
+        one lexsort plus one ragged cone gather."""
+        perm = np.lexsort((topo.ids, -topo.dims))
+        order_ids = topo.ids[perm]
+        inv = np.empty(topo.n, dtype=_INT)
+        inv[perm] = np.arange(topo.n, dtype=_INT)
+        sizes = (topo.offsets[1:] - topo.offsets[:-1])[perm]
+        flat_pos = topo.cone_pos[ragged_arange(topo.offsets[perm], sizes)]
+        cone_offsets = csr_offsets(sizes)
+        vc = np.full((topo.n, gdim), np.nan)
+        owner = np.full(topo.n, -1, dtype=_INT)
+        return LocalPlex(dim, topo.dims[perm], cone_offsets, inv[flat_pos],
+                         order_ids, owner, rank, vc)
 
     def load_mesh(self, name: str, comm: Comm, *, partition: str = "contiguous",
                   seed: int = 0, overlap: int = 1,
@@ -323,23 +407,17 @@ class FEMCheckpoint:
         starts = partition_starts(E, M)
 
         # ---- Step 1 (DMPlexTopologyLoad): naive canonical partition → T00 --
-        t00_ids, t00_cones, t00_dims, t00_cells = [], [], [], []
+        t00_topos, t00_cells, t00_locg = [], [], []
         for m in range(M):
             a, b = int(starts[m]), int(starts[m + 1])
             chunk = np.arange(a, b, dtype=_INT)
-            ids, cones, dims = self._close_topology(name, chunk) \
-                if chunk.size else (np.empty(0, _INT), {}, {})
-            t00_ids.append(ids)
-            t00_cones.append(cones)
-            t00_dims.append(dims)
-            t00_cells.append(np.array([g for g in chunk
-                                       if dims.get(int(g)) == dim], dtype=_INT))
-        # T00 local numbering: canonical chunk first (ascending), then ghosts.
-        t00_locg = []
-        for m in range(M):
-            a, b = int(starts[m]), int(starts[m + 1])
-            chunk = np.arange(a, b, dtype=_INT)
-            ghosts = np.setdiff1d(t00_ids[m], chunk)
+            topo = self._close_topology(name, chunk)
+            t00_topos.append(topo)
+            pos = topo.positions_of(chunk)
+            t00_cells.append(chunk[topo.dims[pos] == dim]
+                             if chunk.size else chunk)
+            # T00 local numbering: canonical chunk first (ascending), ghosts
+            ghosts = np.setdiff1d(topo.ids, chunk)
             t00_locg.append(np.concatenate([chunk, ghosts]))
         chi_T00_LP = chi_to_LP(t00_locg, E)
 
@@ -374,18 +452,10 @@ class FEMCheckpoint:
         recv = comm.alltoallv_packed(counts, cells_flat)
         t0_cells = [np.sort(r) for r in recv]
 
-        t0_locg, t0_cmap, t0_dmap = [], [], []
-        for m in range(M):
-            ids, cones, dims = self._close_topology(name, t0_cells[m]) \
-                if t0_cells[m].size else (np.empty(0, _INT), {}, {})
-            t0_locg.append(ids)
-            t0_cmap.append(cones)
-            t0_dmap.append(dims)
+        t0_topos = [self._close_topology(name, t0_cells[m]) for m in range(M)]
         # order T0 local numbering like the final rule for determinism
-        t0_locg = [(_local_order(set(int(g) for g in ids), _DimsView(dm))
-                    if ids.size else np.empty(0, _INT))
-                   for ids, dm in zip(t0_locg, t0_dmap)]
-        t0_owner = _resolve_owners(comm, E, t0_locg, t0_cells, t0_cmap)
+        t0_locg = [_local_order(t.ids, t.dims) for t in t0_topos]
+        t0_owner = _resolve_owners(comm, E, t0_locg, t0_cells, t0_topos)
         # χ_{I_T0}^{I_T00}: root = T00 copy on the canonical rank of g
         rr = [partition_rank_of(g, E, M) for g in t0_locg]
         ri = [g - starts[r] for g, r in zip(t0_locg, rr)]
@@ -396,24 +466,18 @@ class FEMCheckpoint:
         # ---- Step 3 (DMPlexDistributeOverlap): grow overlap → T ------------
         final_cells = t0_cells
         if overlap:
-            final_cells = _grow_overlap(comm, E, dim, t0_cells, t0_cmap,
-                                        t0_dmap, overlap)
+            final_cells = _grow_overlap(comm, E, t0_cells, t0_topos, overlap)
+        t_topos = [self._close_topology(name, final_cells[m])
+                   for m in range(M)]
+        t_owner = _resolve_owners(comm, E, [t.ids for t in t_topos],
+                                  t0_cells, t_topos)
         plexes: list[LocalPlex] = []
-        t_locg, t_cmaps, t_dmaps = [], [], []
         for m in range(M):
-            ids, cones, dims = self._close_topology(name, final_cells[m]) \
-                if final_cells[m].size else (np.empty(0, _INT), {}, {})
-            t_locg.append(ids)
-            t_cmaps.append(cones)
-            t_dmaps.append(dims)
-        t_owner = _resolve_owners(comm, E, t_locg, t0_cells, t_cmaps)
-        for m in range(M):
-            lp = self._build_local(t_locg[m], t_cmaps[m], t_dmaps[m],
-                                   m, dim, gdim)
-            # owner array aligned to the final local order
-            pos = {int(g): i for i, g in enumerate(t_locg[m])}
+            lp = self._build_local(t_topos[m], m, dim, gdim)
+            # owner array (aligned to sorted ids) -> final local order
             if lp.loc_g.size:
-                lp.owner = t_owner[m][[pos[int(g)] for g in lp.loc_g]].astype(_INT)
+                lp.owner = t_owner[m][t_topos[m].positions_of(lp.loc_g)
+                                      ].astype(_INT)
             plexes.append(lp)
 
         # χ_{I_T}^{I_T0}: directory over T0, queried with final LocG ---------
@@ -445,10 +509,9 @@ class FEMCheckpoint:
         if st.has_attrs(f"{name}/func/__coordinates/meta"):
             spaces, funcs = self.load_function(mesh, "__coordinates", comm)
             for lp, sp, f in zip(plexes, spaces, funcs):
-                for i in range(lp.num_entities):
-                    if lp.dims[i] == 0:
-                        lp.vcoords[i] = f.values[sp.loc_off[i]:
-                                                 sp.loc_off[i] + sp.bs]
+                vm = np.flatnonzero(lp.dims == 0)
+                lp.vcoords[vm] = f.values[sp.loc_off[vm][:, None]
+                                          + np.arange(sp.bs)]
         return mesh
 
     # --------------------------------------------------------- load function
@@ -486,18 +549,12 @@ class FEMCheckpoint:
             assert np.array_equal(dof, sp.loc_dof), (
                 "section/element mismatch between saved and loaded space")
 
-        # ---- (2.22–2.23): lift to DoF level; (2.24): broadcast the vector --
-        dof_globals = []
-        for sp, offg in zip(spaces, OFFg_T):
-            idx = np.empty(sp.ndof_local, dtype=_INT)
-            for i in range(sp.plex.num_entities):
-                k = sp.loc_dof[i]
-                if k:
-                    idx[sp.loc_off[i]:sp.loc_off[i] + k] = \
-                        offg[i] + np.arange(k, dtype=_INT)
-            dof_globals.append(idx)
+        # ---- (2.22–2.23): lift to DoF level — one ragged_arange per rank ---
+        dof_globals = [ragged_arange(offg, sp.loc_dof)
+                       for sp, offg in zip(spaces, OFFg_T)]
         chi_JT_JP = StarForest.from_global_numbers(dof_globals, D, M)
 
+        # ---- (2.24): broadcast the vector ----------------------------------
         dstarts = partition_starts(D, M)
         suffix = "" if time_index is None else f"_t{time_index}"
         locVEC_P = [st.read_rows(f"{mesh.name}/func/{fname}/vec{suffix}",
@@ -510,40 +567,18 @@ class FEMCheckpoint:
 
 
 # ============================================================ loader helpers
-class _DimsView:
-    """Adapter: dict[int,int] -> array-style indexing for _local_order."""
-
-    def __init__(self, dims: dict[int, int]):
-        self._d = dims
-
-    def __getitem__(self, ids):
-        return np.array([self._d[int(g)] for g in np.atleast_1d(ids)],
-                        dtype=_INT)
-
-
 def _resolve_owners(comm: Comm, E: int, loc_g: list[np.ndarray],
                     owned_cells: list[np.ndarray],
-                    cone_maps: list[dict[int, np.ndarray]]
-                    ) -> list[np.ndarray]:
+                    topos: list[TopoCSR]) -> list[np.ndarray]:
     """Entity ownership on a (re)distributed topology: owner(e) = min rank
     among ranks owning a cell whose closure contains e.  Fully distributed:
-    candidates reduce(min) onto the canonical partition, then bcast back."""
+    candidates reduce(min) onto the canonical partition, then bcast back.
+    The per-rank candidate set is one vectorised CSR closure."""
     M = comm.nranks
-    cand_ids, cand_rank = [], []
-    for m in range(M):
-        close = set()
-        for c in owned_cells[m]:
-            stack = [int(c)]
-            while stack:
-                p = stack.pop()
-                if p in close:
-                    continue
-                close.add(p)
-                stack.extend(int(q) for q in cone_maps[m][p])
-        ids = np.array(sorted(close), dtype=_INT)
-        cand_ids.append(ids)
-        cand_rank.append(np.full(len(ids), m, dtype=_INT))
-    pub = StarForest.from_global_numbers(cand_ids, E, M)
+    cand_ids = [topos[m].closure_of(owned_cells[m]) for m in range(M)]
+    cand_rank = [np.full(len(ids), m, dtype=_INT)
+                 for m, ids in enumerate(cand_ids)]
+    pub = StarForest.from_sorted_global_numbers(cand_ids, E, M)
     owner_glob = pub.reduce(cand_rank, "min",
                             [np.full(int(s), np.iinfo(np.int64).max, dtype=_INT)
                              for s in pub.nroots])
@@ -554,32 +589,20 @@ def _resolve_owners(comm: Comm, E: int, loc_g: list[np.ndarray],
     return out
 
 
-def _grow_overlap(comm: Comm, E: int, dim: int, owned_cells: list[np.ndarray],
-                  cone_maps: list[dict[int, np.ndarray]],
-                  dim_maps: list[dict[int, int]], layers: int
-                  ) -> list[np.ndarray]:
+def _grow_overlap(comm: Comm, E: int, owned_cells: list[np.ndarray],
+                  topos: list[TopoCSR], layers: int) -> list[np.ndarray]:
     """Single-layer vertex-adjacency overlap growth (DMPlexDistributeOverlap;
     §2.1.2: 'a single layer of neighboring cells') via a distributed
-    vertex→cells directory: one alltoallv publish, one query, one answer."""
+    vertex→cells directory: one alltoallv publish, one query, one answer.
+    The (vertex, cell) incidence publish is one tagged CSR closure per rank."""
     assert layers == 1, "the loader grows one overlap layer, as in the paper"
     M = comm.nranks
     # publish (vertex -> cell) incidences of owned cells
     pub_v, pub_c = [], []
     for m in range(M):
-        vs, cs = [], []
-        for c in owned_cells[m]:
-            stack, seen = [int(c)], set()
-            while stack:
-                p = stack.pop()
-                if p in seen:
-                    continue
-                seen.add(p)
-                if dim_maps[m][p] == 0:
-                    vs.append(p)
-                    cs.append(int(c))
-                stack.extend(int(q) for q in cone_maps[m][p])
-        pub_v.append(np.array(vs, dtype=_INT))
-        pub_c.append(np.array(cs, dtype=_INT))
+        v, c = topos[m].vertex_incidence_of(owned_cells[m])
+        pub_v.append(v)
+        pub_c.append(c)
     counts = np.zeros((M, M), dtype=_INT)
     send_v, send_c = [], []
     for s in range(M):

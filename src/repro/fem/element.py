@@ -83,27 +83,33 @@ class Element:
     # ---------------------------------------------------------- node points
     def entity_nodes_1d(self, p0: np.ndarray, p1: np.ndarray) -> np.ndarray:
         """Interior nodes of an edge/interval-cell whose cone is (v(p0), v(p1)),
-        walking from cone[0] to cone[1] — Fig. 2.3's deterministic rule."""
+        walking from cone[0] to cone[1] — Fig. 2.3's deterministic rule.
+
+        Batched: ``p0``/``p1`` of shape (gdim,) give (k, gdim); leading batch
+        dims broadcast, so (m, gdim) gives (m, k, gdim).
+        """
         k = self.degree
         if self.family == "DP":
             if k == 0:
-                return ((p0 + p1) / 2)[None, :]
+                return (p0 + p1)[..., None, :] / 2
             t = np.arange(0, k + 1) / k
         else:
             t = np.arange(1, k) / k
-        return p0[None, :] * (1 - t[:, None]) + p1[None, :] * t[:, None]
+        return (p0[..., None, :] * (1 - t[:, None])
+                + p1[..., None, :] * t[:, None])
 
     def cell_nodes_tri(self, v: np.ndarray) -> np.ndarray:
         """Interior (P) or all (DP) nodes of a triangle with cone-derived
-        vertex positions ``v`` of shape (3, gdim)."""
+        vertex positions ``v`` of shape (3, gdim) — or batched (m, 3, gdim),
+        giving (m, k, gdim) via one broadcast matmul."""
         k = self.degree
         if self.family == "DP":
             if k == 0:
-                return v.mean(axis=0, keepdims=True)
+                return v.mean(axis=-2, keepdims=True)
             bary = np.array(self._tri_all_bary(), dtype=np.float64) / k
         else:
             if k < 3:
-                return np.empty((0, v.shape[1]))
+                return np.empty(v.shape[:-2] + (0, v.shape[-1]))
             bary = np.array(self._tri_interior_bary(), dtype=np.float64) / k
         return bary @ v
 
@@ -164,15 +170,24 @@ def triangle_interior_permutation(element: Element, orientation: int) -> np.ndar
     return perm
 
 
-def cone_vertex_sequence(local_plex, cell_local: int) -> np.ndarray:
-    """Canonical vertex sequence of a cell, derived from cones only (hence
-    save/load-stable).  Interval: the cone itself.  Triangle with cone
-    (e0, e1, e2): v0 = e0[0], v1 = e0[1], v2 = the vertex of e1 not on e0."""
-    cone = local_plex.cones[cell_local]
+def cone_vertex_sequences(local_plex, cells: np.ndarray) -> np.ndarray:
+    """Canonical vertex sequences of many cells at once, derived from cones
+    only (hence save/load-stable) — one batched CSR gather, no per-cell
+    Python.  Interval: the cone itself.  Triangle with cone (e0, e1, e2):
+    v0 = e0[0], v1 = e0[1], v2 = the vertex of e1 not on e0.
+    Returns shape (len(cells), dim + 1)."""
+    cells = np.asarray(cells, dtype=_INT)
+    off, idx = local_plex.cone_offsets, local_plex.cone_indices
     if local_plex.dim == 1:
-        return np.asarray(cone, dtype=_INT)
-    e0, e1 = int(cone[0]), int(cone[1])
-    v0, v1 = (int(x) for x in local_plex.cones[e0])
-    e1_verts = [int(x) for x in local_plex.cones[e1]]
-    v2 = next(v for v in e1_verts if v not in (v0, v1))
-    return np.array([v0, v1, v2], dtype=_INT)
+        return np.stack([idx[off[cells]], idx[off[cells] + 1]], axis=1)
+    e0 = idx[off[cells]]
+    e1 = idx[off[cells] + 1]
+    v0, v1 = idx[off[e0]], idx[off[e0] + 1]
+    a, b = idx[off[e1]], idx[off[e1] + 1]
+    v2 = np.where((a != v0) & (a != v1), a, b)
+    return np.stack([v0, v1, v2], axis=1)
+
+
+def cone_vertex_sequence(local_plex, cell_local: int) -> np.ndarray:
+    """Single-cell convenience wrapper around :func:`cone_vertex_sequences`."""
+    return cone_vertex_sequences(local_plex, np.array([cell_local]))[0]

@@ -15,7 +15,7 @@ import dataclasses
 
 import numpy as np
 
-from repro.fem.element import cone_vertex_sequence
+from repro.fem.element import cone_vertex_sequences
 from repro.fem.section import FunctionSpace
 
 _INT = np.int64
@@ -43,28 +43,29 @@ def node_points(space: FunctionSpace) -> np.ndarray:
     """
     lp, el, bs = space.plex, space.element, space.bs
     gdim = lp.vcoords.shape[1]
-    pts = []
-    for i in range(lp.num_entities):
-        nd = space.loc_dof[i] // bs
-        if nd == 0:
-            continue
-        d = int(lp.dims[i])
-        if d == 0:
-            pts.append(lp.vcoords[i][None, :])
-        elif d == 1:
-            va, vb = (int(x) for x in lp.cones[i])
-            if lp.dim == 1:
-                # interval cell: interior/DP nodes walked cone[0] -> cone[1]
-                pts.append(el.entity_nodes_1d(lp.vcoords[va], lp.vcoords[vb]))
-            else:
-                pts.append(el.entity_nodes_1d(lp.vcoords[va], lp.vcoords[vb]))
-        else:
-            vseq = cone_vertex_sequence(lp, i)
-            v = np.stack([lp.vcoords[int(x)] for x in vseq])
-            pts.append(el.cell_nodes_tri(v))
-    if not pts:
-        return np.empty((0, gdim))
-    return np.concatenate(pts, axis=0)
+    nnodes = space.loc_dof // bs                       # nodes per entity
+    node_off = np.concatenate([[0], np.cumsum(nnodes)]).astype(_INT)
+    out = np.empty((int(node_off[-1]), gdim))
+    # one batched evaluation per entity dimension; scatter by node offset so
+    # any entity traversal order is honoured
+    vsel = np.flatnonzero((lp.dims == 0) & (nnodes > 0))
+    if vsel.size:
+        out[node_off[vsel]] = lp.vcoords[vsel]
+    esel = np.flatnonzero((lp.dims == 1) & (nnodes > 0))
+    if esel.size:
+        # edge / interval-cell: interior/DP nodes walked cone[0] -> cone[1]
+        va = lp.cone_indices[lp.cone_offsets[esel]]
+        vb = lp.cone_indices[lp.cone_offsets[esel] + 1]
+        nodes = el.entity_nodes_1d(lp.vcoords[va], lp.vcoords[vb])
+        k = nodes.shape[1]
+        out[node_off[esel][:, None] + np.arange(k)] = nodes
+    tsel = np.flatnonzero((lp.dims == 2) & (nnodes > 0))
+    if tsel.size:
+        vseq = cone_vertex_sequences(lp, tsel)          # (m, 3)
+        nodes = el.cell_nodes_tri(lp.vcoords[vseq])     # (m, k, gdim)
+        k = nodes.shape[1]
+        out[node_off[tsel][:, None] + np.arange(k)] = nodes
+    return out
 
 
 def interpolate(space: FunctionSpace, fn) -> Function:

@@ -12,6 +12,20 @@ test problems; all distributed algorithms operate on per-rank ``LocalPlex``
 objects and never consult the global object (mirroring the paper's fully
 distributed setting — the global numbering ``I`` exists, the global *object*
 does not).
+
+CSR layout
+----------
+Both mesh classes store cones in compressed-sparse-row form: two flat arrays
+``cone_offsets`` ([E + 1]) and ``cone_indices`` ([nnz]), where the cone of
+entity ``p`` is ``cone_indices[cone_offsets[p]:cone_offsets[p + 1]]`` in
+order.  Every traversal (transitive closure, overlap growth, ownership
+resolution) is an iterated *vectorised* gather over these arrays — a
+frontier-based BFS whose per-round work is one ``ragged_arange`` gather plus
+one ``np.unique`` — so no per-entity Python runs anywhere on the hot path,
+the same replicated-vs-distributed bottleneck removal as "Fully Parallel Mesh
+I/O using PETSc DMPlex" [Hapla et al. 2021].  ``cones`` remains available as
+a thin list-compatible read view (:class:`CSRCones`) for tests and reference
+code that index one entity at a time.
 """
 
 from __future__ import annotations
@@ -21,22 +35,125 @@ from typing import Sequence
 
 import numpy as np
 
-from repro.core.comm import Comm
+from repro.core.comm import Comm, ragged_arange
 from repro.core.star_forest import StarForest, partition_rank_of, partition_starts
 
 _INT = np.int64
 
 
+# ============================================================= CSR machinery
+class CSRCones:
+    """List-compatible read view over CSR cones: ``view[p]`` is the ordered
+    cone of entity ``p`` (a slice of ``indices`` — no copies)."""
+
+    __slots__ = ("offsets", "indices")
+
+    def __init__(self, offsets: np.ndarray, indices: np.ndarray):
+        self.offsets = offsets
+        self.indices = indices
+
+    def __len__(self) -> int:
+        return len(self.offsets) - 1
+
+    def __getitem__(self, p: int) -> np.ndarray:
+        return self.indices[self.offsets[int(p)]:self.offsets[int(p) + 1]]
+
+    def __iter__(self):
+        for p in range(len(self)):
+            yield self[p]
+
+
+def csr_offsets(sizes: np.ndarray) -> np.ndarray:
+    """Offsets array ([0, cumsum(sizes)]) for a CSR segmentation."""
+    return np.concatenate([[0], np.cumsum(sizes)]).astype(_INT)
+
+
+def csr_from_cone_list(cones: Sequence[np.ndarray]
+                       ) -> tuple[np.ndarray, np.ndarray]:
+    """Pack a list of per-entity cone arrays into (offsets, indices)."""
+    sizes = np.array([len(c) for c in cones], dtype=_INT)
+    indices = (np.concatenate([np.asarray(c, dtype=_INT) for c in cones])
+               if len(cones) else np.empty(0, _INT))
+    return csr_offsets(sizes), indices.astype(_INT, copy=False)
+
+
+def in_sorted(values: np.ndarray, table: np.ndarray) -> np.ndarray:
+    """Vectorised membership of ``values`` in a *sorted unique* ``table``."""
+    values = np.asarray(values, dtype=_INT)
+    if len(table) == 0:
+        return np.zeros(values.shape, dtype=bool)
+    pos = np.minimum(np.searchsorted(table, values), len(table) - 1)
+    return table[pos] == values
+
+
+def csr_closure(offsets: np.ndarray, indices: np.ndarray,
+                seeds: np.ndarray) -> np.ndarray:
+    """Transitive cone closure over a CSR graph (includes seeds), returned as
+    sorted unique indices.  Frontier BFS: each round gathers the cones of the
+    frontier in one ``ragged_arange`` fancy-index and keeps the unseen part —
+    O(edges) total, no per-entity Python."""
+    seen = np.unique(np.asarray(seeds, dtype=_INT))
+    frontier = seen
+    while frontier.size:
+        cnt = offsets[frontier + 1] - offsets[frontier]
+        nxt = np.unique(indices[ragged_arange(offsets[frontier], cnt)])
+        frontier = nxt[~in_sorted(nxt, seen)]
+        seen = np.union1d(seen, frontier)
+    return seen
+
+
+def csr_closure_pairs(offsets: np.ndarray, indices: np.ndarray,
+                      tags: np.ndarray, seeds: np.ndarray
+                      ) -> tuple[np.ndarray, np.ndarray]:
+    """Tagged transitive closure: unique (tag, point) pairs with ``point``
+    reachable from the seed carrying ``tag`` (seeds included).  The pair
+    frontier is deduplicated per round with a 2-column ``np.unique`` — never
+    a packed ``tag * E + point`` scalar key, which would overflow int64
+    beyond ~3e9 entities (the paper's 8.2B-DoF scale)."""
+    tags = np.asarray(tags, dtype=_INT)
+    seeds = np.asarray(seeds, dtype=_INT)
+    seen = np.unique(np.stack([tags, seeds], axis=1), axis=0)
+    frontier = seen
+    while len(frontier):
+        t, p = frontier[:, 0], frontier[:, 1]
+        cnt = offsets[p + 1] - offsets[p]
+        cand = np.stack([np.repeat(t, cnt),
+                         indices[ragged_arange(offsets[p], cnt)]], axis=1)
+        both = np.concatenate([seen, cand])
+        # np.unique(return_index=True) is stable (mergesort): a pair already
+        # in ``seen`` keeps a first-occurrence index < len(seen)
+        uniq, first = np.unique(both, axis=0, return_index=True)
+        frontier = uniq[first >= len(seen)]
+        seen = uniq
+    return seen[:, 0], seen[:, 1]
+
+
 # =============================================================== global mesh
 @dataclasses.dataclass
 class Plex:
-    """Monolithic mesh topology in global numbering (test-construction only)."""
+    """Monolithic mesh topology in global numbering (test-construction only).
+
+    Cones are CSR (``cone_offsets``/``cone_indices``); ``cones`` is a
+    list-compatible view.
+    """
 
     dim: int                       # topological dimension
     dims: np.ndarray               # [E] dimension of each entity
-    cones: list[np.ndarray]        # [E] ordered global ids (dim-1 entities)
+    cone_offsets: np.ndarray       # [E + 1]
+    cone_indices: np.ndarray       # [nnz] ordered global ids (dim-1 entities)
     vertex_start: int              # vertices are entities [vertex_start, E)
     coords: np.ndarray             # [nvertices, gdim]
+
+    @classmethod
+    def from_cone_list(cls, dim: int, dims: np.ndarray,
+                       cones: Sequence[np.ndarray], vertex_start: int,
+                       coords: np.ndarray) -> "Plex":
+        off, idx = csr_from_cone_list(cones)
+        return cls(dim, dims, off, idx, vertex_start, coords)
+
+    @property
+    def cones(self) -> CSRCones:
+        return CSRCones(self.cone_offsets, self.cone_indices)
 
     @property
     def num_entities(self) -> int:
@@ -51,27 +168,28 @@ class Plex:
 
     def closure(self, seeds) -> np.ndarray:
         """Transitive cone closure (includes seeds), sorted unique."""
-        seen = set(int(s) for s in seeds)
-        frontier = list(seen)
-        while frontier:
-            nxt = []
-            for p in frontier:
-                for q in self.cones[p]:
-                    q = int(q)
-                    if q not in seen:
-                        seen.add(q)
-                        nxt.append(q)
-            frontier = nxt
-        return np.array(sorted(seen), dtype=_INT)
+        seeds = np.asarray(sorted(seeds) if isinstance(seeds, set) else seeds,
+                           dtype=_INT)
+        if seeds.size == 0:
+            return np.empty(0, _INT)
+        return csr_closure(self.cone_offsets, self.cone_indices, seeds)
 
-    def vertex_cells(self) -> dict[int, list[int]]:
-        """vertex global id -> incident cell global ids (adjacency for overlap)."""
-        out: dict[int, list[int]] = {}
-        for c in self.cell_ids:
-            for p in self.closure([c]):
-                if self.dims[p] == 0:
-                    out.setdefault(int(p), []).append(int(c))
-        return out
+    def vertex_cell_incidence(self) -> tuple[np.ndarray, np.ndarray]:
+        """All (vertex, incident cell) pairs, lexicographically sorted by
+        vertex — the adjacency for overlap growth, as two flat arrays.
+        Memoised: ``distribute`` queries it once per rank, and the topology
+        of a ``Plex`` is immutable by convention (test construction only)."""
+        cached = getattr(self, "_vci_cache", None)
+        if cached is not None:
+            return cached
+        cells = self.cell_ids
+        tags, pts = csr_closure_pairs(self.cone_offsets, self.cone_indices,
+                                      cells, cells)
+        m = self.dims[pts] == 0
+        v, c = pts[m], tags[m]
+        order = np.lexsort((c, v))
+        self._vci_cache = (v[order], c[order])
+        return self._vci_cache
 
 
 # ----------------------------------------------------------------- builders
@@ -93,7 +211,7 @@ def interval_mesh(ncells: int, *, seed: int | None = None) -> Plex:
         cones.append(np.array(pair, dtype=_INT))
     cones += [np.empty(0, dtype=_INT)] * (nc + 1)
     coords = np.linspace(0.0, 1.0, nc + 1)[:, None]
-    return Plex(1, dims, cones, vertex_start=nc, coords=coords)
+    return Plex.from_cone_list(1, dims, cones, vertex_start=nc, coords=coords)
 
 
 def tri_mesh(nx: int, ny: int, *, seed: int | None = None) -> Plex:
@@ -101,6 +219,10 @@ def tri_mesh(nx: int, ny: int, *, seed: int | None = None) -> Plex:
 
     Entities numbered cells, then edges, then vertices.  With ``seed``,
     cell cones are randomly rotated and edge cones randomly flipped.
+
+    The entity numbering and the per-entity rng draw *sequence* are part of
+    the on-disk fixtures' provenance (tests/data) — this builder must stay
+    bit-deterministic.  For large benchmark meshes use :func:`tri_mesh_fast`.
     """
     rng = np.random.default_rng(seed) if seed is not None else None
     nvx, nvy = nx + 1, ny + 1
@@ -150,7 +272,53 @@ def tri_mesh(nx: int, ny: int, *, seed: int | None = None) -> Plex:
     cones += [np.empty(0, dtype=_INT)] * nverts
 
     coords = np.array([[i / nx, j / ny] for i in range(nvx) for j in range(nvy)])
-    return Plex(2, dims, cones, vertex_start=ncells + nedges, coords=coords)
+    return Plex.from_cone_list(2, dims, cones,
+                               vertex_start=ncells + nedges, coords=coords)
+
+
+def tri_mesh_fast(nx: int, ny: int) -> Plex:
+    """Fully vectorised unit-square triangulation for large benchmark meshes
+    (~10⁵ entities in milliseconds).  Same entity *classes* and numbering
+    scheme as :func:`tri_mesh` (cells, then edges, then vertices) but edges
+    are enumerated analytically, not by traversal order, so the two builders
+    are not interchangeable where fixtures pin exact ids."""
+    nvy = ny + 1
+    ncells = 2 * nx * ny
+    # grid vertex ids of each quad, vectorised over (i, j)
+    ii, jj = np.meshgrid(np.arange(nx, dtype=_INT),
+                         np.arange(ny, dtype=_INT), indexing="ij")
+    ii, jj = ii.reshape(-1), jj.reshape(-1)
+    v00 = ii * nvy + jj
+    v10 = (ii + 1) * nvy + jj
+    v01 = ii * nvy + jj + 1
+    v11 = (ii + 1) * nvy + jj + 1
+    # tris interleaved like tri_mesh: (v00,v10,v11), then (v00,v11,v01)
+    tri_v = np.empty((ncells, 3), dtype=_INT)
+    tri_v[0::2] = np.stack([v00, v10, v11], axis=1)
+    tri_v[1::2] = np.stack([v00, v11, v01], axis=1)
+    # unique edges as sorted vertex pairs, one cone row per tri edge
+    raw = np.stack([tri_v, np.roll(tri_v, -1, axis=1)], axis=2)  # [nc,3,2]
+    raw = np.sort(raw.reshape(-1, 2), axis=1)
+    edges, tri_e = np.unique(raw, axis=0, return_inverse=True)
+    nedges = len(edges)
+    nverts = (nx + 1) * nvy
+    E = ncells + nedges + nverts
+    dims = np.concatenate([np.full(ncells, 2, dtype=_INT),
+                           np.full(nedges, 1, dtype=_INT),
+                           np.zeros(nverts, dtype=_INT)])
+    cone_sizes = np.concatenate([np.full(ncells, 3, dtype=_INT),
+                                 np.full(nedges, 2, dtype=_INT),
+                                 np.zeros(nverts, dtype=_INT)])
+    offsets = csr_offsets(cone_sizes)
+    indices = np.concatenate([
+        ncells + tri_e.reshape(ncells, 3).reshape(-1),
+        ncells + nedges + edges.reshape(-1),
+    ]).astype(_INT)
+    gx, gy = np.meshgrid(np.arange(nx + 1) / nx, np.arange(nvy) / ny,
+                         indexing="ij")
+    coords = np.stack([gx.reshape(-1), gy.reshape(-1)], axis=1)
+    return Plex(2, dims, offsets, indices,
+                vertex_start=ncells + nedges, coords=coords)
 
 
 # ================================================================ local mesh
@@ -159,17 +327,28 @@ class LocalPlex:
     """Per-rank view of a distributed topology (local numbering).
 
     ``loc_g`` is the paper's LocG array; ``owner[i]`` is the owning rank of
-    local entity ``i`` (== this rank iff owned); cones are in local numbers
-    with order preserved from the global mesh.
+    local entity ``i`` (== this rank iff owned); cones are CSR in local
+    numbers with order preserved from the global mesh.  ``global_to_local``
+    resolves global ids through a lazily-built sorted index map — the
+    vectorised replacement for the old per-rank ``g2l`` dicts.
     """
 
     dim: int
     dims: np.ndarray                 # [El]
-    cones: list[np.ndarray]          # [El] local ids
+    cone_offsets: np.ndarray         # [El + 1]
+    cone_indices: np.ndarray         # [nnz] local ids
     loc_g: np.ndarray                # [El] global ids (LocG)
     owner: np.ndarray                # [El] owning rank
     rank: int
     vcoords: np.ndarray | None = None  # [El, gdim]; valid rows where dims==0
+
+    def __post_init__(self):
+        self._g_sorted = None        # built on first global_to_local call
+        self._g_perm = None
+
+    @property
+    def cones(self) -> CSRCones:
+        return CSRCones(self.cone_offsets, self.cone_indices)
 
     @property
     def num_entities(self) -> int:
@@ -183,49 +362,61 @@ class LocalPlex:
     def cell_ids_local(self) -> np.ndarray:
         return np.flatnonzero(self.dims == self.dim).astype(_INT)
 
-    def g2l(self) -> dict[int, int]:
-        return {int(g): i for i, g in enumerate(self.loc_g)}
+    def global_to_local(self, g: np.ndarray) -> np.ndarray:
+        """Vectorised global→local id resolution (every ``g`` must be
+        present).  O(n log n) searchsorted through the sorted LocG copy."""
+        if self._g_sorted is None:
+            self._g_perm = np.argsort(self.loc_g).astype(_INT)
+            self._g_sorted = self.loc_g[self._g_perm]
+        g = np.asarray(g, dtype=_INT)
+        pos = np.minimum(np.searchsorted(self._g_sorted, g),
+                         max(len(self._g_sorted) - 1, 0))
+        assert g.size == 0 or (len(self._g_sorted) > 0
+                               and (self._g_sorted[pos] == g).all()), \
+            "global_to_local: id not present on this rank"
+        return self._g_perm[pos]
 
     def closure_local(self, seeds) -> np.ndarray:
-        seen = set(int(s) for s in seeds)
-        frontier = list(seen)
-        while frontier:
-            nxt = []
-            for p in frontier:
-                for q in self.cones[p]:
-                    q = int(q)
-                    if q not in seen:
-                        seen.add(q)
-                        nxt.append(q)
-            frontier = nxt
-        return np.array(sorted(seen), dtype=_INT)
+        seeds = np.asarray(sorted(seeds) if isinstance(seeds, set) else seeds,
+                           dtype=_INT)
+        if seeds.size == 0:
+            return np.empty(0, _INT)
+        return csr_closure(self.cone_offsets, self.cone_indices, seeds)
 
 
-def _local_order(global_ids: set[int], dims: np.ndarray) -> np.ndarray:
+def _local_order(ids: np.ndarray, dims_of_ids: np.ndarray) -> np.ndarray:
     """Deterministic local numbering: cells first, then faces/edges, then
     vertices; within a dimension by ascending global number.  Determinism is
     what makes the same-count reload path (§3.1 end) reproduce local layouts
-    exactly."""
-    ids = np.array(sorted(global_ids), dtype=_INT)
-    order = np.lexsort((ids, -dims[ids]))
-    return ids[order]
+    exactly.  ``dims_of_ids`` is aligned to ``ids`` (one dim per id)."""
+    order = np.lexsort((ids, -np.asarray(dims_of_ids, dtype=_INT)))
+    return np.asarray(ids, dtype=_INT)[order]
 
 
 def build_local_plex(plex: Plex, visible_cells, entity_owner: np.ndarray,
                      rank: int) -> LocalPlex:
-    vis = plex.closure(visible_cells) if len(visible_cells) else np.empty(0, _INT)
-    loc_g = _local_order(set(int(g) for g in vis), plex.dims)
-    g2l = {int(g): i for i, g in enumerate(loc_g)}
-    cones = [np.array([g2l[int(q)] for q in plex.cones[g]], dtype=_INT)
-             for g in loc_g]
-    dims_l = plex.dims[loc_g] if len(loc_g) else np.empty(0, _INT)
-    owner = entity_owner[loc_g] if len(loc_g) else np.empty(0, _INT)
+    vis = plex.closure(visible_cells)                 # sorted unique globals
+    if vis.size == 0:
+        gdim = plex.coords.shape[1]
+        return LocalPlex(plex.dim, np.empty(0, _INT), np.zeros(1, _INT),
+                         np.empty(0, _INT), np.empty(0, _INT),
+                         np.empty(0, _INT), rank, np.empty((0, gdim)))
+    loc_g = _local_order(vis, plex.dims[vis])
+    # local index of each position in the sorted ``vis`` array
+    local_of_pos = np.empty(len(vis), dtype=_INT)
+    local_of_pos[np.searchsorted(vis, loc_g)] = np.arange(len(vis), dtype=_INT)
+    sizes = plex.cone_offsets[loc_g + 1] - plex.cone_offsets[loc_g]
+    flat_glob = plex.cone_indices[ragged_arange(plex.cone_offsets[loc_g],
+                                                sizes)]
+    cone_indices = local_of_pos[np.searchsorted(vis, flat_glob)]
+    cone_offsets = csr_offsets(sizes)
+    dims_l = plex.dims[loc_g]
+    owner = entity_owner[loc_g].astype(_INT)
     vcoords = np.full((len(loc_g), plex.coords.shape[1]), np.nan)
-    for i, g in enumerate(loc_g):
-        if plex.dims[g] == 0:
-            vcoords[i] = plex.vertex_coord(int(g))
-    return LocalPlex(plex.dim, dims_l, cones, loc_g, owner.astype(_INT), rank,
-                     vcoords)
+    vmask = dims_l == 0
+    vcoords[vmask] = plex.coords[loc_g[vmask] - plex.vertex_start]
+    return LocalPlex(plex.dim, dims_l, cone_offsets, cone_indices, loc_g,
+                     owner, rank, vcoords)
 
 
 def cell_partition(ncells: int, nranks: int, method: str = "contiguous",
@@ -244,29 +435,34 @@ def cell_partition(ncells: int, nranks: int, method: str = "contiguous",
 
 def entity_owners(plex: Plex, cell_owner: np.ndarray) -> np.ndarray:
     """Ownership rule: an entity is owned by the minimum rank among owners of
-    cells whose closure contains it (one owner per entity; others see ghosts)."""
+    cells whose closure contains it (one owner per entity; others see ghosts).
+    One tagged closure over the whole mesh + one scatter-min."""
+    cells = plex.cell_ids
     owner = np.full(plex.num_entities, np.iinfo(np.int64).max, dtype=_INT)
-    for c in plex.cell_ids:
-        r = cell_owner[int(c)]
-        cl = plex.closure([c])
-        owner[cl] = np.minimum(owner[cl], r)
+    if cells.size == 0:
+        return owner
+    tags, pts = csr_closure_pairs(plex.cone_offsets, plex.cone_indices,
+                                  cells, cells)
+    np.minimum.at(owner, pts, np.asarray(cell_owner, dtype=_INT)[tags])
     return owner
 
 
-def add_overlap(plex: Plex, visible_cells: set[int], layers: int) -> set[int]:
+def add_overlap(plex: Plex, visible_cells, layers: int) -> np.ndarray:
     """Add ``layers`` layers of vertex-adjacent neighbour cells (§2.1.2:
     'a single layer of neighboring cells and the lower dimensional entities
-    directly attached to them')."""
-    v2c = plex.vertex_cells()
-    vis = set(visible_cells)
+    directly attached to them').  Returns sorted unique cell ids."""
+    vis = np.unique(np.asarray(
+        sorted(visible_cells) if isinstance(visible_cells, set)
+        else visible_cells, dtype=_INT))
+    if layers == 0 or vis.size == 0:
+        return vis
+    inc_v, inc_c = plex.vertex_cell_incidence()
     for _ in range(layers):
-        verts = set()
-        for c in vis:
-            for p in plex.closure([c]):
-                if plex.dims[p] == 0:
-                    verts.add(int(p))
-        for v in verts:
-            vis.update(v2c.get(v, ()))
+        cl = plex.closure(vis)
+        verts = cl[plex.dims[cl] == 0]
+        lo = np.searchsorted(inc_v, verts, side="left")
+        hi = np.searchsorted(inc_v, verts, side="right")
+        vis = np.union1d(vis, inc_c[ragged_arange(lo, hi - lo)])
     return vis
 
 
@@ -280,30 +476,36 @@ def distribute(plex: Plex, nranks: int, *, method: str = "contiguous",
     rank-local entity (leaf) to the owning rank's local copy (root) — the
     DMPlex pointSF of §3.1.
     """
+    cells = plex.cell_ids
     if cell_owner is None:
-        cell_owner = cell_partition(len(plex.cell_ids), nranks, method, seed)
+        cell_owner = cell_partition(len(cells), nranks, method, seed)
     owner = entity_owners(plex, cell_owner)
+    # split cell ids per owning rank without R full-mesh scans
+    order = np.argsort(cell_owner, kind="stable")
+    splits = np.cumsum(np.bincount(cell_owner, minlength=nranks))[:-1]
+    per_rank_cells = np.split(cells[order], splits)
     locals_: list[LocalPlex] = []
     for r in range(nranks):
-        own_cells = set(int(c) for c in plex.cell_ids[cell_owner == r])
-        vis_cells = add_overlap(plex, own_cells, overlap) if overlap else own_cells
-        locals_.append(build_local_plex(plex, sorted(vis_cells), owner, r))
+        own_cells = per_rank_cells[r]
+        vis_cells = add_overlap(plex, own_cells, overlap) if overlap \
+            else own_cells
+        locals_.append(build_local_plex(plex, vis_cells, owner, r))
     sf = point_sf(locals_)
     return locals_, sf, cell_owner
 
 
 def point_sf(locals_: list[LocalPlex]) -> StarForest:
-    """Build the pointSF: leaf (r, i) -> (owner rank, owner-local index)."""
-    owner_l2g = [lp.g2l() for lp in locals_]
+    """Build the pointSF: leaf (r, i) -> (owner rank, owner-local index).
+    Leaves are resolved per distinct neighbour rank through the owner's
+    vectorised ``global_to_local`` — O(neighbours) lookups per rank, not
+    O(entities) dict probes."""
     rr, ri = [], []
     for lp in locals_:
-        n = lp.num_entities
-        a = np.empty(n, dtype=_INT)
-        b = np.empty(n, dtype=_INT)
-        for i in range(n):
-            o = int(lp.owner[i])
-            a[i] = o
-            b[i] = owner_l2g[o][int(lp.loc_g[i])]
+        a = lp.owner.astype(_INT, copy=True)
+        b = np.empty(lp.num_entities, dtype=_INT)
+        for o in np.unique(lp.owner):
+            m = lp.owner == o
+            b[m] = locals_[int(o)].global_to_local(lp.loc_g[m])
         rr.append(a)
         ri.append(b)
     nroots = tuple(lp.num_entities for lp in locals_)

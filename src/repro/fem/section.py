@@ -35,10 +35,12 @@ class FunctionSpace:
     def __post_init__(self):
         assert self.element.dim == self.plex.dim, (
             f"element cell dim {self.element.dim} != mesh dim {self.plex.dim}")
-        nodes = np.array(
-            [self.element.nodes_per_entity_dim(int(d)) for d in self.plex.dims],
-            dtype=_INT,
-        )
+        # nodes-per-entity depends only on entity dimension: one small table
+        # lookup instead of a per-entity Python call
+        table = np.array([self.element.nodes_per_entity_dim(d)
+                          for d in range(self.plex.dim + 1)], dtype=_INT)
+        nodes = table[self.plex.dims] if len(self.plex.dims) \
+            else np.empty(0, _INT)
         self.loc_dof = nodes * self.bs
         self.loc_off = np.concatenate([[0], np.cumsum(self.loc_dof)[:-1]]).astype(_INT)
         self.ndof_local = int(self.loc_dof.sum())
@@ -53,15 +55,19 @@ class FunctionSpace:
         return int(self.loc_dof[self.plex.owned].sum())
 
     def owned_dof_mask(self) -> np.ndarray:
-        """Boolean mask over the local vector marking owned DoFs."""
-        mask = np.zeros(self.ndof_local, dtype=bool)
-        for i in np.flatnonzero(self.plex.owned):
-            mask[self.loc_off[i]:self.loc_off[i] + self.loc_dof[i]] = True
-        return mask
+        """Boolean mask over the local vector marking owned DoFs.  Entity
+        chunks are contiguous (``loc_off`` is the cumsum of ``loc_dof``), so
+        the mask is one ``repeat`` of the owned flags."""
+        return np.repeat(self.plex.owned, self.loc_dof)
 
     def entity_of_dof(self) -> np.ndarray:
-        """Local entity index owning each local DoF slot."""
-        out = np.empty(self.ndof_local, dtype=_INT)
-        for i in range(self.plex.num_entities):
-            out[self.loc_off[i]:self.loc_off[i] + self.loc_dof[i]] = i
-        return out
+        """Local entity index owning each local DoF slot (one ``repeat``)."""
+        return np.repeat(np.arange(self.plex.num_entities, dtype=_INT),
+                         self.loc_dof)
+
+    def dof_indices(self) -> np.ndarray:
+        """Positions ``[loc_off[i], loc_off[i] + loc_dof[i])`` concatenated in
+        entity order — the identity lift; useful as ``ragged_arange`` input
+        validation and in tests."""
+        from repro.core.comm import ragged_arange
+        return ragged_arange(self.loc_off, self.loc_dof)

@@ -257,10 +257,32 @@ def test_tensor_roundtrip_commstats_match_seed(R):
     assert tensor_roundtrip(R) == _SEED_STATS["tensor"][str(R)]
 
 
+@pytest.mark.parametrize("R", [2, 4, 8])
+def test_mesh_load_commstats_match_seed(R):
+    """The Appendix B mesh load path (both repartitions, coordinates
+    included) moves byte-for-byte the traffic of the pre-CSR loader."""
+    from benchmarks.commstats_probe import mesh_load
+
+    assert mesh_load(R) == _SEED_STATS["mesh_load"][str(R)]
+
+
 def test_rank_scaling_roundtrip_64_ranks():
     """Acceptance gate: the bench sweep's save/load round-trip completes at
-    64 simulated ranks (quadratic pre-refactor; linear with packed plans)."""
+    64 simulated ranks (quadratic pre-refactor; linear with packed plans),
+    and within 10x of the recorded wall-time baseline (crash or gross
+    regression fails; small timer noise does not)."""
+    import time
+
     from benchmarks.bench_checkpoint import rank_scaling_roundtrip
 
-    rows = rank_scaling_roundtrip(ranks=(64,), elems_per_rank=1 << 8)
-    assert rows[0]["ranks"] == 64
+    baseline = json.loads(
+        (pathlib.Path(__file__).parent / "data" / "bench_baseline.json")
+        .read_text())
+    t0 = time.perf_counter()
+    rows = rank_scaling_roundtrip(ranks=(baseline["ranks"],),
+                                  elems_per_rank=baseline["elems_per_rank"])
+    dt = time.perf_counter() - t0
+    assert rows[0]["ranks"] == baseline["ranks"]
+    assert dt <= 10.0 * baseline["seconds"] + 1.0, (
+        f"rank_scaling_roundtrip R={baseline['ranks']} took {dt:.2f}s, "
+        f">10x the recorded {baseline['seconds']}s baseline")

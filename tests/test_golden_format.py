@@ -1,0 +1,99 @@
+"""On-disk format stability gate.
+
+``tests/data/golden_store`` is a tiny checkpoint written by the pre-CSR
+(seed) implementation: a 3-rank randomly-partitioned ``tri_mesh(3, 2,
+seed=4)`` with a label, a scalar P2 function ``f`` and a vector-valued
+(bs=2) P1 function ``v``.  ``tests/data/golden_manifest.json`` pins the
+sha256 of every file in the store.
+
+Two contracts:
+
+  1. **Loader stability** — the current loader must read the committed store
+     and reproduce the analytic fields exactly, at several rank counts and
+     partitions (old files keep loading after refactors).
+  2. **Writer stability** — re-saving the same mesh/functions with the
+     current writer must produce byte-identical datasets (new files keep
+     loading under old readers).
+"""
+
+import hashlib
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.core.comm import Comm
+from repro.core.store import DatasetStore
+from repro.fem import (
+    Element, FEMCheckpoint, FunctionSpace, distribute, interpolate,
+    node_points, tri_mesh,
+)
+
+DATA = pathlib.Path(__file__).parent / "data"
+GOLDEN = DATA / "golden_store"
+MANIFEST = json.loads((DATA / "golden_manifest.json").read_text())
+
+
+def _field(pts):
+    x, y = pts[:, 0], pts[:, 1]
+    return np.sin(3 * x) * (2 + np.cos(5 * y)) + x * y
+
+
+def test_golden_fixture_unchanged():
+    """The committed fixture itself must not drift (regeneration guard)."""
+    files = {p.name: hashlib.sha256(p.read_bytes()).hexdigest()
+             for p in sorted(GOLDEN.iterdir())}
+    assert files == MANIFEST
+
+
+@pytest.mark.parametrize("M,part", [(1, "contiguous"), (2, "random"),
+                                    (3, "contiguous"), (5, "random")])
+def test_golden_store_loads(M, part):
+    store = DatasetStore(str(GOLDEN), "r")
+    ck = FEMCheckpoint(store)
+    comm = Comm(M)
+    loaded = ck.load_mesh("m", comm, partition=part, seed=3)
+    assert loaded.E == store.get_attrs("m/meta")["E"]
+    # labels: the fixture's label is the entity dimension
+    for lp, lab in zip(loaded.plexes, loaded.labels["dimlabel"]):
+        np.testing.assert_array_equal(lab, lp.dims)
+    # scalar P2
+    spaces, funcs = ck.load_function(loaded, "f", comm)
+    for sp, f in zip(spaces, funcs):
+        np.testing.assert_array_equal(f.values, _field(node_points(sp)))
+    # vector-valued P1 (bs=2)
+    spaces, funcs = ck.load_function(loaded, "v", comm)
+    for sp, f in zip(spaces, funcs):
+        want = np.stack([_field(node_points(sp)),
+                         -2.0 * _field(node_points(sp))], -1).reshape(-1)
+        np.testing.assert_array_equal(f.values, want)
+
+
+def test_writer_reproduces_golden_bytes(tmp_path):
+    """Current writer, same inputs -> byte-identical datasets."""
+    mesh = tri_mesh(3, 2, seed=4)
+    comm = Comm(3)
+    plexes, _, _ = distribute(mesh, 3, method="random", seed=7)
+    store = DatasetStore(str(tmp_path / "regen"), "w")
+    ck = FEMCheckpoint(store)
+    ck.save_mesh("m", plexes, comm,
+                 labels={"dimlabel": [lp.dims.copy() for lp in plexes]})
+    sp2 = [FunctionSpace(lp, Element("P", 2, "triangle")) for lp in plexes]
+    ck.save_function("m", "f", [interpolate(s, _field) for s in sp2], comm)
+    sp1 = [FunctionSpace(lp, Element("P", 1, "triangle"), bs=2)
+           for lp in plexes]
+    ck.save_function(
+        "m", "v",
+        [interpolate(s, lambda p: np.stack([_field(p), -2.0 * _field(p)], -1))
+         for s in sp1], comm)
+    regen = pathlib.Path(store.root)
+    for fname, want_sha in MANIFEST.items():
+        if fname == "store.json":
+            # JSON metadata: semantic comparison (key order is incidental)
+            got = json.loads((regen / fname).read_text())
+            want = json.loads((GOLDEN / fname).read_text())
+            assert got == want
+            continue
+        got_sha = hashlib.sha256((regen / fname).read_bytes()).hexdigest()
+        assert got_sha == want_sha, f"dataset bytes changed: {fname}"

@@ -1,0 +1,91 @@
+"""Regression tests for the vectorised FunctionSpace DoF helpers.
+
+``owned_dof_mask`` / ``entity_of_dof`` / ``dof_indices`` became
+``repeat``/``cumsum`` one-liners in the CSR refactor; these tests pin them
+against the naive per-entity reference loops on ragged DoF layouts (mixed
+entity dimensions, zero-DoF entities, vector-valued blocks, empty ranks).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.comm import Comm
+from repro.fem import Element, FunctionSpace, distribute, interval_mesh, tri_mesh
+from repro.fem.plex import LocalPlex
+
+_INT = np.int64
+
+
+# ------------------------------------------------------- reference semantics
+def _ref_owned_dof_mask(sp):
+    mask = np.zeros(sp.ndof_local, dtype=bool)
+    for i in np.flatnonzero(sp.plex.owned):
+        mask[sp.loc_off[i]:sp.loc_off[i] + sp.loc_dof[i]] = True
+    return mask
+
+
+def _ref_entity_of_dof(sp):
+    out = np.empty(sp.ndof_local, dtype=_INT)
+    for i in range(sp.plex.num_entities):
+        out[sp.loc_off[i]:sp.loc_off[i] + sp.loc_dof[i]] = i
+    return out
+
+
+def _ref_dof_indices(sp):
+    return np.concatenate(
+        [np.arange(sp.loc_off[i], sp.loc_off[i] + sp.loc_dof[i])
+         for i in range(sp.plex.num_entities)] or [np.empty(0, _INT)]
+    ).astype(_INT)
+
+
+def _check(sp):
+    np.testing.assert_array_equal(sp.owned_dof_mask(), _ref_owned_dof_mask(sp))
+    assert sp.owned_dof_mask().dtype == bool
+    np.testing.assert_array_equal(sp.entity_of_dof(), _ref_entity_of_dof(sp))
+    np.testing.assert_array_equal(sp.dof_indices(), _ref_dof_indices(sp))
+    assert int(sp.owned_dof_mask().sum()) == sp.ndof_owned
+
+
+# P4/triangle: verts 1, edges 3, cells 3 -> ragged across dimensions.
+# DP2: cells-only (many zero-DoF entities).  bs=3 scales blocks.
+CASES = [
+    (Element("P", 4, "triangle"), 1),
+    (Element("P", 2, "triangle"), 3),
+    (Element("DP", 2, "triangle"), 1),
+    (Element("DP", 0, "triangle"), 2),
+]
+
+
+@pytest.mark.parametrize("element,bs", CASES)
+@pytest.mark.parametrize("nranks", [1, 3])
+def test_matches_reference_on_distributed_mesh(element, bs, nranks):
+    mesh = tri_mesh(3, 2, seed=17)
+    plexes, _, _ = distribute(mesh, nranks, method="random", seed=5)
+    for lp in plexes:
+        _check(FunctionSpace(lp, element, bs=bs))
+
+
+def test_matches_reference_interval():
+    mesh = interval_mesh(7, seed=3)
+    plexes, _, _ = distribute(mesh, 2, method="random", seed=9)
+    for lp in plexes:
+        _check(FunctionSpace(lp, Element("P", 5, "interval"), bs=2))
+
+
+def test_empty_rank():
+    """A rank that owns nothing (random partitions can starve ranks)."""
+    mesh = tri_mesh(2, 1, seed=0)
+    # rank count far above cell count guarantees starved ranks
+    plexes, _, _ = distribute(mesh, 4, method="random", seed=1)
+    starved = [lp for lp in plexes if not lp.owned.any()]
+    for lp in plexes:
+        _check(FunctionSpace(lp, Element("P", 3, "triangle")))
+    # the helpers must also behave on fully empty local plexes
+    gdim = mesh.coords.shape[1]
+    empty = LocalPlex(2, np.empty(0, _INT), np.zeros(1, _INT),
+                      np.empty(0, _INT), np.empty(0, _INT),
+                      np.empty(0, _INT), 0, np.empty((0, gdim)))
+    sp = FunctionSpace(empty, Element("P", 1, "triangle"))
+    assert sp.owned_dof_mask().shape == (0,)
+    assert sp.entity_of_dof().shape == (0,)
+    assert sp.dof_indices().shape == (0,)
