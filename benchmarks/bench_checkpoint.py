@@ -192,19 +192,23 @@ def timeseries_append(elems_per_rank: int = 1 << 16,
             "later_steps_s": round(float(np.mean(times[1:])), 4)}
 
 
-def rank_scaling_roundtrip(ranks=(2, 4, 8, 16, 32, 64, 128, 256, 512, 1024),
-                           elems_per_rank: int = 1 << 12) -> list[dict]:
+def rank_scaling_roundtrip(ranks=(2, 4, 8, 16, 32, 64, 128, 256, 512, 1024,
+                                  2048, 4096),
+                           elems_per_rank: int = 1 << 12,
+                           include_r8192: bool = False) -> list[dict]:
     """Rank-scaling sweep (the paper's headline axis, §6): full save +
     general-path N-to-M load round-trip at growing simulated rank counts.
 
     Infeasible pre-refactor: the dense list-of-lists collectives and the
     per-rank-pair star-forest loops made R > ~16 quadratically slow.  The
-    packed plans took the sweep to R = 64; with the CSR topology engine the
-    per-rank bookkeeping is O(edges), so the sweep now runs to R = 1024 in
-    seconds.  Wire bytes come from the exact CommStats accounting
-    (Tables 6.3–6.5 analogues)."""
+    packed plans took the sweep to R = 64; the CSR topology engine made the
+    per-rank bookkeeping O(edges) (R = 1024); the batched store I/O plans
+    coalesce every rank's segment into one pass per dataset, so the sweep
+    now runs to R = 4096 (R = 8192 behind ``include_r8192``) with
+    ``write_calls``/``read_calls`` independent of R.  Wire bytes come from
+    the exact CommStats accounting (Tables 6.3–6.5 analogues)."""
     rows = []
-    for nranks in ranks:
+    for nranks in tuple(ranks) + ((8192,) if include_r8192 else ()):
         total = nranks * elems_per_rank
         # two chunks per rank so the canonical load regions do NOT coincide
         # with the saved chunk boxes — forces the general N-to-M path, not
@@ -238,6 +242,8 @@ def rank_scaling_roundtrip(ranks=(2, 4, 8, 16, 32, 64, 128, 256, 512, 1024),
             "save_GiB_per_s": round(gib / max(t_save, 1e-9), 2),
             "load_GiB_per_s": round(gib / max(t_load, 1e-9), 2),
             "read_MiB": round(store.stats.bytes_read / 2 ** 20, 2),
+            "write_calls": store.stats.write_calls,
+            "read_calls": store.stats.read_calls,
         })
         store.close()
         shutil.rmtree(tmp)

@@ -166,7 +166,9 @@ class Comm:
             pair = np.array([[b.nbytes for b in row] for row in send],
                             dtype=_INT)
             self._account(pair)
-            return [[send[s][d] for s in range(R)] for d in range(R)]
+            # receive buffers are fresh memory, as in MPI: a receiver
+            # mutating its buffer must never corrupt the sender's array
+            return [[send[s][d].copy() for s in range(R)] for d in range(R)]
         counts = np.array([[len(b) for b in row] for row in send], dtype=_INT)
         flat = [np.concatenate(row) if R > 1 else row[0] for row in send]
         recv_flat = self.alltoallv_packed(counts, flat)
@@ -174,12 +176,14 @@ class Comm:
         return [np.split(recv_flat[d], splits[d]) for d in range(R)]
 
     def allgather(self, values: Sequence[np.ndarray]) -> list[list[np.ndarray]]:
-        """Every rank receives every rank's value."""
+        """Every rank receives every rank's value, in a fresh buffer (a
+        receiver mutating its copy must never corrupt the sender's array —
+        live on the N=1/M=1 paths where src and dst are the same rank)."""
         R = self.nranks
         nbytes = np.array([v.nbytes for v in values], dtype=_INT)
         total = int(nbytes.sum())
         self.stats.record(total * (R - 1), total)
-        return [[values[s] for s in range(R)] for _ in range(R)]
+        return [[values[s].copy() for s in range(R)] for _ in range(R)]
 
     def allreduce_sum(self, values: Sequence[np.ndarray]) -> list[np.ndarray]:
         R = self.nranks

@@ -344,6 +344,14 @@ def partition_starts(total: int, nranks: int) -> np.ndarray:
     return m * total // nranks
 
 
+def partition_segments(total: int, nranks: int) -> tuple[list[int], list[int]]:
+    """The canonical partition as ``(starts, counts)`` lists — the per-rank
+    segment shape :meth:`DatasetStore.write_plan`/``read_plan`` consume."""
+    starts = partition_starts(total, nranks)
+    return ([int(s) for s in starts[:nranks]],
+            [int(starts[r + 1] - starts[r]) for r in range(nranks)])
+
+
 def partition_rank_of(global_idx: np.ndarray, total: int, nranks: int) -> np.ndarray:
     """Which rank owns each global index under the canonical partition."""
     starts = partition_starts(total, nranks)

@@ -23,6 +23,22 @@ files:
 
 Writes of disjoint row ranges from different (simulated) ranks are safe and
 order-independent, which is the property the parallel-FS path relies on.
+
+Batched I/O plans
+-----------------
+``write_plan``/``read_plan`` take the per-rank ``(start, rows)`` segments of
+ONE dataset and execute them as a single open plus one coalesced pass:
+segments are sorted by start and maximal contiguous runs become one
+seek+write (or seek+read) each, so :attr:`IOStats.write_calls` /
+:attr:`IOStats.read_calls` count the *aggregated* operations — the
+collective-buffering model of MPI-IO/HDF5, where many small per-process
+accesses are widened into few contiguous ones before touching the
+filesystem.  The convention throughout the checkpoint layers is **one plan
+per dataset per phase**: callers collect every rank's segment for a dataset
+and issue one plan call instead of a ``for r in range(R)`` loop, which keeps
+the call count per dataset independent of the rank count.  Byte totals are
+unchanged (plans write/read exactly the requested rows), so dataset bytes on
+disk are identical to the per-rank-loop path.
 """
 
 from __future__ import annotations
@@ -191,6 +207,76 @@ class DatasetStore:
         self.stats.write_seconds += time.perf_counter() - t0
         self.stats.bytes_written += data.nbytes
 
+    def write_plan(self, name: str, starts, arrays) -> None:
+        """Batched multi-segment write: every rank's contiguous segment of one
+        dataset in a single open + one coalesced pass.
+
+        ``starts[i]`` is the first row of segment ``i`` and ``arrays[i]`` its
+        rows.  Segments must be pairwise disjoint (the parallel-FS contract);
+        maximal contiguous runs of segments are merged so one seek+write
+        covers them — ``write_calls`` counts the coalesced operations (split
+        only by the ``buffer_rows`` bounce buffer), not the segment count.
+        Bytes on disk are identical to issuing ``write_rows`` per segment.
+        """
+        info = self._info(name)
+        rb = self._row_nbytes(info)
+        dt = np_dtype(info["dtype"])
+        rows = int(info["rows"])
+        assert len(starts) == len(arrays), (
+            f"{name}: {len(starts)} starts for {len(arrays)} arrays")
+        segs = []
+        for start, data in zip(starts, arrays):
+            data = np.ascontiguousarray(data, dtype=dt)
+            if data.shape[0] == 0:
+                continue
+            assert data.shape[1:] == tuple(info["row_shape"]), (
+                f"{name}: row shape {data.shape[1:]} != {info['row_shape']}")
+            start = int(start)
+            assert 0 <= start and start + data.shape[0] <= rows, (
+                f"{name}: write segment [{start}, {start + data.shape[0]}) "
+                f"out of range for {rows} rows")
+            segs.append((start, data))
+        if not segs:
+            return
+        segs.sort(key=lambda s: s[0])
+        for (a, d), (b, _) in zip(segs, segs[1:]):
+            assert a + d.shape[0] <= b, (
+                f"{name}: overlapping write segments at row {b}")
+        self._invalidate_reader(name)
+        total = sum(d.nbytes for _, d in segs)
+        t0 = time.perf_counter()
+        with open(self._path(name), "r+b") as f:
+            i = 0
+            while i < len(segs):
+                j, end = i + 1, segs[i][0] + segs[i][1].shape[0]
+                while j < len(segs) and segs[j][0] == end:
+                    end += segs[j][1].shape[0]
+                    j += 1
+                # stream the run segment-by-segment (no run-sized staging
+                # copy), carrying the bounce-buffer slab accounting across
+                # segment boundaries: write_calls is ceil(run/buffer) exactly
+                # as if the run were one contiguous buffer
+                buf_rows = self.buffer_rows or (end - segs[i][0]) or 1
+                step = buf_rows * rb
+                f.seek(segs[i][0] * rb)
+                slab_left = 0
+                for _, d in segs[i:j]:
+                    # uint8 view, not memoryview/tobytes: zero-copy and it
+                    # also covers ml_dtypes (no buffer-protocol support)
+                    raw = d.view(np.uint8).reshape(-1)
+                    off = 0
+                    while off < len(raw):
+                        if slab_left == 0:
+                            slab_left = step
+                            self.stats.write_calls += 1
+                        n = min(slab_left, len(raw) - off)
+                        f.write(raw[off:off + n])
+                        off += n
+                        slab_left -= n
+                i = j
+        self.stats.write_seconds += time.perf_counter() - t0
+        self.stats.bytes_written += total
+
     def write_rows_at(self, name: str, row_idx: np.ndarray, data: np.ndarray) -> None:
         """Scattered row writes (slow path: one seek+write per contiguous run)."""
         info = self._info(name)
@@ -220,6 +306,9 @@ class DatasetStore:
     def read_rows(self, name: str, start: int, count: int) -> np.ndarray:
         info = self._info(name)
         rb = self._row_nbytes(info)
+        assert 0 <= start and 0 <= count and start + count <= info["rows"], (
+            f"{name}: read range [{start}, {start + count}) out of range "
+            f"for {info['rows']} rows")
         t0 = time.perf_counter()
         f = self._reader(name)
         f.seek(start * rb)
@@ -230,6 +319,50 @@ class DatasetStore:
         arr = np.frombuffer(raw, dtype=np_dtype(info["dtype"]))
         return arr.reshape((count, *info["row_shape"])).copy()
 
+    def read_plan(self, name: str, starts, counts) -> list[np.ndarray]:
+        """Batched multi-segment contiguous read: every rank's ``(start,
+        count)`` segment of one dataset in a single (cached) open + one
+        coalesced pass.  Adjacent/overlapping segments merge into maximal
+        runs — one seek+read per run, so ``read_calls`` counts the aggregated
+        operations.  Returns the per-segment arrays in input order."""
+        info = self._info(name)
+        rb = self._row_nbytes(info)
+        dt = np_dtype(info["dtype"])
+        rows = int(info["rows"])
+        starts = [int(s) for s in starts]
+        counts = [int(c) for c in counts]
+        assert len(starts) == len(counts)
+        for s, c in zip(starts, counts):
+            assert 0 <= s and 0 <= c and s + c <= rows, (
+                f"{name}: read segment [{s}, {s + c}) out of range "
+                f"for {rows} rows")
+        order = sorted((i for i in range(len(starts)) if counts[i]),
+                       key=lambda i: starts[i])
+        out: list[np.ndarray] = [
+            np.empty((c, *info["row_shape"]), dtype=dt) for c in counts]
+        t0 = time.perf_counter()
+        f = self._reader(name)
+        i = 0
+        while i < len(order):
+            j = i + 1
+            end = starts[order[i]] + counts[order[i]]
+            while j < len(order) and starts[order[j]] <= end:
+                end = max(end, starts[order[j]] + counts[order[j]])
+                j += 1
+            run_start = starts[order[i]]
+            f.seek(run_start * rb)
+            raw = f.read((end - run_start) * rb)
+            self.stats.read_calls += 1
+            self.stats.bytes_read += len(raw)
+            run = np.frombuffer(raw, dtype=dt).reshape(
+                (end - run_start, *info["row_shape"]))
+            for k in order[i:j]:
+                a = starts[k] - run_start
+                out[k][...] = run[a:a + counts[k]]
+            i = j
+        self.stats.read_seconds += time.perf_counter() - t0
+        return out
+
     def read_rows_at(self, name: str, row_idx: np.ndarray) -> np.ndarray:
         """Scattered row reads, coalesced into maximal contiguous runs."""
         info = self._info(name)
@@ -238,6 +371,9 @@ class DatasetStore:
                        dtype=np_dtype(info["dtype"]))
         if row_idx.size == 0:
             return out
+        assert int(row_idx.min()) >= 0 and int(row_idx.max()) < info["rows"], (
+            f"{name}: scattered read row index out of range "
+            f"[0, {info['rows']})")
         order = np.argsort(row_idx, kind="stable")
         sorted_idx = row_idx[order]
         breaks = np.flatnonzero(np.diff(sorted_idx) != 1) + 1

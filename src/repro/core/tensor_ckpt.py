@@ -32,7 +32,9 @@ import numpy as np
 
 from repro.core.chunk_layout import ArraySpec, Box, StateLayout, row_major_ids
 from repro.core.comm import Comm
-from repro.core.star_forest import StarForest, partition_starts
+from repro.core.star_forest import (
+    StarForest, partition_segments, partition_starts,
+)
 from repro.core.store import DatasetStore, np_dtype
 
 _INT = np.int64
@@ -160,16 +162,20 @@ class TensorCheckpoint:
         crc = f"{name}/e{epoch}/s{step}/crc"
         st.create(vec, spec.size, dtype=spec.dtype)
         st.create(crc, sec["Eo"], dtype="int64")
+        vec_rows, crc_rows = [], []
         for r in range(N):
             sh = per_rank[r].get(name)
             if sh is None or len(sh.ordinals) == 0:
+                vec_rows.append(np.empty(0, dtype=np_dtype(spec.dtype)))
+                crc_rows.append(np.empty(0, _INT))
                 continue
             blocks = [np.ascontiguousarray(sh.data[int(o)]).reshape(-1)
                       for o in sh.ordinals]
-            st.write_rows(vec, d_base[r], np.concatenate(blocks))
-            crcs = np.array([zlib.crc32(b.tobytes()) for b in blocks],
-                            dtype=_INT)
-            st.write_rows(crc, e_base[r], crcs)
+            vec_rows.append(np.concatenate(blocks))
+            crc_rows.append(np.array([zlib.crc32(b.tobytes())
+                                      for b in blocks], dtype=_INT))
+        st.write_plan(vec, d_base, vec_rows)
+        st.write_plan(crc, e_base, crc_rows)
 
     def _write_section(self, spec: ArraySpec, per_rank: PerRankState,
                        comm: Comm, epoch: int, meta: dict) -> None:
@@ -191,12 +197,12 @@ class TensorCheckpoint:
         st.create(f"{key}/G", Eo, dtype="int64")
         st.create(f"{key}/DOF", Eo, dtype="int64")
         st.create(f"{key}/OFF", Eo, dtype="int64")
-        for r in range(N):
-            off = d_base[r] + np.concatenate(
-                [[0], np.cumsum(sizes[r])])[:len(sizes[r])]
-            st.write_rows(f"{key}/G", e_base[r], ords[r])
-            st.write_rows(f"{key}/DOF", e_base[r], sizes[r])
-            st.write_rows(f"{key}/OFF", e_base[r], off.astype(_INT))
+        off_rows = [
+            (d_base[r] + np.concatenate([[0], np.cumsum(sizes[r])])
+             [:len(sizes[r])]).astype(_INT) for r in range(N)]
+        st.write_plan(f"{key}/G", e_base, ords)
+        st.write_plan(f"{key}/DOF", e_base, sizes)
+        st.write_plan(f"{key}/OFF", e_base, off_rows)
         meta[f"section/{name}/e{epoch}"] = {
             "Eo": Eo, "D": spec.size, "nranks": N,
             "e_base": e_base, "d_base": d_base,
@@ -238,12 +244,13 @@ class TensorCheckpoint:
 
         # ---- same-count fast path (§3.1): regions == saved chunks ----------
         if M == sec["nranks"] and _plan_matches_saved(grid, regions, sec):
+            per_rank_rows = st.read_plan(vec, sec["d_base"], sec["d_cnt"])
             out = []
             for m in range(M):
                 if sec["d_cnt"][m] == 0:
                     out.append([])
                     continue
-                rows = st.read_rows(vec, sec["d_base"][m], sec["d_cnt"][m])
+                rows = per_rank_rows[m]
                 blocks, p = [], 0
                 for o in sec["ordinals_per_rank"][m]:
                     box = grid.chunk_box(int(o))
@@ -259,13 +266,10 @@ class TensorCheckpoint:
                            dtype=_INT) for m in range(M)]
 
         # §2.2.5: canonical section chunks -> χ_{I_P}^{L_P}
-        estarts = partition_starts(Eo, M)
-        locG, locDOF, locOFF = [], [], []
-        for m in range(M):
-            a, n = int(estarts[m]), int(estarts[m + 1] - estarts[m])
-            locG.append(st.read_rows(f"{key}/G", a, n).astype(_INT))
-            locDOF.append(st.read_rows(f"{key}/DOF", a, n).astype(_INT))
-            locOFF.append(st.read_rows(f"{key}/OFF", a, n).astype(_INT))
+        ea, en = partition_segments(Eo, M)
+        locG = [a.astype(_INT) for a in st.read_plan(f"{key}/G", ea, en)]
+        locDOF = [a.astype(_INT) for a in st.read_plan(f"{key}/DOF", ea, en)]
+        locOFF = [a.astype(_INT) for a in st.read_plan(f"{key}/OFF", ea, en)]
         chi_IP_LP = StarForest.from_global_numbers(locG, grid.num_chunks, M)
 
         # (2.17): χ_{I_T}^{I_P}
@@ -304,10 +308,7 @@ class TensorCheckpoint:
 
         # (2.24): broadcast the vec through χ_{J_T}^{J_P}
         chi_JT_JP = StarForest.from_global_numbers(dof_ids, D, M)
-        dstarts = partition_starts(D, M)
-        locVEC = [st.read_rows(vec, int(dstarts[m]),
-                               int(dstarts[m + 1] - dstarts[m]))
-                  for m in range(M)]
+        locVEC = st.read_plan(vec, *partition_segments(D, M))
         VEC_T = chi_JT_JP.bcast(locVEC)
 
         # scatter into the target region arrays

@@ -32,17 +32,31 @@ Every transient per-rank topology fragment on the load side is a
 :class:`TopoCSR`: a *sorted* array of global ids with aligned dims and CSR
 cones whose entries are **positions into that id array** (a closed set always
 resolves).  Transitive closure of the on-disk topology
-(``_close_topology``), ownership resolution (``_resolve_owners``) and overlap
+(``_close_topologies``), ownership resolution (``_resolve_owners``) and overlap
 growth (``_grow_overlap``) are frontier-based vectorised BFS over these
 arrays — O(edges) work and no per-entity Python — so simulated loader rank
 counts in the hundreds-to-thousands stay cheap while the CommStats byte
 accounting is unchanged from the reference implementation (locked by
 ``tests/test_comm_packed.py`` against ``tests/data/commstats_seed.json``).
+
+Batched I/O convention
+----------------------
+All store traffic follows the **one plan per dataset per phase** rule: each
+save/load phase collects every rank's segment of a dataset and issues a
+single :meth:`DatasetStore.write_plan` / :meth:`DatasetStore.read_plan`
+call, and the loader's transitive closure runs all ranks' BFS in lockstep
+(:meth:`FEMCheckpoint._close_topologies`) so each round's frontier is ONE
+scattered read per topology dataset.  This is the aggregation step of
+parallel DMPlex I/O (Hapla et al., arXiv:2004.08729): store call counts per
+dataset are independent of the rank count, which is what keeps the
+rank-sweep benchmarks flat in R.  Dataset bytes and CommStats are identical
+to the per-rank-loop formulation.
 """
 
 from __future__ import annotations
 
 import dataclasses
+from typing import Sequence
 
 import numpy as np
 
@@ -50,6 +64,7 @@ from repro.core.comm import Comm, ragged_arange
 from repro.core.star_forest import (
     StarForest,
     partition_rank_of,
+    partition_segments,
     partition_starts,
 )
 from repro.core.store import DatasetStore
@@ -236,19 +251,24 @@ class FEMCheckpoint:
         st.create(f"{name}/topology/cone_offsets", E + 1, dtype="int64")
         st.create(f"{name}/topology/cones", total_cones, dtype="int64")
         st.create(f"{name}/topology/entity_owner", E, dtype="int64")
+        chunk_starts = [int(s) for s in starts[:N]]
+        offs_rows = []
         for r in range(N):
-            a = int(starts[r])
-            assert np.array_equal(ids_c[r], np.arange(a, int(starts[r + 1]))), \
+            assert np.array_equal(ids_c[r], np.arange(int(starts[r]),
+                                                      int(starts[r + 1]))), \
                 "every global number must be owned by exactly one rank"
-            st.write_rows(f"{name}/topology/dims", a, pay_c[r]["dims"])
-            st.write_rows(f"{name}/topology/cone_sizes", a, chunk_sizes[r])
             offs = bases[r] + np.concatenate([[0], np.cumsum(chunk_sizes[r])])
-            st.write_rows(f"{name}/topology/cone_offsets", a, offs[:-1])
-            if r == N - 1:
-                st.write_rows(f"{name}/topology/cone_offsets", E,
-                              np.array([total_cones], dtype=_INT))
-            st.write_rows(f"{name}/topology/entity_owner", a, pay_c[r]["owner"])
-            st.write_rows(f"{name}/topology/cones", bases[r], pay_k[r]["cones"])
+            offs_rows.append(offs[:-1])
+        # one coalesced plan per dataset — every rank's segment in one pass
+        st.write_plan(f"{name}/topology/dims", chunk_starts,
+                      [pay_c[r]["dims"] for r in range(N)])
+        st.write_plan(f"{name}/topology/cone_sizes", chunk_starts, chunk_sizes)
+        st.write_plan(f"{name}/topology/cone_offsets", chunk_starts + [E],
+                      offs_rows + [np.array([total_cones], dtype=_INT)])
+        st.write_plan(f"{name}/topology/entity_owner", chunk_starts,
+                      [pay_c[r]["owner"] for r in range(N)])
+        st.write_plan(f"{name}/topology/cones", bases,
+                      [pay_k[r]["cones"] for r in range(N)])
 
         # ---- labels (DMLabelsView): one global-indexed row per label -------
         labels = labels or {}
@@ -257,9 +277,8 @@ class FEMCheckpoint:
             ids_l, pay_l = _route_rows(comm, E, owned_ids,
                                        [{"v": vals[r]} for r in range(N)])
             st.create(f"{name}/labels/{lname}", E, dtype="int64")
-            for r in range(N):
-                st.write_rows(f"{name}/labels/{lname}", int(starts[r]),
-                              pay_l[r]["v"])
+            st.write_plan(f"{name}/labels/{lname}", chunk_starts,
+                          [pay_l[r]["v"] for r in range(N)])
 
         st.set_attrs(f"{name}/meta", {
             "E": E, "dim": dim, "gdim": gdim, "nranks_saved": N,
@@ -306,13 +325,14 @@ class FEMCheckpoint:
             st.create(f"{key}/G", Eo, dtype="int64")
             st.create(f"{key}/DOF", Eo, dtype="int64")
             st.create(f"{key}/OFF", Eo, dtype="int64")
-            for r in range(N):
-                sp, s = spaces[r], sel[r]
-                dof = sp.loc_dof[s]
-                off = d_base[r] + np.concatenate([[0], np.cumsum(dof)])[:len(dof)]
-                st.write_rows(f"{key}/G", e_base[r], sp.plex.loc_g[s])
-                st.write_rows(f"{key}/DOF", e_base[r], dof)
-                st.write_rows(f"{key}/OFF", e_base[r], off.astype(_INT))
+            dof_rows = [sp.loc_dof[s] for sp, s in zip(spaces, sel)]
+            off_rows = [
+                (d_base[r] + np.concatenate([[0], np.cumsum(dof_rows[r])])
+                 [:len(dof_rows[r])]).astype(_INT) for r in range(N)]
+            st.write_plan(f"{key}/G", e_base,
+                          [sp.plex.loc_g[s] for sp, s in zip(spaces, sel)])
+            st.write_plan(f"{key}/DOF", e_base, dof_rows)
+            st.write_plan(f"{key}/OFF", e_base, off_rows)
             el = spaces[0].element
             st.set_attrs(f"{key}/meta", {
                 "D": D, "Eo": Eo, "family": el.family, "degree": el.degree,
@@ -323,10 +343,9 @@ class FEMCheckpoint:
         suffix = "" if time_index is None else f"_t{time_index}"
         vec_name = f"{mesh}/func/{fname}/vec{suffix}"
         st.create(vec_name, D, dtype="float64")
-        for r in range(N):
-            sp, s = spaces[r], sel[r]
-            vals = funcs[r].values[ragged_arange(sp.loc_off[s], sp.loc_dof[s])]
-            st.write_rows(vec_name, d_base[r], vals)
+        st.write_plan(vec_name, d_base,
+                      [f.values[ragged_arange(sp.loc_off[s], sp.loc_dof[s])]
+                       for f, sp, s in zip(funcs, spaces, sel)])
         st.set_attrs(f"{mesh}/func/{fname}/meta", {"section": key})
 
     # ------------------------------------------------------------- load mesh
@@ -349,37 +368,63 @@ class FEMCheckpoint:
         flat = st.read_rows_at(f"{name}/topology/cones", rows).astype(_INT)
         return dims.astype(_INT), sizes, flat
 
-    def _close_topology(self, name: str, seed_ids: np.ndarray) -> TopoCSR:
-        """Transitively fetch cones until closed.  Frontier BFS: each round
-        fetches the whole frontier in one scattered read and keeps the unseen
-        cone targets; the fetched batches are then stitched into one sorted
-        CSR fragment with a single argsort + ragged gather."""
-        seen = np.unique(np.asarray(seed_ids, dtype=_INT))
-        if seen.size == 0:
-            return TopoCSR.empty()
-        frontier = seen
-        b_ids, b_dims, b_sizes, b_flat = [], [], [], []
-        while frontier.size:
-            d, sz, flat = self._fetch_entities(name, frontier)
-            b_ids.append(frontier)
-            b_dims.append(d)
-            b_sizes.append(sz)
-            b_flat.append(flat)
-            nxt = np.unique(flat)
-            frontier = nxt[~in_sorted(nxt, seen)]
-            seen = np.union1d(seen, frontier)
-        ids = np.concatenate(b_ids)
-        dims = np.concatenate(b_dims)
-        sizes = np.concatenate(b_sizes)
-        flat = np.concatenate(b_flat)
-        starts = (np.cumsum(sizes) - sizes).astype(_INT)
-        order = np.argsort(ids)            # batches are disjoint -> unique
-        sizes_s = sizes[order]
-        offsets = csr_offsets(sizes_s)
-        flat_s = flat[ragged_arange(starts[order], sizes_s)]
-        ids_s = ids[order]
-        return TopoCSR(ids_s, dims[order], offsets,
-                       np.searchsorted(ids_s, flat_s).astype(_INT))
+    def _close_topologies(self, name: str,
+                          seed_lists: Sequence[np.ndarray]) -> list[TopoCSR]:
+        """Transitively fetch cones until closed, for ALL ranks at once.
+
+        Frontier BFS in lockstep: each round takes the union of every active
+        rank's frontier, fetches it in one batched scattered read per dataset
+        (the aggregated-I/O model — duplicate ids across ranks are read once,
+        like MPI-IO collective buffering), then slices each rank's rows back
+        out of the union.  Per-rank frontier evolution — and hence the
+        returned fragments — is identical to closing each rank separately;
+        only the store call count (and duplicate traffic) shrinks.  Each
+        rank's fetched batches are finally stitched into one sorted CSR
+        fragment with a single argsort + ragged gather."""
+        M = len(seed_lists)
+        seens = [np.unique(np.asarray(s, dtype=_INT)) for s in seed_lists]
+        frontiers = [s for s in seens]
+        accs: list[list[list[np.ndarray]]] = [[[], [], [], []]
+                                              for _ in range(M)]
+        while True:
+            active = [m for m in range(M) if frontiers[m].size]
+            if not active:
+                break
+            union = (frontiers[active[0]] if len(active) == 1 else
+                     np.unique(np.concatenate([frontiers[m]
+                                               for m in active])))
+            dims_u, sizes_u, flat_u = self._fetch_entities(name, union)
+            off_u = csr_offsets(sizes_u)
+            for m in active:
+                pos = np.searchsorted(union, frontiers[m])
+                sz = sizes_u[pos]
+                b_ids, b_dims, b_sizes, b_flat = accs[m]
+                b_ids.append(frontiers[m])
+                b_dims.append(dims_u[pos])
+                b_sizes.append(sz)
+                flat = flat_u[ragged_arange(off_u[pos], sz)]
+                b_flat.append(flat)
+                nxt = np.unique(flat)
+                frontiers[m] = nxt[~in_sorted(nxt, seens[m])]
+                seens[m] = np.union1d(seens[m], frontiers[m])
+        out = []
+        for b_ids, b_dims, b_sizes, b_flat in accs:
+            if not b_ids:
+                out.append(TopoCSR.empty())
+                continue
+            ids = np.concatenate(b_ids)
+            dims = np.concatenate(b_dims)
+            sizes = np.concatenate(b_sizes)
+            flat = np.concatenate(b_flat)
+            starts = (np.cumsum(sizes) - sizes).astype(_INT)
+            order = np.argsort(ids)        # batches are disjoint -> unique
+            sizes_s = sizes[order]
+            offsets = csr_offsets(sizes_s)
+            flat_s = flat[ragged_arange(starts[order], sizes_s)]
+            ids_s = ids[order]
+            out.append(TopoCSR(ids_s, dims[order], offsets,
+                               np.searchsorted(ids_s, flat_s).astype(_INT)))
+        return out
 
     def _build_local(self, topo: TopoCSR, rank: int,
                      dim: int, gdim: int) -> LocalPlex:
@@ -407,12 +452,11 @@ class FEMCheckpoint:
         starts = partition_starts(E, M)
 
         # ---- Step 1 (DMPlexTopologyLoad): naive canonical partition → T00 --
-        t00_topos, t00_cells, t00_locg = [], [], []
-        for m in range(M):
-            a, b = int(starts[m]), int(starts[m + 1])
-            chunk = np.arange(a, b, dtype=_INT)
-            topo = self._close_topology(name, chunk)
-            t00_topos.append(topo)
+        chunks = [np.arange(int(starts[m]), int(starts[m + 1]), dtype=_INT)
+                  for m in range(M)]
+        t00_topos = self._close_topologies(name, chunks)
+        t00_cells, t00_locg = [], []
+        for m, (chunk, topo) in enumerate(zip(chunks, t00_topos)):
             pos = topo.positions_of(chunk)
             t00_cells.append(chunk[topo.dims[pos] == dim]
                              if chunk.size else chunk)
@@ -429,10 +473,8 @@ class FEMCheckpoint:
             nsaved = meta["nranks_saved"]
             assert M == nsaved, (
                 f"exact-distribution reload needs M == N ({M} != {nsaved})")
-            owner_rows = [st.read_rows(f"{name}/topology/entity_owner",
-                                       int(starts[m]),
-                                       int(starts[m + 1] - starts[m]))
-                          for m in range(M)]
+            owner_rows = st.read_plan(f"{name}/topology/entity_owner",
+                                      *partition_segments(E, M))
             dests = [owner_rows[m][t00_cells[m] - int(starts[m])].astype(_INT)
                      for m in range(M)]
         elif partition == "contiguous":
@@ -452,7 +494,7 @@ class FEMCheckpoint:
         recv = comm.alltoallv_packed(counts, cells_flat)
         t0_cells = [np.sort(r) for r in recv]
 
-        t0_topos = [self._close_topology(name, t0_cells[m]) for m in range(M)]
+        t0_topos = self._close_topologies(name, t0_cells)
         # order T0 local numbering like the final rule for determinism
         t0_locg = [_local_order(t.ids, t.dims) for t in t0_topos]
         t0_owner = _resolve_owners(comm, E, t0_locg, t0_cells, t0_topos)
@@ -467,8 +509,7 @@ class FEMCheckpoint:
         final_cells = t0_cells
         if overlap:
             final_cells = _grow_overlap(comm, E, t0_cells, t0_topos, overlap)
-        t_topos = [self._close_topology(name, final_cells[m])
-                   for m in range(M)]
+        t_topos = self._close_topologies(name, final_cells)
         t_owner = _resolve_owners(comm, E, [t.ids for t in t_topos],
                                   t0_cells, t_topos)
         plexes: list[LocalPlex] = []
@@ -498,10 +539,9 @@ class FEMCheckpoint:
         # ---- labels ---------------------------------------------------------
         labels = {}
         for lname in meta.get("labels", []):
-            chunks = [st.read_rows(f"{name}/labels/{lname}", int(starts[m]),
-                                   int(starts[m + 1] - starts[m]))
-                      for m in range(M)]
-            labels[lname] = chi_IT_LP.bcast(chunks)
+            lchunks = st.read_plan(f"{name}/labels/{lname}",
+                                   *partition_segments(E, M))
+            labels[lname] = chi_IT_LP.bcast(lchunks)
 
         mesh = LoadedMesh(plexes, chi_IT_LP, point_sf, E, dim, name, labels)
 
@@ -530,13 +570,10 @@ class FEMCheckpoint:
         spaces = [FunctionSpace(lp, element, bs=bs) for lp in mesh.plexes]
 
         # ---- §2.2.5: load section chunks, build χ_{I_P}^{L_P} --------------
-        estarts = partition_starts(Eo, M)
-        locG_P, locDOF_P, locOFF_P = [], [], []
-        for m in range(M):
-            a, n = int(estarts[m]), int(estarts[m + 1] - estarts[m])
-            locG_P.append(st.read_rows(f"{key}/G", a, n).astype(_INT))
-            locDOF_P.append(st.read_rows(f"{key}/DOF", a, n).astype(_INT))
-            locOFF_P.append(st.read_rows(f"{key}/OFF", a, n).astype(_INT))
+        ea, en = partition_segments(Eo, M)
+        locG_P = [a.astype(_INT) for a in st.read_plan(f"{key}/G", ea, en)]
+        locDOF_P = [a.astype(_INT) for a in st.read_plan(f"{key}/DOF", ea, en)]
+        locOFF_P = [a.astype(_INT) for a in st.read_plan(f"{key}/OFF", ea, en)]
         chi_IP_LP = chi_to_LP(locG_P, E)
 
         # ---- (2.17): χ_{I_T}^{I_P} = (χ_{I_P}^{L_P})⁻¹ ∘ χ_{I_T}^{L_P} ------
@@ -555,12 +592,9 @@ class FEMCheckpoint:
         chi_JT_JP = StarForest.from_global_numbers(dof_globals, D, M)
 
         # ---- (2.24): broadcast the vector ----------------------------------
-        dstarts = partition_starts(D, M)
         suffix = "" if time_index is None else f"_t{time_index}"
-        locVEC_P = [st.read_rows(f"{mesh.name}/func/{fname}/vec{suffix}",
-                                 int(dstarts[m]),
-                                 int(dstarts[m + 1] - dstarts[m]))
-                    for m in range(M)]
+        locVEC_P = st.read_plan(f"{mesh.name}/func/{fname}/vec{suffix}",
+                                *partition_segments(D, M))
         VEC_T = chi_JT_JP.bcast(locVEC_P)
         funcs = [Function(sp, v) for sp, v in zip(spaces, VEC_T)]
         return spaces, funcs

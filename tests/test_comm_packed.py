@@ -237,6 +237,59 @@ def test_plan_invariants(n_leaf, n_root, seed):
     assert [len(p) for p in parts] == list(sf.nleaves)
 
 
+# ------------------------------------------------- recv-buffer aliasing guard
+def test_alltoallv_r1_recv_buffers_are_fresh():
+    """R=1 (the N=1/M=1 grid cells): mutating a received buffer must never
+    corrupt the sender's array."""
+    comm = Comm(1)
+    send = np.arange(5.0)
+    keep = send.copy()
+    recv = comm.alltoallv([[send]])
+    assert not np.shares_memory(recv[0][0], send)
+    recv[0][0][:] = -1.0
+    np.testing.assert_array_equal(send, keep)
+
+
+def test_alltoallv_heterogeneous_fallback_copies():
+    comm = Comm(2)
+    send = [[np.arange(3.0), np.arange(2, dtype=_INT)],
+            [np.arange(4, dtype=_INT), np.arange(1.0)]]
+    keep = [[b.copy() for b in row] for row in send]
+    recv = comm.alltoallv(send)
+    for d in range(2):
+        for s in range(2):
+            assert not np.shares_memory(recv[d][s], send[s][d])
+            recv[d][s][...] = -1
+    for s in range(2):
+        for d in range(2):
+            np.testing.assert_array_equal(send[s][d], keep[s][d])
+
+
+def test_neighbor_alltoallv_single_edge_copies():
+    comm = Comm(1)
+    send = np.arange(4.0)
+    keep = send.copy()
+    out = comm.neighbor_alltoallv(np.array([0]), np.array([0]),
+                                  np.array([4]), [send])
+    assert not np.shares_memory(out[0], send)
+    out[0][:] = -1.0
+    np.testing.assert_array_equal(send, keep)
+
+
+def test_allgather_recv_buffers_are_fresh():
+    for R in (1, 3):
+        comm = Comm(R)
+        vals = [np.arange(3.0) + r for r in range(R)]
+        keep = [v.copy() for v in vals]
+        recv = comm.allgather(vals)
+        for d in range(R):
+            for s in range(R):
+                assert not np.shares_memory(recv[d][s], vals[s])
+                recv[d][s][:] = -1.0
+        for s in range(R):
+            np.testing.assert_array_equal(vals[s], keep[s])
+
+
 # ------------------------------------------------ CommStats byte-for-byte gate
 _SEED_STATS = json.loads(
     (pathlib.Path(__file__).parent / "data" / "commstats_seed.json")

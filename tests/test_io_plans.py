@@ -1,0 +1,218 @@
+"""Batched I/O plan layer tests (the per-process-I/O aggregation refactor).
+
+Contracts:
+
+  1. ``write_plan``/``read_plan`` move byte-identical data to the equivalent
+     per-segment ``write_rows``/``read_rows`` loops while coalescing maximal
+     contiguous runs into single calls (``IOStats`` counts the aggregated
+     operations — one per run, further split only by ``buffer_rows``);
+  2. out-of-range access fails loudly with the dataset name (a short read
+     must never surface as a cryptic ``reshape`` error downstream);
+  3. the loader's batched multi-rank closure (``_close_topologies``) returns
+     fragments identical to closing each rank separately.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.comm import Comm
+from repro.core.store import DatasetStore
+from repro.fem import Element, FEMCheckpoint, FunctionSpace, distribute, \
+    interpolate, tri_mesh
+
+
+# ------------------------------------------------------------- write plans
+def test_write_plan_bytes_match_per_segment_writes(tmp_path):
+    rng = np.random.default_rng(0)
+    starts = [0, 40, 10, 25]            # deliberately unsorted
+    counts = [10, 60, 15, 15]           # contiguous cover of [0, 100)
+    data = [rng.normal(size=(c, 3)) for c in counts]
+
+    st_loop = DatasetStore(str(tmp_path / "loop"), "w")
+    st_loop.create("d", 100, (3,), dtype="float64")
+    for s, d in zip(starts, data):
+        st_loop.write_rows("d", s, d)
+
+    st_plan = DatasetStore(str(tmp_path / "plan"), "w")
+    st_plan.create("d", 100, (3,), dtype="float64")
+    st_plan.write_plan("d", starts, data)
+
+    np.testing.assert_array_equal(st_plan.read_rows("d", 0, 100),
+                                  st_loop.read_rows("d", 0, 100))
+    assert st_plan.stats.bytes_written == st_loop.stats.bytes_written
+    # the four contiguous segments coalesce into ONE write call
+    assert st_plan.stats.write_calls == 1
+    assert st_loop.stats.write_calls == 4
+
+
+def test_write_plan_counts_runs_and_respects_buffer_rows(tmp_path):
+    st = DatasetStore(str(tmp_path), "w", buffer_rows=8)
+    st.create("d", 64, dtype="int64")
+    # two runs separated by a gap: [0, 16) and [32, 48)
+    st.write_plan("d", [0, 8, 32], [np.arange(8), np.arange(8),
+                                    np.arange(16)])
+    # each 16-row run is staged through the 8-row bounce buffer -> 2 calls
+    assert st.stats.write_calls == 4
+    np.testing.assert_array_equal(st.read_rows("d", 8, 8), np.arange(8))
+    np.testing.assert_array_equal(st.read_rows("d", 32, 16), np.arange(16))
+
+
+def test_write_plan_rejects_overlap_and_out_of_range(tmp_path):
+    st = DatasetStore(str(tmp_path), "w")
+    st.create("named/ds", 10, dtype="int64")
+    with pytest.raises(AssertionError, match="named/ds"):
+        st.write_plan("named/ds", [0, 3], [np.arange(5), np.arange(2)])
+    with pytest.raises(AssertionError, match="named/ds"):
+        st.write_plan("named/ds", [8], [np.arange(5)])
+
+
+def test_write_plan_skips_empty_segments(tmp_path):
+    st = DatasetStore(str(tmp_path), "w")
+    st.create("d", 6, dtype="int64")
+    st.write_plan("d", [0, 3, 3], [np.arange(3), np.empty(0, np.int64),
+                                   np.arange(3)])
+    np.testing.assert_array_equal(st.read_rows("d", 0, 6),
+                                  np.concatenate([np.arange(3),
+                                                  np.arange(3)]))
+    assert st.stats.write_calls == 1
+
+
+# -------------------------------------------------------------- read plans
+def test_read_plan_matches_read_rows_and_coalesces(tmp_path):
+    rng = np.random.default_rng(1)
+    ref = rng.normal(size=(100, 2))
+    st = DatasetStore(str(tmp_path), "w")
+    st.create("d", 100, (2,), dtype="float64")
+    st.write_rows("d", 0, ref)
+    calls0 = st.stats.read_calls
+    starts, counts = [70, 0, 30, 30], [30, 30, 40, 0]
+    got = st.read_plan("d", starts, counts)
+    for g, s, c in zip(got, starts, counts):
+        np.testing.assert_array_equal(g, ref[s:s + c])
+    # adjacent (and empty) segments merge into one contiguous run
+    assert st.stats.read_calls - calls0 == 1
+
+
+def test_read_plan_overlapping_segments_and_gaps(tmp_path):
+    ref = np.arange(50, dtype=np.int64)
+    st = DatasetStore(str(tmp_path), "w")
+    st.create("d", 50, dtype="int64")
+    st.write_rows("d", 0, ref)
+    calls0 = st.stats.read_calls
+    got = st.read_plan("d", [0, 5, 40], [10, 10, 10])
+    np.testing.assert_array_equal(got[0], ref[0:10])
+    np.testing.assert_array_equal(got[1], ref[5:15])
+    np.testing.assert_array_equal(got[2], ref[40:50])
+    # [0,10) and [5,15) overlap -> one run; [40,50) is a second run
+    assert st.stats.read_calls - calls0 == 2
+
+
+# ------------------------------------------------------- loud bounds checks
+def test_read_rows_out_of_range_fails_loudly(tmp_path):
+    st = DatasetStore(str(tmp_path), "w")
+    st.create("grp/vec", 10, dtype="float64")
+    st.write_rows("grp/vec", 0, np.zeros(10))
+    with pytest.raises(AssertionError, match="grp/vec"):
+        st.read_rows("grp/vec", 8, 5)
+    with pytest.raises(AssertionError, match="grp/vec"):
+        st.read_rows("grp/vec", -1, 2)
+    bytes_before = st.stats.bytes_read
+    with pytest.raises(AssertionError):
+        st.read_rows("grp/vec", 0, 11)
+    assert st.stats.bytes_read == bytes_before   # failed read not accounted
+
+
+def test_read_rows_at_out_of_range_fails_loudly(tmp_path):
+    st = DatasetStore(str(tmp_path), "w")
+    st.create("grp/dims", 10, dtype="int64")
+    st.write_rows("grp/dims", 0, np.arange(10))
+    with pytest.raises(AssertionError, match="grp/dims"):
+        st.read_rows_at("grp/dims", np.array([3, 10]))
+    with pytest.raises(AssertionError, match="grp/dims"):
+        st.read_rows_at("grp/dims", np.array([-2, 4]))
+
+
+def test_read_plan_out_of_range_fails_loudly(tmp_path):
+    st = DatasetStore(str(tmp_path), "w")
+    st.create("grp/off", 10, dtype="int64")
+    st.write_rows("grp/off", 0, np.arange(10))
+    with pytest.raises(AssertionError, match="grp/off"):
+        st.read_plan("grp/off", [0, 6], [4, 5])
+
+
+# ------------------------------------------- batched multi-rank BFS closure
+def _field(pts):
+    x, y = pts[:, 0], pts[:, 1]
+    return np.sin(3 * x) * (2 + np.cos(5 * y)) + x * y
+
+
+@pytest.fixture(scope="module")
+def mesh_store(tmp_path_factory):
+    mesh = tri_mesh(4, 3, seed=2)
+    comm = Comm(3)
+    plexes, _, _ = distribute(mesh, 3, method="random", seed=5)
+    store = DatasetStore(str(tmp_path_factory.mktemp("topo")), "w")
+    ck = FEMCheckpoint(store)
+    ck.save_mesh("m", plexes, comm)
+    return mesh, store
+
+
+def test_close_topologies_matches_per_rank_closure(mesh_store):
+    mesh, store = mesh_store
+    ck = FEMCheckpoint(store)
+    cells = mesh.cell_ids
+    seeds = [cells[::3], cells[1::4], np.empty(0, np.int64), cells[:5]]
+    batched = ck._close_topologies("m", seeds)
+    for s, got in zip(seeds, batched):
+        want = ck._close_topologies("m", [s])[0]
+        np.testing.assert_array_equal(got.ids, want.ids)
+        np.testing.assert_array_equal(got.dims, want.dims)
+        np.testing.assert_array_equal(got.offsets, want.offsets)
+        np.testing.assert_array_equal(got.cone_pos, want.cone_pos)
+
+
+def test_close_topologies_reads_frontier_union_once(mesh_store):
+    """Per BFS round, the union frontier costs one batched scattered read
+    per topology dataset — duplicated ids across ranks are fetched once."""
+    mesh, store = mesh_store
+    ck = FEMCheckpoint(store)
+    cells = mesh.cell_ids
+    calls0 = store.stats.read_calls
+    ck._close_topologies("m", [cells, cells])       # identical seed sets
+    dup_calls = store.stats.read_calls - calls0
+    calls1 = store.stats.read_calls
+    ck._close_topologies("m", [cells])
+    single_calls = store.stats.read_calls - calls1
+    assert dup_calls == single_calls
+
+
+# ---------------------------------------------------- labels N != M roundtrip
+@pytest.mark.parametrize("N,M", [(2, 5), (4, 3), (1, 4), (3, 1)])
+def test_boundary_labels_roundtrip_n_to_m(tmp_path, N, M):
+    """Boundary-style label values (not dimensions) survive an N-to-M
+    round-trip: every loaded entity carries the value saved for its global
+    number."""
+    mesh = tri_mesh(4, 4, seed=6)
+    # ground truth per global entity: boundary edges (one incident cell) = 1
+    cells = mesh.cell_ids
+    sizes = mesh.cone_offsets[cells + 1] - mesh.cone_offsets[cells]
+    edges = np.concatenate([mesh.cone_indices[mesh.cone_offsets[c]:
+                                              mesh.cone_offsets[c + 1]]
+                            for c in cells])
+    incidence = np.bincount(edges, minlength=mesh.num_entities)
+    bvals = np.zeros(mesh.num_entities, dtype=np.int64)
+    bvals[(mesh.dims == 1) & (incidence == 1)] = 1
+    assert bvals.sum() > 0          # the mesh does have a boundary
+
+    comm = Comm(N)
+    plexes, _, _ = distribute(mesh, N, method="random", seed=13)
+    store = DatasetStore(str(tmp_path), "w")
+    ck = FEMCheckpoint(store)
+    ck.save_mesh("m", plexes, comm,
+                 labels={"boundary": [bvals[lp.loc_g] for lp in plexes]})
+    loaded = ck.load_mesh("m", Comm(M), partition="random", seed=17)
+    total = 0
+    for lp, lab in zip(loaded.plexes, loaded.labels["boundary"]):
+        np.testing.assert_array_equal(lab, bvals[lp.loc_g])
+        total += int(lab.sum())
+    assert total > 0                # the boundary actually reached the loaders

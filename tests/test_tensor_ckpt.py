@@ -128,7 +128,8 @@ def test_roundtrip_misaligned_regions(tmp_path):
 
 def test_same_count_fast_path(tmp_path):
     """M == N with identical regions: verbatim contiguous reads, no index
-    math — one read per (rank, array)."""
+    math — the per-rank segments coalesce into ONE batched read per array
+    (independent of the rank count)."""
     layout = _layout()
     arrays = _arrays(layout, seed=5)
     N = 3
@@ -144,8 +145,9 @@ def test_same_count_fast_path(tmp_path):
     reads_before = store.stats.read_calls
     out = ck.load_state(plan, Comm(N), step=0)
     nread = store.stats.read_calls - reads_before
-    n_pairs = sum(1 for r in range(N) for name in own[r] if len(own[r][name]))
-    assert nread == n_pairs, f"fast path should do {n_pairs} reads, did {nread}"
+    n_arrays = len(layout.arrays)
+    assert nread == n_arrays, (
+        f"fast path should coalesce to {n_arrays} reads, did {nread}")
     for r in range(N):
         for name in own[r]:
             for o, got in zip(own[r][name], out[r][name]):
