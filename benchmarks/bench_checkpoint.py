@@ -193,9 +193,8 @@ def timeseries_append(elems_per_rank: int = 1 << 16,
 
 
 def rank_scaling_roundtrip(ranks=(2, 4, 8, 16, 32, 64, 128, 256, 512, 1024,
-                                  2048, 4096),
-                           elems_per_rank: int = 1 << 12,
-                           include_r8192: bool = False) -> list[dict]:
+                                  2048, 4096, 8192),
+                           elems_per_rank: int = 1 << 12) -> list[dict]:
     """Rank-scaling sweep (the paper's headline axis, §6): full save +
     general-path N-to-M load round-trip at growing simulated rank counts.
 
@@ -203,12 +202,12 @@ def rank_scaling_roundtrip(ranks=(2, 4, 8, 16, 32, 64, 128, 256, 512, 1024,
     per-rank-pair star-forest loops made R > ~16 quadratically slow.  The
     packed plans took the sweep to R = 64; the CSR topology engine made the
     per-rank bookkeeping O(edges) (R = 1024); the batched store I/O plans
-    coalesce every rank's segment into one pass per dataset, so the sweep
-    now runs to R = 4096 (R = 8192 behind ``include_r8192``) with
+    coalesce every rank's segment into one pass per dataset; and with the
+    flat load-side engine the sweep runs to R = 8192 by default, with
     ``write_calls``/``read_calls`` independent of R.  Wire bytes come from
     the exact CommStats accounting (Tables 6.3–6.5 analogues)."""
     rows = []
-    for nranks in tuple(ranks) + ((8192,) if include_r8192 else ()):
+    for nranks in tuple(ranks):
         total = nranks * elems_per_rank
         # two chunks per rank so the canonical load regions do NOT coincide
         # with the saved chunk boxes — forces the general N-to-M path, not

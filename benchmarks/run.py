@@ -7,7 +7,10 @@ from __future__ import annotations
 
 import argparse
 import json
+import pathlib
 import sys
+
+_REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
 
 
 def _print_table(title: str, rows: list[dict]):
@@ -40,10 +43,9 @@ def main(argv=None):
                  bc.weak_scaling_load_exact(elems_per_rank=scale))
     rank_sweep = (2, 4, 8, 16, 32, 64) if args.quick \
         else (2, 4, 8, 16, 32, 64, 128, 256, 512, 1024)
-    _print_table("Rank scaling: save/load round-trip",
-                 bc.rank_scaling_roundtrip(
-                     ranks=rank_sweep,
-                     elems_per_rank=max(scale >> 3, 1 << 10)))
+    tensor_rank_rows = bc.rank_scaling_roundtrip(
+        ranks=rank_sweep, elems_per_rank=max(scale >> 3, 1 << 10))
+    _print_table("Rank scaling: save/load round-trip", tensor_rank_rows)
     print("\n== §2.2.7: time-series appends (section saved once) ==")
     print(json.dumps(bc.timeseries_append(elems_per_rank=scale // 2),
                      indent=1))
@@ -56,12 +58,26 @@ def main(argv=None):
         else ((8, 8), (12, 12), (16, 16))
     _print_table("Paper Tables 6.3/6.4 (FE path, P4 triangles)",
                  fem_weak_scaling(sizes=sizes))
-    if args.quick:
-        _print_table("FE mesh+function rank sweep (CSR topology engine)",
-                     fem_rank_sweep(ranks=(8, 32, 64), nx=32, ny=32))
-    else:
-        _print_table("FE mesh+function rank sweep (CSR topology engine)",
-                     fem_rank_sweep())
+    fem_rank_rows = (fem_rank_sweep(ranks=(8, 32, 64), nx=32, ny=32)
+                     if args.quick else fem_rank_sweep())
+    _print_table("FE mesh+function rank sweep (flat load engine)",
+                 fem_rank_rows)
+
+    # Perf trajectory record: rank-sweep wall-times plus the IOStats /
+    # CommStats counters (write_calls/read_calls/wire_MiB per row), so load
+    # scaling across PRs is diffable instead of lost in terminal scrollback.
+    # A --quick run writes a sibling file so it never clobbers the committed
+    # full-sweep record.
+    loadscale = {
+        "quick": bool(args.quick),
+        "fem_rank_sweep": fem_rank_rows,
+        "tensor_rank_scaling": tensor_rank_rows,
+    }
+    out_path = _REPO_ROOT / ("BENCH_loadscale_quick.json" if args.quick
+                             else "BENCH_loadscale.json")
+    out_path.write_text(json.dumps(loadscale, indent=1, sort_keys=True)
+                        + "\n")
+    print(f"\nwrote {out_path}")
 
     from benchmarks import roofline
 

@@ -38,6 +38,14 @@ import numpy as np
 _INT = np.int64
 
 
+def split_segments(flat: np.ndarray, sizes) -> list[np.ndarray]:
+    """Cut a rank-major concatenated array into per-rank views — plain
+    slices, NOT ``np.split`` (whose axis plumbing costs two ``swapaxes``
+    per piece and dominates at thousands of ranks)."""
+    offs = np.concatenate([[0], np.cumsum(np.asarray(sizes, dtype=_INT))])
+    return [flat[a:b] for a, b in zip(offs[:-1], offs[1:])]
+
+
 def ragged_arange(starts: np.ndarray, lengths: np.ndarray) -> np.ndarray:
     """Concatenation of ``arange(s, s + n)`` for each (s, n) pair, fully
     vectorised — the workhorse of every CSR gather in this package."""
@@ -84,19 +92,26 @@ class Comm:
 
     # ----------------------------------------------------- packed collectives
     def neighbor_alltoallv(self, src: np.ndarray, dst: np.ndarray,
-                           cnt: np.ndarray, send_flat: Sequence[np.ndarray]
-                           ) -> list[np.ndarray]:
+                           cnt: np.ndarray,
+                           send_flat: "Sequence[np.ndarray] | np.ndarray",
+                           return_flat: bool = False):
         """Sparse (neighborhood) all-to-all over an explicit edge list.
 
         ``(src[e], dst[e], cnt[e])`` enumerates the nonempty src→dst pairs,
         sorted by ``(src, dst)``; ``send_flat[s]`` is ONE array per source
         rank — the concatenation, in ascending-destination order, of
         everything rank ``s`` sends (``cnt`` counts leading-dim rows).
+        ``send_flat`` may also be a single ndarray: the full src-major
+        concatenation (what a flat caller already holds), avoiding the
+        per-rank list round-trip.
 
         Returns ``recv_flat`` with ``recv_flat[d]`` = the concatenation, in
-        ascending-source order, of everything sent to ``d``.  Only the listed
-        edges are touched: work and accounting are O(edges + data), never
-        O(R²).
+        ascending-source order, of everything sent to ``d`` (views of one
+        freshly-permuted buffer).  With ``return_flat``, returns
+        ``(out_flat, offsets)`` instead — the dst-major concatenation plus
+        the per-destination row offsets — so flat pipelines skip the
+        per-rank split entirely.  Only the listed edges are touched: work
+        and accounting are O(edges + data), never O(R²).
         """
         R = self.nranks
         src = np.asarray(src, dtype=_INT)
@@ -107,14 +122,21 @@ class Comm:
             key = src * R + dst
             assert (np.diff(key) > 0).all(), \
                 "edges must be strictly sorted by (src, dst)"
-        data = [np.asarray(b) for b in send_flat]
-        assert len(data) == R
-        flat = np.concatenate(data) if R > 1 else data[0]
+        if isinstance(send_flat, np.ndarray):
+            flat = send_flat
+            assert int(cnt.sum()) == len(flat), \
+                "edge counts must cover every row of send_flat"
+        else:
+            data = [np.asarray(b) for b in send_flat]
+            assert len(data) == R
+            flat = np.concatenate(data) if R > 1 else data[0]
+            sent_rows = np.bincount(src, weights=cnt, minlength=R
+                                    ).astype(_INT)
+            assert np.array_equal(sent_rows,
+                                  np.array([len(d) for d in data])), \
+                "edge counts must cover every row of send_flat"
         # uniform row type across the exchange (one MPI datatype per call)
         row_nbytes = flat.itemsize * int(np.prod(flat.shape[1:], initial=1))
-        sent_rows = np.bincount(src, weights=cnt, minlength=R).astype(_INT)
-        assert np.array_equal(sent_rows, np.array([len(d) for d in data])), \
-            "edge counts must cover every row of send_flat"
 
         wire = cnt * row_nbytes
         off_wire = src != dst
@@ -127,7 +149,9 @@ class Comm:
         gather = ragged_arange(in_starts[order], cnt[order])
         out_flat = flat[gather]
         per_dst = np.bincount(dst, weights=cnt, minlength=R).astype(_INT)
-        offs = np.concatenate([[0], np.cumsum(per_dst)])
+        offs = np.concatenate([[0], np.cumsum(per_dst)]).astype(_INT)
+        if return_flat:
+            return out_flat, offs
         return [out_flat[offs[d]:offs[d + 1]] for d in range(R)]
 
     def alltoallv_packed(self, counts: np.ndarray,

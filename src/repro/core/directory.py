@@ -14,7 +14,7 @@ from typing import Sequence
 
 import numpy as np
 
-from repro.core.comm import Comm
+from repro.core.comm import Comm, split_segments
 from repro.core.star_forest import StarForest
 
 _INT = np.int64
@@ -25,18 +25,33 @@ Directory = tuple[list[np.ndarray], list[np.ndarray]]
 def location_directory(loc_g_list: list[np.ndarray], owned_list: list[np.ndarray],
                        total: int, comm: Comm) -> Directory:
     """Publish (global number -> owner (rank, local index)) onto the canonical
-    partition of ``{0..total-1}``.  Unpublished numbers hold -1."""
+    partition of ``{0..total-1}``.  Unpublished numbers hold -1.
+
+    Fully flat: the per-rank LocG/owned arrays are concatenated once, the
+    publish SF is built from the flat owned ids, and the two reduces run on
+    rank-tagged flat views — no per-rank array work at any rank count."""
     M = len(loc_g_list)
-    owned_globals = [lg[ow] for lg, ow in zip(loc_g_list, owned_list)]
-    pub = StarForest.from_global_numbers(owned_globals, total, M)
-    owner_rank = [np.full(int(s), -1, dtype=_INT) for s in pub.nroots]
-    owner_idx = [np.full(int(s), -1, dtype=_INT) for s in pub.nroots]
-    leaf_rank = [np.full(len(g), r, dtype=_INT)
-                 for r, g in enumerate(owned_globals)]
-    leaf_idx = [np.flatnonzero(ow).astype(_INT) for ow in owned_list]
-    owner_rank = pub.reduce(leaf_rank, "replace", owner_rank)
-    owner_idx = pub.reduce(leaf_idx, "replace", owner_idx)
-    comm.stats.record(sum(a.nbytes for a in leaf_rank) * 2, 0)
+    sizes = np.asarray([len(g) for g in loc_g_list], dtype=_INT)
+    cat_g = (np.concatenate([np.asarray(g, dtype=_INT) for g in loc_g_list])
+             if M else np.empty(0, _INT))
+    cat_own = (np.concatenate([np.asarray(o, dtype=bool)
+                               for o in owned_list])
+               if M else np.empty(0, bool))
+    owned_pos = np.flatnonzero(cat_own)
+    owned_g_flat = cat_g[owned_pos]
+    rank_rep = np.repeat(np.arange(M, dtype=_INT), sizes)
+    owned_rank = rank_rep[owned_pos]
+    owned_counts = np.bincount(owned_rank, minlength=M)
+    leaf_bases = np.concatenate([[0], np.cumsum(sizes)]).astype(_INT)
+    # local index of each published copy on its own rank
+    owned_idx = owned_pos - leaf_bases[owned_rank]
+    pub = StarForest.from_flat_global_numbers(owned_g_flat, owned_counts,
+                                              total, M)
+    owner_rank = pub.reduce(split_segments(owned_rank, owned_counts),
+                            "replace", fill=-1)
+    owner_idx = pub.reduce(split_segments(owned_idx, owned_counts),
+                           "replace", fill=-1)
+    comm.stats.record(int(owned_rank.nbytes) * 2, 0)
     return owner_rank, owner_idx
 
 
@@ -48,7 +63,11 @@ def location_query(directory: Directory, query_globals: list[np.ndarray],
     owner-side local sizes (one allgathered integer per rank)."""
     owner_rank, owner_idx = directory
     M = len(query_globals)
-    qry = StarForest.from_global_numbers(query_globals, total, M)
+    sizes = [len(g) for g in query_globals]
+    cat_q = (np.concatenate([np.asarray(g, dtype=_INT)
+                             for g in query_globals])
+             if M else np.empty(0, _INT))
+    qry = StarForest.from_flat_global_numbers(cat_q, sizes, total, M)
     rr = qry.bcast(owner_rank)
     ri = qry.bcast(owner_idx)
     comm.stats.record(sum(a.nbytes for a in rr) * 2, 0)

@@ -31,6 +31,8 @@ from typing import Callable, Sequence
 
 import numpy as np
 
+from repro.core.comm import split_segments
+
 _INT = np.int64
 
 
@@ -178,61 +180,80 @@ class StarForest:
         return StarForest(tuple(int(s) for s in root_sizes), tuple(rr), tuple(ri))
 
     @staticmethod
+    def from_flat_global_numbers(
+        flat_globals: np.ndarray, leaf_sizes: Sequence[int] | np.ndarray,
+        total: int, nranks_root: int
+    ) -> "StarForest":
+        """SF from the *concatenated* (leaf-rank-major) LocG array plus the
+        per-rank leaf counts — the flat fast path of the load-side engine.
+        One searchsorted over the whole concatenation resolves every leaf's
+        canonical root; the per-rank arrays are disjoint views of the two
+        flat attachment buffers, so no per-rank array work is done at any
+        rank count."""
+        flat_globals = np.asarray(flat_globals, dtype=_INT)
+        leaf_sizes = np.asarray(leaf_sizes, dtype=_INT)
+        assert int(leaf_sizes.sum()) == len(flat_globals)
+        root_sizes = partition_sizes(total, nranks_root)
+        starts = np.concatenate([[0], np.cumsum(root_sizes)])
+        rr_flat = (np.searchsorted(starts, flat_globals, side="right") - 1
+                   ).astype(_INT)
+        ri_flat = flat_globals - starts[rr_flat]
+        return StarForest(tuple(int(s) for s in root_sizes),
+                          tuple(split_segments(rr_flat, leaf_sizes)),
+                          tuple(split_segments(ri_flat, leaf_sizes)))
+
+    @staticmethod
     def from_global_numbers(
         leaf_globals: Sequence[np.ndarray], total: int, nranks_root: int
     ) -> "StarForest":
         """SF whose leaf ``(r, i)`` attaches to the canonical-partition root that
         owns global number ``leaf_globals[r][i]`` (paper: constructing χ_{I_T}^{L_P}
         and χ_{I_P}^{L_P} from LocG arrays)."""
-        root_sizes = partition_sizes(total, nranks_root)
-        starts = np.concatenate([[0], np.cumsum(root_sizes)])
-        rr, ri = [], []
-        for g in leaf_globals:
-            g = np.asarray(g, dtype=_INT)
-            r = np.searchsorted(starts, g, side="right") - 1
-            rr.append(r.astype(_INT))
-            ri.append(g - starts[r])
-        return StarForest(tuple(int(s) for s in root_sizes), tuple(rr), tuple(ri))
+        sizes = [len(g) for g in leaf_globals]
+        flat = (np.concatenate([np.asarray(g, dtype=_INT)
+                                for g in leaf_globals])
+                if leaf_globals else np.empty(0, _INT))
+        return StarForest.from_flat_global_numbers(flat, sizes, total,
+                                                   nranks_root)
 
     @staticmethod
     def from_sorted_global_numbers(
         leaf_globals: Sequence[np.ndarray], total: int, nranks_root: int
     ) -> "StarForest":
         """:meth:`from_global_numbers` for *presorted* per-rank id arrays
-        (ascending).  The per-root-rank segmentation is found by bisecting the
-        R + 1 partition bounds into each sorted id array — O(R log n) per rank
-        instead of O(n log R) — and root indices follow from one ``repeat``.
-        The sorted-id case is the common one on the load path: closure ids,
-        ownership candidates, and directory publishes are all sorted sets."""
-        root_sizes = partition_sizes(total, nranks_root)
-        starts = np.concatenate([[0], np.cumsum(root_sizes)])
-        rr, ri = [], []
-        for g in leaf_globals:
-            g = np.asarray(g, dtype=_INT)
-            assert g.size == 0 or (np.diff(g) >= 0).all(), \
+        (ascending) — closure ids, ownership candidates, and directory
+        publishes are all sorted sets on the load path.  Shares the flat
+        one-pass engine; the ascending precondition is checked once over the
+        concatenation (segment boundaries excluded)."""
+        sizes = np.asarray([len(g) for g in leaf_globals], dtype=_INT)
+        flat = (np.concatenate([np.asarray(g, dtype=_INT)
+                                for g in leaf_globals])
+                if leaf_globals else np.empty(0, _INT))
+        if len(flat) > 1:
+            interior = np.ones(len(flat) - 1, dtype=bool)
+            bounds = np.cumsum(sizes)[:-1]
+            interior[bounds[(bounds > 0) & (bounds < len(flat))] - 1] = False
+            assert (np.diff(flat)[interior] >= 0).all(), \
                 "from_sorted_global_numbers: ids must be ascending"
-            cut = np.searchsorted(g, starts)
-            r = np.repeat(np.arange(nranks_root, dtype=_INT), np.diff(cut))
-            rr.append(r)
-            ri.append(g - starts[r])
-        return StarForest(tuple(int(s) for s in root_sizes), tuple(rr),
-                          tuple(ri))
+        return StarForest.from_flat_global_numbers(flat, sizes, total,
+                                                   nranks_root)
 
     # ------------------------------------------------------------- operations
-    def bcast(self, root_data: Sequence[np.ndarray]) -> list[np.ndarray]:
+    def bcast(self, root_data: Sequence[np.ndarray],
+              fill=0) -> list[np.ndarray]:
         """Copy root values to attached leaves (PetscSFBcast).
 
         ``root_data[r]`` has leading dim ``nroots[r]``; returns per-rank leaf
-        arrays (unattached leaves are zero-filled).  One gather through the
-        precomputed plan; the per-rank outputs are disjoint views of a single
-        concatenated-leaf-space buffer.
+        arrays (unattached leaves hold ``fill``, zero by default).  One
+        gather through the precomputed plan; the per-rank outputs are
+        disjoint views of a single concatenated-leaf-space buffer.
         """
         assert len(root_data) == self.nranks_root
         plan: SFPlan = self.plan
         trailing = root_data[0].shape[1:]
         dtype = root_data[0].dtype
-        out_flat = np.zeros((int(plan.leaf_offsets[-1]),) + trailing,
-                            dtype=dtype)
+        out_flat = np.full((int(plan.leaf_offsets[-1]),) + trailing, fill,
+                           dtype=dtype)
         if plan.n_attached:
             flat_root = np.concatenate(
                 [np.asarray(a).reshape((len(a),) + trailing)
@@ -247,6 +268,7 @@ class StarForest:
         root_data: Sequence[np.ndarray] | None = None,
         trailing: tuple[int, ...] = (),
         dtype=None,
+        fill=None,
     ) -> list[np.ndarray]:
         """Combine leaf values into roots (PetscSFReduce). op ∈ {replace,sum,min,max}.
 
@@ -255,14 +277,32 @@ class StarForest:
         the rank-sequential reference semantics — later ranks win under
         ``replace``) and combined into the concatenated root space in one
         ``ufunc.at``/assignment.  Provided ``root_data`` arrays are updated
-        in place and returned.
+        in place and returned.  Without ``root_data``, the roots are
+        initialised flat to ``fill`` (the op's identity by default) and the
+        per-rank results come back as disjoint views of one concatenated
+        buffer — no per-rank allocation at any rank count.
         """
         dtype = dtype or leaf_data[0].dtype
-        if root_data is None:
-            init = {"sum": 0, "replace": 0, "min": np.iinfo(_INT).max if np.issubdtype(dtype, np.integer) else np.inf, "max": np.iinfo(_INT).min if np.issubdtype(dtype, np.integer) else -np.inf}[op]
-            root_data = [np.full((n,) + trailing, init, dtype=dtype) for n in self.nroots]
-        root_data = list(root_data)
         plan: SFPlan = self.plan
+        if root_data is None:
+            if fill is None:
+                fill = {"sum": 0, "replace": 0,
+                        "min": np.iinfo(_INT).max
+                        if np.issubdtype(dtype, np.integer) else np.inf,
+                        "max": np.iinfo(_INT).min
+                        if np.issubdtype(dtype, np.integer) else -np.inf}[op]
+            flat_root = np.full((int(plan.root_offsets[-1]),) + trailing,
+                                fill, dtype=dtype)
+            root_views = [flat_root[a:b] for a, b in
+                          zip(plan.root_offsets[:-1], plan.root_offsets[1:])]
+            if not plan.n_attached:
+                return root_views
+            trail = trailing
+            flat_leaf = np.concatenate(
+                [np.asarray(a).reshape((len(a),) + trail) for a in leaf_data])
+            self._combine(flat_root, flat_leaf[plan.scatter], op)
+            return root_views
+        root_data = list(root_data)
         if not plan.n_attached:
             return root_data
         trail = root_data[0].shape[1:]
@@ -271,6 +311,15 @@ class StarForest:
         vals = flat_leaf[plan.scatter]
         flat_root = np.concatenate(
             [np.asarray(a).reshape((len(a),) + trail) for a in root_data])
+        self._combine(flat_root, vals, op)
+        for r, (a, b) in enumerate(zip(plan.root_offsets[:-1],
+                                       plan.root_offsets[1:])):
+            np.copyto(root_data[r], flat_root[a:b].reshape(root_data[r].shape))
+        return root_data
+
+    def _combine(self, flat_root: np.ndarray, vals: np.ndarray,
+                 op: str) -> None:
+        plan: SFPlan = self.plan
         if op == "replace":
             # numpy fancy assignment applies in index order: the last
             # occurrence (highest leaf rank / index) wins, as in the
@@ -284,10 +333,6 @@ class StarForest:
             np.maximum.at(flat_root, plan.gather, vals)
         else:
             raise ValueError(op)
-        for r, (a, b) in enumerate(zip(plan.root_offsets[:-1],
-                                       plan.root_offsets[1:])):
-            np.copyto(root_data[r], flat_root[a:b].reshape(root_data[r].shape))
-        return root_data
 
     def compose(self, other: "StarForest") -> "StarForest":
         """``self``: L_A → R_A; ``other``: L_B(=R_A) → R_B.  Result: L_A → R_B.
@@ -298,13 +343,10 @@ class StarForest:
         assert self.nroots == other.nleaves, (
             f"compose: root space {self.nroots} != other's leaf space {other.nleaves}"
         )
-        new_rr = self.bcast([a for a in other.root_rank])
-        new_ri = self.bcast([a for a in other.root_idx])
-        # leaves unattached in self must stay unattached
-        for r in range(self.nranks_leaf):
-            una = self.root_rank[r] < 0
-            new_rr[r][una] = -1
-            new_ri[r][una] = -1
+        # leaves unattached in self stay unattached: bcast fills them with -1
+        # directly, so no per-rank masking pass is needed afterwards
+        new_rr = self.bcast([a for a in other.root_rank], fill=-1)
+        new_ri = self.bcast([a for a in other.root_idx], fill=-1)
         return StarForest(other.nroots, tuple(new_rr), tuple(new_ri))
 
     def invert(self, allow_partial: bool = False) -> "StarForest":

@@ -26,18 +26,28 @@ Load side (M ranks, M independent of N):
                           (2.17), entity→DoF lift (2.22–2.23), and the final
                           broadcast VEC_T[j_T] = VEC_P[χ(j_T)] (2.24).
 
-CSR load path
--------------
-Every transient per-rank topology fragment on the load side is a
-:class:`TopoCSR`: a *sorted* array of global ids with aligned dims and CSR
-cones whose entries are **positions into that id array** (a closed set always
-resolves).  Transitive closure of the on-disk topology
-(``_close_topologies``), ownership resolution (``_resolve_owners``) and overlap
-growth (``_grow_overlap``) are frontier-based vectorised BFS over these
-arrays — O(edges) work and no per-entity Python — so simulated loader rank
-counts in the hundreds-to-thousands stay cheap while the CommStats byte
-accounting is unchanged from the reference implementation (locked by
-``tests/test_comm_packed.py`` against ``tests/data/commstats_seed.json``).
+Flat CSR load path
+------------------
+All ranks' transient topology fragments on the load side live in ONE
+:class:`TopoForest`: the rank-major concatenation of per-rank
+:class:`TopoCSR` fragments (sorted global ids, aligned dims, CSR cones whose
+entries are **positions into the concatenated id array** — cone edges never
+cross rank segments, so a closed set always resolves).  Transitive closure
+of the on-disk topology (``_close_forest``), ownership resolution
+(``_resolve_owners``), overlap growth (``_grow_overlap``) and the local
+renumbering (``_build_locals``) each run as one frontier-based vectorised
+BFS / lexsort over the forest for EVERY rank at once — O(edges) work total
+and **no per-rank Python array loops anywhere on the load path**: the
+companion rule to the "one plan per dataset per phase" I/O convention below.
+A stage that needs per-rank outputs returns disjoint views of the flat
+buffers.  Where a (rank, id) pair must become one sort key it is packed as
+``rank * (E + 1) + id`` — safe because the rank count is bounded, unlike
+id×id keys, which are banned repo-wide (int64 overflow at the paper's
+8.2B-DoF scale).  Per-rank results — and the CommStats byte accounting —
+are bit-identical to the per-rank-loop formulation (locked by
+``tests/test_load_engine.py`` and ``tests/test_comm_packed.py`` against
+``tests/data/commstats_seed.json``); only the Python-loop count drops from
+O(ranks) to O(1), which is what takes the R = 8192 FE load to seconds.
 
 Batched I/O convention
 ----------------------
@@ -60,7 +70,7 @@ from typing import Sequence
 
 import numpy as np
 
-from repro.core.comm import Comm, ragged_arange
+from repro.core.comm import Comm, ragged_arange, split_segments
 from repro.core.star_forest import (
     StarForest,
     partition_rank_of,
@@ -72,9 +82,9 @@ from repro.fem.element import Element
 from repro.fem.function import Function
 from repro.fem.plex import (
     LocalPlex,
-    _local_order,
     csr_closure,
     csr_closure_pairs,
+    csr_closure_pairs_packed,
     csr_offsets,
     in_sorted,
     location_directory,
@@ -188,6 +198,99 @@ class TopoCSR:
                                       self.positions_of(cell_globals))
         m = self.dims[pts] == 0
         return self.ids[pts[m]], tags[m]
+
+
+# ================================================ all-ranks CSR topology forest
+@dataclasses.dataclass
+class TopoForest:
+    """Every rank's closed topology fragment as ONE rank-tagged CSR graph.
+
+    Positions are rank-major: rank ``m``'s fragment occupies
+    ``[bases[m], bases[m + 1])`` with global ids ascending within the
+    segment, and ``cone_pos`` entries point into the SAME concatenated
+    position space (cone edges never cross rank segments).  Every load-side
+    stage — transitive closure, ownership candidates, overlap incidence,
+    local renumbering — therefore runs as one vectorised pass over these
+    arrays for ALL ranks at once; per-rank :class:`TopoCSR` fragments are
+    recoverable as views (:meth:`fragment`).
+
+    ``(rank, id)`` pairs are packed into scalar int64 keys
+    ``rank * (E + 1) + id`` where useful — safe because the rank count is
+    bounded (M ≲ 10⁴) so ``M * (E + 1)`` stays far below 2**63 even at the
+    paper's multi-billion-entity scale (asserted at construction), unlike
+    id×id keys which are banned repo-wide.
+    """
+
+    E: int                         # global entity count (packed-key radix)
+    bases: np.ndarray              # [M + 1] entity position base per rank
+    ids: np.ndarray                # [n] global ids, ascending per segment
+    dims: np.ndarray               # [n]
+    offsets: np.ndarray            # [n + 1]
+    cone_pos: np.ndarray           # [nnz] positions into the concat space
+    rank_rep: np.ndarray           # [n] owning rank of each position
+
+    def __post_init__(self):
+        # unconditional (survives python -O): a silent key wrap would
+        # resolve BFS frontiers to wrong entities with no error
+        if self.nranks > 0 and \
+                self.nranks > np.iinfo(np.int64).max // (self.E + 1):
+            raise ValueError(
+                f"TopoForest: (rank, id) key packing overflows int64 for "
+                f"M={self.nranks}, E={self.E}")
+        self._key = None           # lazily-built sorted (rank, id) key table
+
+    @property
+    def nranks(self) -> int:
+        return len(self.bases) - 1
+
+    @property
+    def n(self) -> int:
+        return len(self.ids)
+
+    @property
+    def counts(self) -> np.ndarray:
+        return np.diff(self.bases)
+
+    def positions_of(self, ranks: np.ndarray, globals_: np.ndarray
+                     ) -> np.ndarray:
+        """Concatenated positions of (rank, global id) pairs — one
+        searchsorted over the packed key table; absent pairs fail loudly."""
+        if self._key is None:
+            self._key = self.rank_rep * _INT(self.E + 1) + self.ids
+        key = (np.asarray(ranks, dtype=_INT) * _INT(self.E + 1)
+               + np.asarray(globals_, dtype=_INT))
+        pos = np.minimum(np.searchsorted(self._key, key),
+                         max(self.n - 1, 0))
+        assert key.size == 0 or (self.n > 0
+                                 and (self._key[pos] == key).all()), \
+            "TopoForest.positions_of: (rank, id) not in the forest"
+        return pos
+
+    def positions_of_lists(self, per_rank: Sequence[np.ndarray]
+                           ) -> np.ndarray:
+        """Positions of per-rank global-id lists, concatenated rank-major."""
+        sizes = np.asarray([len(a) for a in per_rank], dtype=_INT)
+        flat = (np.concatenate([np.asarray(a, dtype=_INT)
+                                for a in per_rank])
+                if len(per_rank) else np.empty(0, _INT))
+        return self.positions_of(
+            np.repeat(np.arange(self.nranks, dtype=_INT), sizes), flat)
+
+    def split(self, flat: np.ndarray, counts: np.ndarray | None = None
+              ) -> list[np.ndarray]:
+        """Per-rank views of a rank-major concatenated array."""
+        sizes = self.counts if counts is None else np.asarray(counts)
+        return split_segments(flat, sizes)
+
+    def fragment(self, m: int) -> TopoCSR:
+        """Rank ``m``'s fragment as a (view-backed) :class:`TopoCSR`."""
+        a, b = int(self.bases[m]), int(self.bases[m + 1])
+        offs = self.offsets[a:b + 1] - self.offsets[a]
+        return TopoCSR(self.ids[a:b], self.dims[a:b], offs,
+                       self.cone_pos[self.offsets[a]:self.offsets[b]] - a)
+
+    def fragments(self) -> list[TopoCSR]:
+        return [self.fragment(m) for m in range(self.nranks)]
 
 
 # ============================================================ loaded mesh box
@@ -368,80 +471,117 @@ class FEMCheckpoint:
         flat = st.read_rows_at(f"{name}/topology/cones", rows).astype(_INT)
         return dims.astype(_INT), sizes, flat
 
-    def _close_topologies(self, name: str,
-                          seed_lists: Sequence[np.ndarray]) -> list[TopoCSR]:
-        """Transitively fetch cones until closed, for ALL ranks at once.
+    def _close_forest(self, name: str, seed_lists: Sequence[np.ndarray],
+                      E: int) -> TopoForest:
+        """Transitively fetch cones until closed, for ALL ranks at once,
+        with NO per-rank Python anywhere.
 
-        Frontier BFS in lockstep: each round takes the union of every active
-        rank's frontier, fetches it in one batched scattered read per dataset
-        (the aggregated-I/O model — duplicate ids across ranks are read once,
-        like MPI-IO collective buffering), then slices each rank's rows back
-        out of the union.  Per-rank frontier evolution — and hence the
-        returned fragments — is identical to closing each rank separately;
-        only the store call count (and duplicate traffic) shrinks.  Each
-        rank's fetched batches are finally stitched into one sorted CSR
-        fragment with a single argsort + ragged gather."""
+        The BFS state is the flat set of (rank, id) pairs, packed into
+        scalar keys: each round takes the union of every rank's frontier
+        ids, fetches it in one batched scattered read per dataset (the
+        aggregated-I/O model — duplicate ids across ranks are read once,
+        like MPI-IO collective buffering), expands every pair's cones in one
+        ragged gather, and keeps the unseen pairs.  Per-rank frontier
+        evolution — and hence the resulting fragments — is identical to
+        closing each rank separately; only the store call count (and
+        duplicate traffic) shrinks.  The accumulated batches are stitched
+        into the rank-major forest with a single lexsort + ragged gather."""
         M = len(seed_lists)
-        seens = [np.unique(np.asarray(s, dtype=_INT)) for s in seed_lists]
-        frontiers = [s for s in seens]
-        accs: list[list[list[np.ndarray]]] = [[[], [], [], []]
-                                              for _ in range(M)]
-        while True:
-            active = [m for m in range(M) if frontiers[m].size]
-            if not active:
-                break
-            union = (frontiers[active[0]] if len(active) == 1 else
-                     np.unique(np.concatenate([frontiers[m]
-                                               for m in active])))
+        sizes = np.asarray([len(s) for s in seed_lists], dtype=_INT)
+        seeds_flat = (np.concatenate([np.asarray(s, dtype=_INT)
+                                      for s in seed_lists])
+                      if M else np.empty(0, _INT))
+        radix = _INT(E + 1)
+        if M > 0 and M > np.iinfo(np.int64).max // (E + 1):
+            raise ValueError(f"(rank, id) key packing overflows int64 for "
+                             f"M={M}, E={E}")
+        f_key = np.unique(np.repeat(np.arange(M, dtype=_INT), sizes) * radix
+                          + seeds_flat)
+        seen_key = f_key
+        b_rank, b_ids, b_dims, b_sizes, b_flat = [], [], [], [], []
+        while f_key.size:
+            f_rank, f_ids = f_key // radix, f_key % radix
+            union = np.unique(f_ids)
             dims_u, sizes_u, flat_u = self._fetch_entities(name, union)
             off_u = csr_offsets(sizes_u)
-            for m in active:
-                pos = np.searchsorted(union, frontiers[m])
-                sz = sizes_u[pos]
-                b_ids, b_dims, b_sizes, b_flat = accs[m]
-                b_ids.append(frontiers[m])
-                b_dims.append(dims_u[pos])
-                b_sizes.append(sz)
-                flat = flat_u[ragged_arange(off_u[pos], sz)]
-                b_flat.append(flat)
-                nxt = np.unique(flat)
-                frontiers[m] = nxt[~in_sorted(nxt, seens[m])]
-                seens[m] = np.union1d(seens[m], frontiers[m])
-        out = []
-        for b_ids, b_dims, b_sizes, b_flat in accs:
-            if not b_ids:
-                out.append(TopoCSR.empty())
-                continue
-            ids = np.concatenate(b_ids)
-            dims = np.concatenate(b_dims)
-            sizes = np.concatenate(b_sizes)
-            flat = np.concatenate(b_flat)
-            starts = (np.cumsum(sizes) - sizes).astype(_INT)
-            order = np.argsort(ids)        # batches are disjoint -> unique
-            sizes_s = sizes[order]
-            offsets = csr_offsets(sizes_s)
-            flat_s = flat[ragged_arange(starts[order], sizes_s)]
-            ids_s = ids[order]
-            out.append(TopoCSR(ids_s, dims[order], offsets,
-                               np.searchsorted(ids_s, flat_s).astype(_INT)))
-        return out
+            pos = np.searchsorted(union, f_ids)
+            sz = sizes_u[pos]
+            b_rank.append(f_rank)
+            b_ids.append(f_ids)
+            b_dims.append(dims_u[pos])
+            b_sizes.append(sz)
+            flat = flat_u[ragged_arange(off_u[pos], sz)]
+            b_flat.append(flat)
+            nxt = np.unique(np.repeat(f_rank, sz) * radix + flat)
+            f_key = nxt[~in_sorted(nxt, seen_key)]
+            seen_key = np.union1d(seen_key, f_key)
+        if not b_rank:
+            return TopoForest(E, np.zeros(M + 1, _INT), np.empty(0, _INT),
+                              np.empty(0, _INT), np.zeros(1, _INT),
+                              np.empty(0, _INT), np.empty(0, _INT))
+        rank_cat = np.concatenate(b_rank)
+        ids_cat = np.concatenate(b_ids)
+        dims_cat = np.concatenate(b_dims)
+        sizes_cat = np.concatenate(b_sizes)
+        flat_cat = np.concatenate(b_flat)
+        starts_cat = (np.cumsum(sizes_cat) - sizes_cat).astype(_INT)
+        order = np.lexsort((ids_cat, rank_cat))   # pairs unique per batch
+        rank_s, ids_s = rank_cat[order], ids_cat[order]
+        sizes_s = sizes_cat[order]
+        offsets = csr_offsets(sizes_s)
+        flat_s = flat_cat[ragged_arange(starts_cat[order], sizes_s)]
+        key_table = rank_s * radix + ids_s
+        cone_pos = np.searchsorted(
+            key_table, np.repeat(rank_s, sizes_s) * radix + flat_s
+        ).astype(_INT)
+        bases = csr_offsets(np.bincount(rank_s, minlength=M))
+        return TopoForest(E, bases, ids_s, dims_cat[order], offsets,
+                          cone_pos, rank_s)
 
-    def _build_local(self, topo: TopoCSR, rank: int,
-                     dim: int, gdim: int) -> LocalPlex:
-        """Reorder a closed fragment into the deterministic local numbering
-        (cells, faces, vertices; ascending global id within a dimension) —
-        one lexsort plus one ragged cone gather."""
-        perm = np.lexsort((topo.ids, -topo.dims))
-        order_ids = topo.ids[perm]
-        inv = np.empty(topo.n, dtype=_INT)
-        inv[perm] = np.arange(topo.n, dtype=_INT)
-        sizes = (topo.offsets[1:] - topo.offsets[:-1])[perm]
-        flat_pos = topo.cone_pos[ragged_arange(topo.offsets[perm], sizes)]
-        cone_offsets = csr_offsets(sizes)
-        vc = np.full((topo.n, gdim), np.nan)
-        owner = np.full(topo.n, -1, dtype=_INT)
-        return LocalPlex(dim, topo.dims[perm], cone_offsets, inv[flat_pos],
-                         order_ids, owner, rank, vc)
+    def _close_topologies(self, name: str,
+                          seed_lists: Sequence[np.ndarray]) -> list[TopoCSR]:
+        """Per-rank fragment view of :meth:`_close_forest` (reference and
+        test surface; the load pipeline stays on the forest)."""
+        E = int(self.store.get_attrs(f"{name}/meta")["E"])
+        return self._close_forest(name, seed_lists, E).fragments()
+
+    def _build_locals(self, forest: TopoForest, dim: int, gdim: int,
+                      owner_cat: np.ndarray | None = None
+                      ) -> list[LocalPlex]:
+        """Reorder every rank's closed fragment into the deterministic local
+        numbering (cells, faces, vertices; ascending global id within a
+        dimension) in ONE batched lexsort + ragged cone gather across all
+        ranks; the returned :class:`LocalPlex` arrays are disjoint views of
+        the flat buffers.  ``owner_cat`` (aligned to forest positions) is
+        carried through the same permutation."""
+        n, M = forest.n, forest.nranks
+        sizes = np.diff(forest.offsets)
+        perm = np.lexsort((forest.ids, -forest.dims, forest.rank_rep))
+        inv = np.empty(n, dtype=_INT)
+        inv[perm] = np.arange(n, dtype=_INT)
+        sizes_p = sizes[perm]
+        flat_pos = forest.cone_pos[ragged_arange(forest.offsets[perm],
+                                                 sizes_p)]
+        ebase = forest.bases
+        counts = np.diff(ebase)
+        nnz_r = forest.offsets[ebase[1:]] - forest.offsets[ebase[:-1]]
+        # cone targets: permuted position - rank base = local index
+        cone_local = inv[flat_pos] - np.repeat(ebase[:-1], nnz_r)
+        co = csr_offsets(sizes_p)
+        # per-rank offset arrays (each n_r + 1 long, rebased to 0), built flat
+        co_idx = ragged_arange(ebase[:-1], counts + 1)
+        co_local = co[co_idx] - np.repeat(co[ebase[:-1]], counts + 1)
+        loc_g_v = forest.split(forest.ids[perm])
+        dims_v = forest.split(forest.dims[perm])
+        offs_v = split_segments(co_local, counts + 1)
+        cones_v = split_segments(cone_local, nnz_r)
+        owner_v = (forest.split(owner_cat[perm])
+                   if owner_cat is not None
+                   else forest.split(np.full(n, -1, dtype=_INT)))
+        vc_v = split_segments(np.full((n, gdim), np.nan), counts)
+        return [LocalPlex(dim, dims_v[m], offs_v[m], cones_v[m], loc_g_v[m],
+                          owner_v[m].astype(_INT, copy=False), m, vc_v[m])
+                for m in range(M)]
 
     def load_mesh(self, name: str, comm: Comm, *, partition: str = "contiguous",
                   seed: int = 0, overlap: int = 1,
@@ -452,77 +592,93 @@ class FEMCheckpoint:
         starts = partition_starts(E, M)
 
         # ---- Step 1 (DMPlexTopologyLoad): naive canonical partition → T00 --
-        chunks = [np.arange(int(starts[m]), int(starts[m + 1]), dtype=_INT)
-                  for m in range(M)]
-        t00_topos = self._close_topologies(name, chunks)
-        t00_cells, t00_locg = [], []
-        for m, (chunk, topo) in enumerate(zip(chunks, t00_topos)):
-            pos = topo.positions_of(chunk)
-            t00_cells.append(chunk[topo.dims[pos] == dim]
-                             if chunk.size else chunk)
-            # T00 local numbering: canonical chunk first (ascending), ghosts
-            ghosts = np.setdiff1d(topo.ids, chunk)
-            t00_locg.append(np.concatenate([chunk, ghosts]))
-        chi_T00_LP = chi_to_LP(t00_locg, E)
+        chunks = split_segments(np.arange(E, dtype=_INT), np.diff(starts))
+        f00 = self._close_forest(name, chunks, E)
+        # T00 bookkeeping, flat: a position is "in chunk" iff its global id
+        # falls in its own rank's canonical range
+        in_chunk = ((f00.ids >= starts[f00.rank_rep])
+                    & (f00.ids < starts[f00.rank_rep + 1]))
+        cell_mask = in_chunk & (f00.dims == dim)
+        cells_flat = f00.ids[cell_mask]
+        cell_rank = f00.rank_rep[cell_mask]
+        cell_counts = np.bincount(cell_rank, minlength=M)
+        t00_cells = split_segments(cells_flat, cell_counts)
+        # T00 local numbering: canonical chunk first (ascending), then ghosts
+        order00 = np.lexsort((f00.ids, ~in_chunk, f00.rank_rep))
+        t00_counts = f00.counts
+        t00_locg_flat = f00.ids[order00]
+        chi_T00_LP = StarForest.from_flat_global_numbers(
+            t00_locg_flat, t00_counts, E, M)
 
         # ---- Step 2 (DMPlexDistribute): repartition cells → T0 -------------
-        cell_counts = [len(c) for c in t00_cells]
-        cell_bases = comm.exscan_sum(cell_counts)
-        ncells = cell_bases[-1] + cell_counts[-1]
+        cell_bases = comm.exscan_sum([int(c) for c in cell_counts])
+        ncells = (cell_bases[-1] + int(cell_counts[-1])) if M else 0
         if exact_distribution:
             nsaved = meta["nranks_saved"]
-            assert M == nsaved, (
-                f"exact-distribution reload needs M == N ({M} != {nsaved})")
+            if M != nsaved:
+                raise ValueError(
+                    f"exact-distribution reload needs the loading rank count "
+                    f"to equal the saving one: loading on M={M} ranks, "
+                    f"saved from N={nsaved}")
             owner_rows = st.read_plan(f"{name}/topology/entity_owner",
                                       *partition_segments(E, M))
-            dests = [owner_rows[m][t00_cells[m] - int(starts[m])].astype(_INT)
-                     for m in range(M)]
+            # rank-major concatenation of the canonical segments == the full
+            # entity_owner table, indexable by global id (BSP-sim shortcut
+            # for the per-rank chunk lookups)
+            dests = np.concatenate(owner_rows)[cells_flat].astype(_INT)
         elif partition == "contiguous":
-            dests = [partition_rank_of(
-                cell_bases[m] + np.arange(cell_counts[m], dtype=_INT),
-                ncells, M) for m in range(M)]
+            # rank-major flat cell list == ascending global cell index
+            dests = partition_rank_of(np.arange(ncells, dtype=_INT),
+                                      ncells, M)
         elif partition == "random":
-            dests = [((t00_cells[m] * np.int64(2654435761) + seed) % M
-                      ).astype(_INT) for m in range(M)]
+            dests = random_partition_dests(cells_flat, M, seed)
         else:
             raise ValueError(partition)
-        counts = np.zeros((M, M), dtype=_INT)
-        cells_flat = []
-        for m in range(M):
-            order, counts[m] = _dest_pack(dests[m], M)
-            cells_flat.append(t00_cells[m][order])
-        recv = comm.alltoallv_packed(counts, cells_flat)
-        t0_cells = [np.sort(r) for r in recv]
+        # CSR-pack by (source rank, destination) and ship the sparse edges —
+        # no dense R×R count matrix is ever materialised
+        skey = cell_rank * _INT(M) + dests
+        sorder = np.argsort(skey, kind="stable")
+        sek, secnt = np.unique(skey, return_counts=True)
+        recv_flat, recv_offs = comm.neighbor_alltoallv(
+            sek // M, sek % M, secnt, cells_flat[sorder], return_flat=True)
+        t0_cell_counts = np.diff(recv_offs)
+        recv_rank = np.repeat(np.arange(M, dtype=_INT), t0_cell_counts)
+        t0_cells = split_segments(recv_flat[np.lexsort((recv_flat,
+                                                        recv_rank))],
+                                  t0_cell_counts)
 
-        t0_topos = self._close_topologies(name, t0_cells)
+        f0 = self._close_forest(name, t0_cells, E)
         # order T0 local numbering like the final rule for determinism
-        t0_locg = [_local_order(t.ids, t.dims) for t in t0_topos]
-        t0_owner = _resolve_owners(comm, E, t0_locg, t0_cells, t0_topos)
+        order0 = np.lexsort((f0.ids, -f0.dims, f0.rank_rep))
+        t0_locg_flat = f0.ids[order0]
+        t0_counts = f0.counts
+        t0_locg = f0.split(t0_locg_flat)
+        t0_owner = _resolve_owners(comm, E, t0_locg_flat, t0_counts,
+                                   t0_cells, f0)
         # χ_{I_T0}^{I_T00}: root = T00 copy on the canonical rank of g
-        rr = [partition_rank_of(g, E, M) for g in t0_locg]
-        ri = [g - starts[r] for g, r in zip(t0_locg, rr)]
-        chi_T0_T00 = StarForest(tuple(len(g) for g in t00_locg),
-                                tuple(a.astype(_INT) for a in rr),
-                                tuple(a.astype(_INT) for a in ri))
+        rr_flat = partition_rank_of(t0_locg_flat, E, M)
+        ri_flat = t0_locg_flat - starts[rr_flat]
+        chi_T0_T00 = StarForest(tuple(int(c) for c in t00_counts),
+                                tuple(f0.split(rr_flat)),
+                                tuple(f0.split(ri_flat)))
 
         # ---- Step 3 (DMPlexDistributeOverlap): grow overlap → T ------------
         final_cells = t0_cells
         if overlap:
-            final_cells = _grow_overlap(comm, E, t0_cells, t0_topos, overlap)
-        t_topos = self._close_topologies(name, final_cells)
-        t_owner = _resolve_owners(comm, E, [t.ids for t in t_topos],
-                                  t0_cells, t_topos)
-        plexes: list[LocalPlex] = []
-        for m in range(M):
-            lp = self._build_local(t_topos[m], m, dim, gdim)
-            # owner array (aligned to sorted ids) -> final local order
-            if lp.loc_g.size:
-                lp.owner = t_owner[m][t_topos[m].positions_of(lp.loc_g)
-                                      ].astype(_INT)
-            plexes.append(lp)
+            final_cells = _grow_overlap(comm, E, t0_cells, f0, overlap)
+        f_t = self._close_forest(name, final_cells, E)
+        t_owner = _resolve_owners(comm, E, f_t.ids, f_t.counts,
+                                  t0_cells, f_t)
+        # owner arrays are aligned to the forest's sorted ids; the batched
+        # local build carries them through its permutation
+        plexes = self._build_locals(f_t, dim, gdim,
+                                    owner_cat=np.concatenate(t_owner)
+                                    if f_t.n else None)
 
         # χ_{I_T}^{I_T0}: directory over T0, queried with final LocG ---------
-        t0_owned = [t0_owner[m] == m for m in range(M)]
+        t0_owner_flat = np.concatenate(t0_owner) if f0.n else np.empty(0, _INT)
+        t0_owned = f0.split(t0_owner_flat
+                            == np.repeat(np.arange(M, dtype=_INT), t0_counts))
         t0_dir = location_directory(t0_locg, t0_owned, E, comm)
         chi_T_T0 = location_query(t0_dir, [lp.loc_g for lp in plexes], E, comm,
                                   [len(g) for g in t0_locg])
@@ -601,79 +757,118 @@ class FEMCheckpoint:
 
 
 # ============================================================ loader helpers
-def _resolve_owners(comm: Comm, E: int, loc_g: list[np.ndarray],
-                    owned_cells: list[np.ndarray],
-                    topos: list[TopoCSR]) -> list[np.ndarray]:
+def random_partition_dests(cell_globals: np.ndarray, nranks: int,
+                           seed: int) -> np.ndarray:
+    """Pseudo-random repartition destinations for the adversarial load path:
+    a Knuth-multiplicative hash of the global cell number, mixed in uint64.
+
+    The arithmetic MUST be unsigned: int64 products ``g * 2654435761``
+    silently wrap once ``g`` reaches ~3.5e9 (paper-scale entity counts) and
+    raise RuntimeWarning under ``np.errstate(over='raise')``; uint64 wraps
+    are the hash's defined behaviour, and the result is reduced mod
+    ``nranks`` before the int64 cast so dests always land in ``[0, M)``.
+    For ids small enough that int64 never wrapped, the dests are identical
+    to the historical signed hash (the CommStats-locked regime)."""
+    g = np.asarray(cell_globals, dtype=_INT).astype(np.uint64)
+    h = g * np.uint64(2654435761) + np.uint64(int(seed) % (1 << 64))
+    return (h % np.uint64(nranks)).astype(_INT)
+
+
+def _resolve_owners(comm: Comm, E: int, loc_g_flat: np.ndarray,
+                    loc_sizes: np.ndarray, owned_cells: list[np.ndarray],
+                    forest: TopoForest) -> list[np.ndarray]:
     """Entity ownership on a (re)distributed topology: owner(e) = min rank
     among ranks owning a cell whose closure contains e.  Fully distributed:
     candidates reduce(min) onto the canonical partition, then bcast back.
-    The per-rank candidate set is one vectorised CSR closure."""
+    ALL ranks' candidate sets come from one CSR closure over the forest;
+    the query numbering comes in flat (``loc_g_flat`` rank-major with
+    ``loc_sizes`` per-rank counts — what every caller already holds) and
+    the returned per-rank arrays (aligned to it) are views of one flat
+    buffer."""
     M = comm.nranks
-    cand_ids = [topos[m].closure_of(owned_cells[m]) for m in range(M)]
-    cand_rank = [np.full(len(ids), m, dtype=_INT)
-                 for m, ids in enumerate(cand_ids)]
-    pub = StarForest.from_sorted_global_numbers(cand_ids, E, M)
-    owner_glob = pub.reduce(cand_rank, "min",
-                            [np.full(int(s), np.iinfo(np.int64).max, dtype=_INT)
-                             for s in pub.nroots])
-    comm.stats.record(sum(a.nbytes for a in cand_rank), 0)
-    qry = StarForest.from_global_numbers(loc_g, E, M)
+    cand_pos = csr_closure(forest.offsets, forest.cone_pos,
+                           forest.positions_of_lists(owned_cells))
+    cand_ids = forest.ids[cand_pos]
+    cand_rank = forest.rank_rep[cand_pos]
+    cand_counts = np.bincount(cand_rank, minlength=M)
+    pub = StarForest.from_flat_global_numbers(cand_ids, cand_counts, E, M)
+    owner_glob = pub.reduce(split_segments(cand_rank, cand_counts),
+                            "min", dtype=_INT,
+                            fill=np.iinfo(np.int64).max)
+    comm.stats.record(int(cand_rank.nbytes), 0)
+    qry = StarForest.from_flat_global_numbers(loc_g_flat, loc_sizes, E, M)
     out = qry.bcast(owner_glob)
     comm.stats.record(sum(a.nbytes for a in out), 0)
     return out
 
 
 def _grow_overlap(comm: Comm, E: int, owned_cells: list[np.ndarray],
-                  topos: list[TopoCSR], layers: int) -> list[np.ndarray]:
+                  forest: TopoForest, layers: int) -> list[np.ndarray]:
     """Single-layer vertex-adjacency overlap growth (DMPlexDistributeOverlap;
     §2.1.2: 'a single layer of neighboring cells') via a distributed
-    vertex→cells directory: one alltoallv publish, one query, one answer.
-    The (vertex, cell) incidence publish is one tagged CSR closure per rank."""
+    vertex→cells directory: one alltoallv publish, one query, one answer —
+    each compiled to its sparse edge list straight from flat rank-tagged
+    arrays.  The (vertex, cell) incidence publish for EVERY rank is one
+    position-tagged CSR closure over the forest; nothing iterates ranks."""
     assert layers == 1, "the loader grows one overlap layer, as in the paper"
     M = comm.nranks
-    # publish (vertex -> cell) incidences of owned cells
-    pub_v, pub_c = [], []
-    for m in range(M):
-        v, c = topos[m].vertex_incidence_of(owned_cells[m])
-        pub_v.append(v)
-        pub_c.append(c)
-    counts = np.zeros((M, M), dtype=_INT)
-    send_v, send_c = [], []
-    for s in range(M):
-        order, counts[s] = _dest_pack(partition_rank_of(pub_v[s], E, M), M)
-        send_v.append(pub_v[s][order])
-        send_c.append(pub_c[s][order])
-    rv = comm.alltoallv_packed(counts, send_v)
-    rc = comm.alltoallv_packed(counts, send_c)
-    # directory (per canonical rank): sorted unique (vertex, cell) incidences
-    # (2-column unique, not scalar v*E+c key packing, which would overflow
-    # int64 beyond ~3e9 entities — the paper's 8.2B-DoF scale)
-    dir_v, dir_c = [], []
-    for d in range(M):
-        vc = np.unique(np.stack([rv[d], rc[d]], axis=1), axis=0)
-        dir_v.append(vc[:, 0])
-        dir_c.append(vc[:, 1])
-    # query: my vertices -> all incident cells anywhere
-    qcounts = np.zeros((M, M), dtype=_INT)
-    send_q = []
-    for s in range(M):
-        q = np.unique(pub_v[s])
-        order, qcounts[s] = _dest_pack(partition_rank_of(q, E, M), M)
-        send_q.append(q[order])
-    rq = comm.alltoallv_packed(qcounts, send_q)
-    # answer: per querying rank, the sorted-unique incident cells; built as
-    # one CSR expansion per directory rank (no per-(dst, src)-pair work)
-    acounts = np.zeros((M, M), dtype=_INT)
-    send_a = []
-    for d in range(M):
-        src_of_q = np.repeat(np.arange(M, dtype=_INT), qcounts[:, d])
-        lo = np.searchsorted(dir_v[d], rq[d], side="left")
-        hi = np.searchsorted(dir_v[d], rq[d], side="right")
-        cells = dir_c[d][ragged_arange(lo, hi - lo)]
-        tags = np.repeat(src_of_q, hi - lo)
-        tc = np.unique(np.stack([tags, cells], axis=1), axis=0)
-        acounts[d] = np.bincount(tc[:, 0], minlength=M)
-        send_a.append(tc[:, 1])
-    back = comm.alltoallv_packed(acounts, send_a)
-    return [np.unique(np.concatenate([owned_cells[m], back[m]]))
-            for m in range(M)]
+    radix = _INT(E + 1)
+    # ---- publish (vertex -> cell) incidences of owned cells, all ranks ----
+    tags, pts = csr_closure_pairs_packed(
+        forest.offsets, forest.cone_pos,
+        forest.positions_of_lists(owned_cells))
+    vm = forest.dims[pts] == 0
+    v_pt, v_tag = pts[vm], tags[vm]
+    pub_v = forest.ids[v_pt]           # vertex global id
+    pub_c = forest.ids[v_tag]          # seed cell global id
+    pub_src = forest.rank_rep[v_pt]    # publishing rank (== rank of v_tag)
+    dest = partition_rank_of(pub_v, E, M)
+    key = pub_src * _INT(M) + dest
+    order = np.argsort(key, kind="stable")
+    ek, ecnt = np.unique(key, return_counts=True)
+    rv, rv_offs = comm.neighbor_alltoallv(ek // M, ek % M, ecnt,
+                                          pub_v[order], return_flat=True)
+    rc, _ = comm.neighbor_alltoallv(ek // M, ek % M, ecnt,
+                                    pub_c[order], return_flat=True)
+    # directory (per canonical rank): sorted unique (vertex, cell)
+    # incidences.  3-column unique over (rank, vertex, cell) — the vertex
+    # and cell columns stay unpacked, since a v*E+c key would overflow int64
+    # beyond ~3e9 entities (the paper's 8.2B-DoF scale); the rank column is
+    # the only packed-safe axis.
+    dir_rep = np.repeat(np.arange(M, dtype=_INT), np.diff(rv_offs))
+    trip = np.unique(np.stack([dir_rep, rv, rc], axis=1), axis=0)
+    dir_d, dir_v, dir_c = trip[:, 0], trip[:, 1], trip[:, 2]
+    dir_key = dir_d * radix + dir_v    # non-decreasing (trip is lexsorted)
+    # ---- query: my vertices -> all incident cells anywhere ---------------
+    qk = np.unique(pub_src * radix + pub_v)
+    q_src, q_v = qk // radix, qk % radix
+    q_dst = partition_rank_of(q_v, E, M)
+    qkey = q_src * _INT(M) + q_dst     # already non-decreasing in (src, v)
+    qek, qecnt = np.unique(qkey, return_counts=True)
+    rq, rq_offs = comm.neighbor_alltoallv(qek // M, qek % M, qecnt, q_v,
+                                          return_flat=True)
+    # ---- answer: per querying rank, the sorted-unique incident cells -----
+    qe_order = np.lexsort((qek // M, qek % M))     # receive side: (dst, src)
+    src_of_q = np.repeat((qek // M)[qe_order], qecnt[qe_order])
+    rq_d = np.repeat(np.arange(M, dtype=_INT), np.diff(rq_offs))
+    lo = np.searchsorted(dir_key, rq_d * radix + rq, side="left")
+    hi = np.searchsorted(dir_key, rq_d * radix + rq, side="right")
+    cells = dir_c[ragged_arange(lo, hi - lo)]
+    atrip = np.unique(np.stack([np.repeat(rq_d, hi - lo),
+                                np.repeat(src_of_q, hi - lo),
+                                cells], axis=1), axis=0)
+    akey = atrip[:, 0] * _INT(M) + atrip[:, 1]
+    aek, aecnt = np.unique(akey, return_counts=True)
+    back, back_offs = comm.neighbor_alltoallv(aek // M, aek % M, aecnt,
+                                              atrip[:, 2], return_flat=True)
+    # ---- final per-rank cell sets: owned ∪ received, one packed unique ---
+    own_sizes = np.asarray([len(c) for c in owned_cells], dtype=_INT)
+    own_flat = (np.concatenate([np.asarray(c, dtype=_INT)
+                                for c in owned_cells])
+                if M else np.empty(0, _INT))
+    all_rank = np.concatenate([np.repeat(np.arange(M, dtype=_INT),
+                                         own_sizes),
+                               np.repeat(np.arange(M, dtype=_INT),
+                                         np.diff(back_offs))])
+    u = np.unique(all_rank * radix + np.concatenate([own_flat, back]))
+    return split_segments(u % radix, np.bincount(u // radix, minlength=M))

@@ -128,6 +128,40 @@ def csr_closure_pairs(offsets: np.ndarray, indices: np.ndarray,
     return seen[:, 0], seen[:, 1]
 
 
+def csr_closure_pairs_packed(offsets: np.ndarray, indices: np.ndarray,
+                             seeds: np.ndarray
+                             ) -> tuple[np.ndarray, np.ndarray]:
+    """Self-tagged transitive closure over *positions*: unique
+    (seed position, reachable position) pairs, seeds included, sorted by
+    (seed, point).  The fused all-ranks variant of
+    :func:`csr_closure_pairs` used by the flat load engine: because tag and
+    point are both positions into ONE in-memory array of length ``n``,
+    packing the pair into the scalar key ``tag * n + point`` cannot overflow
+    int64 (n² < 2**63 for any addressable n) — unlike global-id tags, where
+    ``tag * E`` overflows at the paper's multi-billion-entity scale and the
+    2-column unique of :func:`csr_closure_pairs` is required."""
+    n = len(offsets) - 1
+    # unconditional (survives python -O): a wrapped key silently pairs the
+    # wrong (seed, point) positions
+    if n > 0 and n > np.iinfo(np.int64).max // n:
+        raise ValueError(f"position-key packing overflows int64 for n={n}")
+    seeds = np.asarray(seeds, dtype=_INT)
+    if seeds.size == 0:
+        return np.empty(0, _INT), np.empty(0, _INT)
+    nn = np.int64(max(n, 1))
+    seen = np.unique(seeds * nn + seeds)
+    frontier = seen
+    while frontier.size:
+        t, p = frontier // nn, frontier % nn
+        cnt = offsets[p + 1] - offsets[p]
+        cand = (np.repeat(t, cnt) * nn
+                + indices[ragged_arange(offsets[p], cnt)])
+        nxt = np.unique(cand)
+        frontier = nxt[~in_sorted(nxt, seen)]
+        seen = np.union1d(seen, frontier)
+    return seen // nn, seen % nn
+
+
 # =============================================================== global mesh
 @dataclasses.dataclass
 class Plex:

@@ -1,0 +1,321 @@
+"""Flat (rank-batched) load-side redistribution engine tests.
+
+The PR-4 refactor runs every ``load_mesh`` stage as ONE vectorised pass over
+all ranks' fragments (the :class:`TopoForest` concatenated CSR) instead of
+``for m in range(M)`` loops.  Contracts:
+
+  1. batched ``_grow_overlap`` / ``_resolve_owners`` / ``_build_locals``
+     equal naive per-rank reference implementations (the pre-refactor
+     algorithms, kept here) on random small meshes — including empty-rank
+     (M > ncells) configurations — with identical CommStats accounting;
+  2. the ``partition="random"`` destination hash mixes in uint64: dests stay
+     in ``[0, M)`` and seed-stable for global ids near 2**62 (where the old
+     int64 product silently wrapped), and match the historical signed hash
+     in the no-wrap regime CommStats are locked against;
+  3. ``exact_distribution`` with M != N raises a ``ValueError`` naming both
+     counts (the old ``assert`` vanished under ``python -O``);
+  4. a timed R=1024 ``load_mesh``+``load_function`` smoke guards the flat
+     engine against gross regressions, like
+     ``test_rank_scaling_roundtrip_64_ranks`` does for the tensor path.
+"""
+
+import json
+import pathlib
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.comm import Comm, ragged_arange
+from repro.core.star_forest import StarForest, partition_rank_of
+from repro.core.store import DatasetStore
+from repro.fem import (
+    Element,
+    FEMCheckpoint,
+    FunctionSpace,
+    distribute,
+    interpolate,
+    tri_mesh,
+    tri_mesh_fast,
+)
+from repro.fem.checkpoint import (
+    TopoCSR,
+    _grow_overlap,
+    _resolve_owners,
+    random_partition_dests,
+)
+from repro.fem.plex import csr_offsets
+
+_INT = np.int64
+
+
+def _field(pts):
+    x, y = pts[:, 0], pts[:, 1]
+    return np.sin(3 * x) * (2 + np.cos(5 * y)) + x * y
+
+
+# ----------------------------------------- naive per-rank reference engines
+def _dest_pack(dest, nranks):
+    order = np.argsort(dest, kind="stable")
+    return order, np.bincount(dest, minlength=nranks).astype(_INT)
+
+
+def naive_resolve_owners(comm, E, loc_g, owned_cells, topos):
+    """Pre-refactor ownership resolution: per-rank CSR closures, SF built
+    from per-rank lists, explicit per-rank root buffers."""
+    M = comm.nranks
+    cand_ids = [topos[m].closure_of(owned_cells[m]) for m in range(M)]
+    cand_rank = [np.full(len(ids), m, dtype=_INT)
+                 for m, ids in enumerate(cand_ids)]
+    pub = StarForest.from_sorted_global_numbers(cand_ids, E, M)
+    owner_glob = pub.reduce(
+        cand_rank, "min",
+        [np.full(int(s), np.iinfo(np.int64).max, dtype=_INT)
+         for s in pub.nroots])
+    comm.stats.record(sum(a.nbytes for a in cand_rank), 0)
+    qry = StarForest.from_global_numbers(loc_g, E, M)
+    out = qry.bcast(owner_glob)
+    comm.stats.record(sum(a.nbytes for a in out), 0)
+    return out
+
+
+def naive_grow_overlap(comm, E, owned_cells, topos, layers):
+    """Pre-refactor overlap growth: per-rank incidence closures and
+    dest-packs, dense R×R count matrices."""
+    assert layers == 1
+    M = comm.nranks
+    pub_v, pub_c = [], []
+    for m in range(M):
+        v, c = topos[m].vertex_incidence_of(owned_cells[m])
+        pub_v.append(v)
+        pub_c.append(c)
+    counts = np.zeros((M, M), dtype=_INT)
+    send_v, send_c = [], []
+    for s in range(M):
+        order, counts[s] = _dest_pack(partition_rank_of(pub_v[s], E, M), M)
+        send_v.append(pub_v[s][order])
+        send_c.append(pub_c[s][order])
+    rv = comm.alltoallv_packed(counts, send_v)
+    rc = comm.alltoallv_packed(counts, send_c)
+    dir_v, dir_c = [], []
+    for d in range(M):
+        vc = np.unique(np.stack([rv[d], rc[d]], axis=1), axis=0)
+        dir_v.append(vc[:, 0])
+        dir_c.append(vc[:, 1])
+    qcounts = np.zeros((M, M), dtype=_INT)
+    send_q = []
+    for s in range(M):
+        q = np.unique(pub_v[s])
+        order, qcounts[s] = _dest_pack(partition_rank_of(q, E, M), M)
+        send_q.append(q[order])
+    rq = comm.alltoallv_packed(qcounts, send_q)
+    acounts = np.zeros((M, M), dtype=_INT)
+    send_a = []
+    for d in range(M):
+        src_of_q = np.repeat(np.arange(M, dtype=_INT), qcounts[:, d])
+        lo = np.searchsorted(dir_v[d], rq[d], side="left")
+        hi = np.searchsorted(dir_v[d], rq[d], side="right")
+        cells = dir_c[d][ragged_arange(lo, hi - lo)]
+        tags = np.repeat(src_of_q, hi - lo)
+        tc = np.unique(np.stack([tags, cells], axis=1), axis=0)
+        acounts[d] = np.bincount(tc[:, 0], minlength=M)
+        send_a.append(tc[:, 1])
+    back = comm.alltoallv_packed(acounts, send_a)
+    return [np.unique(np.concatenate([owned_cells[m], back[m]]))
+            for m in range(M)]
+
+
+def naive_build_local(topo: TopoCSR, rank, dim, gdim):
+    """Pre-refactor per-rank local build: one lexsort + cone gather."""
+    perm = np.lexsort((topo.ids, -topo.dims))
+    order_ids = topo.ids[perm]
+    inv = np.empty(topo.n, dtype=_INT)
+    inv[perm] = np.arange(topo.n, dtype=_INT)
+    sizes = (topo.offsets[1:] - topo.offsets[:-1])[perm]
+    flat_pos = topo.cone_pos[ragged_arange(topo.offsets[perm], sizes)]
+    return (topo.dims[perm], csr_offsets(sizes), inv[flat_pos], order_ids)
+
+
+# ------------------------------------------------------------------ fixtures
+def _saved_store(tmp_path, nx, ny, mesh_seed, N, method, name="m"):
+    mesh = tri_mesh(nx, ny, seed=mesh_seed)
+    plexes, _, _ = distribute(mesh, N, method=method, seed=3)
+    store = DatasetStore(str(tmp_path), "w")
+    ck = FEMCheckpoint(store)
+    ck.save_mesh(name, plexes, Comm(N))
+    return mesh, store, ck
+
+
+def _random_cell_split(mesh, M, seed):
+    """Random per-rank owned-cell sets (possibly empty ranks)."""
+    cells = mesh.cell_ids
+    rng = np.random.default_rng(seed)
+    owner = rng.integers(0, M, size=len(cells))
+    return [np.sort(cells[owner == m]) for m in range(M)]
+
+
+CASES = [
+    # (nx, ny, mesh_seed, N, M) — M=12 > ncells=8 exercises empty ranks
+    (4, 3, 7, 3, 5),
+    (3, 3, 11, 2, 7),
+    (2, 2, 5, 2, 12),
+]
+
+
+# --------------------------------------------------- batched == naive engines
+@pytest.mark.parametrize("nx,ny,mesh_seed,N,M", CASES)
+def test_grow_overlap_matches_naive(tmp_path, nx, ny, mesh_seed, N, M):
+    mesh, store, ck = _saved_store(tmp_path, nx, ny, mesh_seed, N, "random")
+    E = mesh.num_entities
+    owned = _random_cell_split(mesh, M, seed=mesh_seed + 1)
+    forest = ck._close_forest("m", owned, E)
+    topos = forest.fragments()
+    c_flat, c_ref = Comm(M), Comm(M)
+    got = _grow_overlap(c_flat, E, owned, forest, 1)
+    want = naive_grow_overlap(c_ref, E, owned, topos, 1)
+    assert len(got) == len(want) == M
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(g, w)
+    # byte-for-byte identical traffic accounting
+    assert c_flat.stats == c_ref.stats
+    store.close()
+
+
+@pytest.mark.parametrize("nx,ny,mesh_seed,N,M", CASES)
+def test_resolve_owners_matches_naive(tmp_path, nx, ny, mesh_seed, N, M):
+    mesh, store, ck = _saved_store(tmp_path, nx, ny, mesh_seed, N, "random")
+    E = mesh.num_entities
+    owned = _random_cell_split(mesh, M, seed=mesh_seed + 2)
+    forest = ck._close_forest("m", owned, E)
+    topos = forest.fragments()
+    loc_g = [t.ids for t in topos]
+    c_flat, c_ref = Comm(M), Comm(M)
+    got = _resolve_owners(c_flat, E, forest.ids, forest.counts, owned, forest)
+    want = naive_resolve_owners(c_ref, E, loc_g, owned, topos)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(g, w)
+    assert c_flat.stats == c_ref.stats
+    store.close()
+
+
+@pytest.mark.parametrize("nx,ny,mesh_seed,N,M", CASES)
+def test_build_locals_matches_naive(tmp_path, nx, ny, mesh_seed, N, M):
+    mesh, store, ck = _saved_store(tmp_path, nx, ny, mesh_seed, N, "random")
+    E, dim = mesh.num_entities, mesh.dim
+    owned = _random_cell_split(mesh, M, seed=mesh_seed + 3)
+    forest = ck._close_forest("m", owned, E)
+    owner_cat = np.arange(forest.n, dtype=_INT) % max(M, 1)  # any alignment
+    plexes = ck._build_locals(forest, dim, 2, owner_cat=owner_cat)
+    assert len(plexes) == M
+    for m, lp in enumerate(plexes):
+        topo = forest.fragment(m)
+        dims_w, offs_w, cones_w, ids_w = naive_build_local(topo, m, dim, 2)
+        np.testing.assert_array_equal(lp.dims, dims_w)
+        np.testing.assert_array_equal(lp.cone_offsets, offs_w)
+        np.testing.assert_array_equal(lp.cone_indices, cones_w)
+        np.testing.assert_array_equal(lp.loc_g, ids_w)
+        # the owner payload rides the same permutation
+        perm = np.lexsort((topo.ids, -topo.dims))
+        np.testing.assert_array_equal(
+            lp.owner,
+            owner_cat[int(forest.bases[m]):int(forest.bases[m + 1])][perm])
+        assert lp.rank == m and lp.vcoords.shape == (topo.n, 2)
+    store.close()
+
+
+def test_forest_fragments_roundtrip(tmp_path):
+    """fragment() views reproduce the standalone per-rank closure exactly."""
+    mesh, store, ck = _saved_store(tmp_path, 4, 4, 2, 3, "contiguous")
+    cells = mesh.cell_ids
+    seeds = [cells[::3], np.empty(0, np.int64), cells[1::2]]
+    batched = ck._close_topologies("m", seeds)
+    for s, got in zip(seeds, batched):
+        want = ck._close_topologies("m", [s])[0]
+        np.testing.assert_array_equal(got.ids, want.ids)
+        np.testing.assert_array_equal(got.dims, want.dims)
+        np.testing.assert_array_equal(got.offsets, want.offsets)
+        np.testing.assert_array_equal(got.cone_pos, want.cone_pos)
+    store.close()
+
+
+# ------------------------------------------------------- random-dest hashing
+def test_random_dests_in_range_and_seed_stable_at_paper_scale():
+    """Global ids near 2**62 — where the int64 product wraps — must hash
+    into [0, M) deterministically, without overflow warnings, and equal the
+    well-defined uint64 hash.  This is where the old signed formula went
+    wrong: for non-power-of-two M the sign-wrapped product lands ~half of
+    paper-scale ids on a DIFFERENT destination than the unsigned hash
+    (2**64 is not congruent 0 mod M), so the partition silently depended on
+    signed-overflow behaviour."""
+    rng = np.random.default_rng(1)
+    g = ((np.uint64(1) << np.uint64(62))
+         + rng.integers(0, 2**40, size=512).astype(np.uint64)).astype(_INT)
+    M = 8191                                       # deliberately not 2**k
+    with np.errstate(over="raise"):
+        d1 = random_partition_dests(g, M, seed=17)
+        d2 = random_partition_dests(g, M, seed=17)
+        d3 = random_partition_dests(g, M, seed=18)
+    assert d1.dtype == _INT
+    assert (d1 >= 0).all() and (d1 < M).all()
+    np.testing.assert_array_equal(d1, d2)          # seed-stable
+    assert not np.array_equal(d1, d3)              # seed actually mixes in
+    want = ((g.astype(np.uint64) * np.uint64(2654435761) + np.uint64(17))
+            % np.uint64(M)).astype(_INT)
+    np.testing.assert_array_equal(d1, want)        # THE unsigned hash
+
+
+def test_random_dests_match_signed_hash_in_locked_regime():
+    """For small ids (the CommStats-locked fixtures) the uint64 hash equals
+    the historical signed formula — dest counts, hence wire bytes, are
+    unchanged."""
+    g = np.arange(10_000, dtype=_INT)
+    for M, seed in ((3, 0), (8, 29), (11, 11)):
+        want = ((g * np.int64(2654435761) + seed) % M).astype(_INT)
+        np.testing.assert_array_equal(random_partition_dests(g, M, seed),
+                                      want)
+
+
+# ------------------------------------------------- exact-distribution guard
+def test_exact_distribution_wrong_rank_count_raises(tmp_path):
+    mesh, store, ck = _saved_store(tmp_path, 3, 3, 4, 3, "contiguous")
+    with pytest.raises(ValueError, match=r"M=2.*N=3"):
+        ck.load_mesh("m", Comm(2), exact_distribution=True)
+    # the matching count still loads
+    loaded = ck.load_mesh("m", Comm(3), exact_distribution=True)
+    assert len(loaded.plexes) == 3
+    store.close()
+
+
+# ------------------------------------------------------ timed R=1024 smoke
+def test_flat_load_engine_1024_ranks(tmp_path):
+    """Acceptance gate for the flat load engine: a full FE mesh+function
+    round-trip at 1024 simulated ranks completes, loads bit-exact values,
+    and the load side stays within 20x of the recorded wall-time baseline
+    (crash or gross regression fails; timer noise does not)."""
+    baseline = json.loads(
+        (pathlib.Path(__file__).parent / "data"
+         / "bench_fem_load_baseline.json").read_text())
+    R = baseline["ranks"]
+    mesh = tri_mesh_fast(baseline["nx"], baseline["ny"])
+    plexes, _, _ = distribute(mesh, R, method="contiguous", seed=0)
+    store = DatasetStore(str(tmp_path), "w")
+    ck = FEMCheckpoint(store)
+    ck.save_mesh("m", plexes, Comm(R))
+    element = Element("P", 1, "triangle")
+    spaces = [FunctionSpace(lp, element) for lp in plexes]
+    ck.save_function("m", "f", [interpolate(sp, _field) for sp in spaces],
+                     Comm(R))
+    comm_l = Comm(R)
+    t0 = time.perf_counter()
+    loaded = ck.load_mesh("m", comm_l, partition="contiguous")
+    lspaces, lfuncs = ck.load_function(loaded, "f", comm_l)
+    dt = time.perf_counter() - t0
+    from repro.fem import node_points
+    for sp, f in zip(lspaces, lfuncs):
+        np.testing.assert_array_equal(f.values, _field(node_points(sp)))
+    # 20x: the guard is for crashes / order-of-magnitude regressions; the
+    # shared CI box shows >10x one-off noise under concurrent load
+    assert dt <= 20.0 * baseline["load_seconds"] + 2.0, (
+        f"flat load engine R={R} took {dt:.2f}s, >20x the recorded "
+        f"{baseline['load_seconds']}s baseline")
+    store.close()
