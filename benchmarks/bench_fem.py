@@ -116,8 +116,10 @@ def fem_rank_sweep(ranks=(8, 32, 128, 512, 1024, 4096, 8192), nx: int = 128,
     Each row records the store's ``write_calls``/``read_calls`` alongside
     the dataset counts: with the batched I/O plans these stay independent of
     R (one coalesced pass per dataset per phase), which — together with the
-    flat (no per-rank Python) load pipeline — is what makes the paper-scale
-    rank axis reachable."""
+    flat (no per-rank Python) load AND save pipelines — is what makes the
+    paper-scale rank axis reachable.  Save-side wall-times are split out
+    per row (``distribute_s``, ``save_mesh_s``, ``save_fn_s``) so the save
+    trajectory is diffable across PRs like the load one."""
     mesh = tri_mesh_fast(nx, ny)
     element = Element("P", 1, "triangle")
     rows = []
@@ -129,11 +131,17 @@ def fem_rank_sweep(ranks=(8, 32, 128, 512, 1024, 4096, 8192), nx: int = 128,
         tmp = tempfile.mkdtemp(prefix="fem_sweep_")
         store = DatasetStore(tmp, "w")
         ck = FEMCheckpoint(store)
+        # spaces/funcs are built OUTSIDE the save window so save_s is
+        # exactly save_mesh_s + save_fn_s (interpolation speed must not be
+        # misread as save-engine movement when diffing across PRs)
+        spaces = [FunctionSpace(lp, element) for lp in plexes]
+        funcs = [interpolate(sp, _field) for sp in spaces]
         t1 = time.perf_counter()
         ck.save_mesh("m", plexes, comm_s)
-        spaces = [FunctionSpace(lp, element) for lp in plexes]
-        ck.save_function("m", "f", [interpolate(sp, _field) for sp in spaces],
-                         comm_s)
+        t_save_mesh = time.perf_counter() - t1
+        t1b = time.perf_counter()
+        ck.save_function("m", "f", funcs, comm_s)
+        t_save_fn = time.perf_counter() - t1b
         t_save = time.perf_counter() - t1
         write_calls = store.stats.write_calls
         n_datasets = len(store.datasets())
@@ -153,6 +161,8 @@ def fem_rank_sweep(ranks=(8, 32, 128, 512, 1024, 4096, 8192), nx: int = 128,
             "ranks": R,
             "entities": mesh.num_entities,
             "distribute_s": round(t_dist, 3),
+            "save_mesh_s": round(t_save_mesh, 3),
+            "save_fn_s": round(t_save_fn, 3),
             "save_s": round(t_save, 3),
             "load_mesh_s": round(t_load_mesh, 3),
             "load_fn_s": round(t_load_fn, 3),

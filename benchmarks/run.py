@@ -42,9 +42,11 @@ def main(argv=None):
     _print_table("Table 6.5 analogue: same-count exact reload",
                  bc.weak_scaling_load_exact(elems_per_rank=scale))
     rank_sweep = (2, 4, 8, 16, 32, 64) if args.quick \
-        else (2, 4, 8, 16, 32, 64, 128, 256, 512, 1024)
+        else (2, 4, 8, 16, 32, 64, 128, 256, 512, 1024, 2048, 4096, 8192)
+    # elems_per_rank 2**12 keeps the R=8192 row at 268 MiB — the workload
+    # the ROADMAP hotspot history quotes — and the sweep's total runtime sane
     tensor_rank_rows = bc.rank_scaling_roundtrip(
-        ranks=rank_sweep, elems_per_rank=max(scale >> 3, 1 << 10))
+        ranks=rank_sweep, elems_per_rank=max(scale >> 5, 1 << 10))
     _print_table("Rank scaling: save/load round-trip", tensor_rank_rows)
     print("\n== §2.2.7: time-series appends (section saved once) ==")
     print(json.dumps(bc.timeseries_append(elems_per_rank=scale // 2),
@@ -65,9 +67,11 @@ def main(argv=None):
 
     # Perf trajectory record: rank-sweep wall-times plus the IOStats /
     # CommStats counters (write_calls/read_calls/wire_MiB per row), so load
-    # scaling across PRs is diffable instead of lost in terminal scrollback.
-    # A --quick run writes a sibling file so it never clobbers the committed
-    # full-sweep record.
+    # AND save scaling across PRs are diffable instead of lost in terminal
+    # scrollback — the FE rows carry distribute_s/save_mesh_s/save_fn_s and
+    # the tensor rows save_s/load_s, both sweeps to R=8192.  A --quick run
+    # writes a sibling file so it never clobbers the committed full-sweep
+    # record.
     loadscale = {
         "quick": bool(args.quick),
         "fem_rank_sweep": fem_rank_rows,

@@ -46,6 +46,37 @@ def split_segments(flat: np.ndarray, sizes) -> list[np.ndarray]:
     return [flat[a:b] for a, b in zip(offs[:-1], offs[1:])]
 
 
+def rank_radix(nranks: int, radix: int) -> np.int64:
+    """Guarded packing radix for ``rank * radix + id`` scalar keys: rank
+    counts are bounded, so the product fits int64 — but only checked-for
+    loudly (``ValueError`` — survives ``python -O``; a wrapped key silently
+    pairs the wrong (rank, id)).  ``radix`` is the exclusive upper bound of
+    the id axis; every flat pipeline packing (rank, id) keys derives it
+    here so the guard exists exactly once."""
+    radix = max(int(radix), 1)
+    if nranks > 0 and nranks > np.iinfo(np.int64).max // radix:
+        raise ValueError(f"(rank, id) key packing overflows int64 for "
+                         f"R={nranks}, radix={radix}")
+    return _INT(radix)
+
+
+def edge_pack(src: np.ndarray, dst: np.ndarray, nranks: int
+              ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """CSR-pack flat rank-tagged rows for a sparse exchange: the stable
+    permutation grouping rows by ``(src, dst)`` — ascending destination,
+    source order preserved within each pair — plus the strictly-sorted
+    nonempty edge list :meth:`Comm.neighbor_alltoallv` consumes.  Returns
+    ``(order, edge_src, edge_dst, edge_cnt)``.  This is the one packing
+    every flat pipeline (load-side repartition, overlap directory, save-side
+    row routing) compiles its sends through."""
+    key = (np.asarray(src, dtype=_INT) * _INT(nranks)
+           + np.asarray(dst, dtype=_INT))
+    order = np.argsort(key, kind="stable")
+    ek, ecnt = np.unique(key, return_counts=True)
+    return order, (ek // nranks).astype(_INT), (ek % nranks).astype(_INT), \
+        ecnt.astype(_INT)
+
+
 def ragged_arange(starts: np.ndarray, lengths: np.ndarray) -> np.ndarray:
     """Concatenation of ``arange(s, s + n)`` for each (s, n) pair, fully
     vectorised — the workhorse of every CSR gather in this package."""

@@ -8,6 +8,13 @@ the chunk's base position in the source's local DoF vector, then derives
 element-level roots locally from the within-box row-major order (cone-derived
 DoF order).  A single SF bcast then moves the data — one all-to-all, which is
 also the number PetscSFBcast would issue.
+
+Rank-flat: the target-side region walk is ONE :class:`RegionPlan` per array
+(the same flat (box, chunk, element) table the tensor checkpoint loader
+uses) and the source-side chunk bases come from one vectorised cumsum over
+the rank-tagged size array — no ``for r in range(N)`` / ``for m in
+range(M)`` numpy work anywhere.  Star forests and CommStats are
+bit-identical to the per-rank formulation.
 """
 
 from __future__ import annotations
@@ -16,8 +23,8 @@ import numpy as np
 
 from repro.core.store import np_dtype
 
-from repro.core.chunk_layout import Box, StateLayout, row_major_ids
-from repro.core.comm import Comm
+from repro.core.chunk_layout import Box, StateLayout, plan_regions
+from repro.core.comm import Comm, split_segments
 from repro.core.star_forest import StarForest
 from repro.core.tensor_ckpt import PerRankState
 
@@ -35,70 +42,62 @@ def reshard(layout: StateLayout, source: PerRankState,
         grid, name = spec.grid, spec.name
         E = grid.num_chunks
 
-        # source side: local vec = concat of owned boxes; per-chunk base
+        # source side: local vec = concat of owned boxes; per-chunk base —
+        # chunk-major block extraction, one cumsum for every rank's bases
         src_ords = [source[r][name].ordinals if name in source[r]
                     else np.empty(0, _INT) for r in range(N)]
-        src_vecs, src_base = [], []
-        for r in range(N):
-            blocks = [np.ascontiguousarray(source[r][name].data[int(o)])
-                      .reshape(-1) for o in src_ords[r]]
-            sizes = np.array([b.size for b in blocks], dtype=_INT)
-            base = np.concatenate([[0], np.cumsum(sizes)])[:len(sizes)]
-            src_vecs.append(np.concatenate(blocks) if blocks
-                            else np.empty(0, spec.dtype))
-            src_base.append(base.astype(_INT))
+        src_cnt = np.asarray([len(o) for o in src_ords], dtype=_INT)
+        blocks = [np.ascontiguousarray(source[int(r)][name].data[int(o)])
+                  .reshape(-1)
+                  for r, oo in enumerate(src_ords) for o in oo]
+        sizes = np.fromiter((b.size for b in blocks), dtype=_INT,
+                            count=len(blocks))
+        vec_cnt = np.bincount(np.repeat(np.arange(N, dtype=_INT), src_cnt),
+                              weights=sizes, minlength=N).astype(_INT)
+        src_flat = (np.concatenate(blocks) if blocks
+                    else np.empty(0, np_dtype(spec.dtype)))
+        src_vecs = split_segments(src_flat, vec_cnt)
+        # within-rank base of each chunk: global exclusive cumsum rebased to
+        # the rank segment start
+        cs = np.concatenate([[0], np.cumsum(sizes)]).astype(_INT)
+        seg0 = cs[np.concatenate([[0], np.cumsum(src_cnt)])[:-1]]
+        base_flat = cs[:-1] - np.repeat(seg0, src_cnt)
+        src_base = split_segments(base_flat, src_cnt)
 
         # entity directory: chunk ordinal -> (source rank, base offset)
         pub = StarForest.from_global_numbers(src_ords, E, max(N, M))
+        src_rank_flat = np.repeat(np.arange(N, dtype=_INT), src_cnt)
         dir_rank = pub.reduce(
-            [np.full(len(o), r, dtype=_INT) for r, o in enumerate(src_ords)],
+            split_segments(src_rank_flat, src_cnt),
             "replace", [np.full(int(s), -1, dtype=_INT) for s in pub.nroots])
         dir_base = pub.reduce(src_base, "replace",
                               [np.full(int(s), -1, dtype=_INT)
                                for s in pub.nroots])
         comm_src.stats.record(sum(o.nbytes * 2 for o in src_ords), 0)
 
-        # target side: needed chunks -> query directory
+        # target side: ONE flat region plan; needed chunks query the directory
         regions = [plan[m].get(name, []) for m in range(M)]
-        needed = [np.array(sorted({o for b in regions[m]
-                                   for o in grid.chunks_intersecting(b)}),
-                           dtype=_INT) for m in range(M)]
-        qry = StarForest.from_global_numbers(needed, E, max(N, M))
-        got_rank = qry.bcast(dir_rank)
-        got_base = qry.bcast(dir_base)
-        comm_dst.stats.record(sum(a.nbytes * 2 for a in got_rank), 0)
+        rp = plan_regions(grid, regions)
+        qry = StarForest.from_flat_global_numbers(
+            rp.needed_ord, rp.needed_counts, E, max(N, M))
+        got_rank = qry.bcast(dir_rank, return_flat=True)
+        got_base = qry.bcast(dir_base, return_flat=True)
+        comm_dst.stats.record(int(got_rank.nbytes) * 2, 0)
 
-        # element-level SF: target element -> (source rank, vec position)
-        rr, ri, placements = [], [], []
-        for m in range(M):
-            # needed[m] is sorted: resolve chunk ordinals by binary search
-            # instead of per-chunk dict lookups
-            rparts, iparts, pl, pos = [], [], [], 0
-            for bi, b in enumerate(regions[m]):
-                for o in grid.chunks_intersecting(b):
-                    j = np.searchsorted(needed[m], o)
-                    cbox = grid.chunk_box(o)
-                    inter = b.intersect(cbox)
-                    within = row_major_ids(inter, cbox)
-                    rparts.append(np.full(inter.size, int(got_rank[m][j]),
-                                          dtype=_INT))
-                    iparts.append(int(got_base[m][j]) + within)
-                    pl.append((bi, inter, pos))
-                    pos += inter.size
-            rr.append(np.concatenate(rparts) if rparts else np.empty(0, _INT))
-            ri.append(np.concatenate(iparts) if iparts else np.empty(0, _INT))
-            placements.append(pl)
+        # element-level SF: target element -> (source rank, vec position),
+        # derived from the flat intersection table in one repeat + add
+        rr_flat = np.repeat(got_rank[rp.inter_pos], rp.inter_sizes)
+        ri_flat = (np.repeat(got_base[rp.inter_pos], rp.inter_sizes)
+                   + rp.elem_within)
         # rectangular SF: M leaf ranks, N root ranks
-        sf = StarForest(tuple(len(v) for v in src_vecs), tuple(rr), tuple(ri))
-        vals = sf.bcast(src_vecs)
-        comm_dst.stats.record(sum(v.nbytes for v in vals), 0)
+        sf = StarForest.from_flat_attachments(
+            [len(v) for v in src_vecs], rp.elem_counts, rr_flat, ri_flat)
+        vals = sf.bcast(src_vecs, return_flat=True)
+        comm_dst.stats.record(int(vals.nbytes), 0)
 
-        for m in range(M):
-            bufs = [np.empty(b.shape, dtype=np_dtype(spec.dtype))
-                    for b in regions[m]]
-            for bi, inter, pos in placements[m]:
-                bufs[bi][inter.slices(origin=regions[m][bi])] = \
-                    vals[m][pos:pos + inter.size].reshape(inter.shape)
-            if regions[m]:
-                out[m][name] = bufs
+        # scatter into the target boxes (per-box reshaped views, per rank)
+        per_rank_bufs = rp.scatter_to_boxes(vals, np_dtype(spec.dtype))
+        for slot, regs, bufs in zip(out, regions, per_rank_bufs):
+            if regs:
+                slot[name] = bufs
     return out

@@ -50,20 +50,49 @@ class SFPlan:
 
     ``pair_*`` enumerate the nonempty (root rank → leaf rank) pairs with
     their edge counts — the neighborhood the equivalent MPI exchange would
-    touch, exposed for sparse collectives and traffic accounting.
+    touch, exposed for sparse collectives and traffic accounting.  They are
+    derived lazily from ``gather``/``scatter`` on first access: ``bcast``/
+    ``reduce`` never consult them, and the derivation costs a full sort of
+    the attachment set — waste that dominated plan compilation at
+    paper-scale leaf counts (tens of millions of element-level edges).
     """
 
     root_offsets: np.ndarray       # (R_root + 1,)
     leaf_offsets: np.ndarray       # (R_leaf + 1,)
     gather: np.ndarray             # (n_attached,)
     scatter: np.ndarray            # (n_attached,)
-    pair_src: np.ndarray           # (n_pairs,) root rank
-    pair_dst: np.ndarray           # (n_pairs,) leaf rank
-    pair_cnt: np.ndarray           # (n_pairs,) attached leaves per pair
 
     @property
     def n_attached(self) -> int:
         return len(self.gather)
+
+    def _pairs(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        cached = getattr(self, "_pair_cache", None)
+        if cached is None:
+            rr_att = np.searchsorted(self.root_offsets, self.gather,
+                                     side="right") - 1
+            leaf_rank = np.searchsorted(self.leaf_offsets, self.scatter,
+                                        side="right") - 1
+            n_leaf = max(len(self.leaf_offsets) - 1, 1)
+            pair_key, pair_cnt = np.unique(
+                rr_att * n_leaf + leaf_rank, return_counts=True)
+            cached = ((pair_key // n_leaf).astype(_INT),
+                      (pair_key % n_leaf).astype(_INT),
+                      pair_cnt.astype(_INT))
+            object.__setattr__(self, "_pair_cache", cached)
+        return cached
+
+    @property
+    def pair_src(self) -> np.ndarray:
+        return self._pairs()[0]
+
+    @property
+    def pair_dst(self) -> np.ndarray:
+        return self._pairs()[1]
+
+    @property
+    def pair_cnt(self) -> np.ndarray:
+        return self._pairs()[2]
 
     def split_leafwise(self, flat: np.ndarray) -> list[np.ndarray]:
         """Cut a concatenated-leaf-space array back into per-rank views."""
@@ -110,38 +139,59 @@ class StarForest:
         assert len(self.root_rank) == len(self.root_idx)
         for rr, ri in zip(self.root_rank, self.root_idx):
             assert rr.shape == ri.shape
-        # ---- compile the packed communication plan (PetscSFSetUp analogue)
         nleaves = np.array([len(a) for a in self.root_rank], dtype=_INT)
-        leaf_offsets = np.concatenate([[0], np.cumsum(nleaves)])
-        root_sizes = np.asarray(self.nroots, dtype=_INT)
-        root_offsets = np.concatenate([[0], np.cumsum(root_sizes)])
         rr_all = (np.concatenate(self.root_rank) if self.nranks_leaf
                   else np.empty(0, _INT)).astype(_INT, copy=False)
         ri_all = (np.concatenate(self.root_idx) if self.nranks_leaf
                   else np.empty(0, _INT)).astype(_INT, copy=False)
+        self._compile(rr_all, ri_all, nleaves)
+
+    def _compile(self, rr_all: np.ndarray, ri_all: np.ndarray,
+                 nleaves: np.ndarray) -> None:
+        """Compile the packed communication plan (PetscSFSetUp analogue)
+        from the concatenated leaf-major attachment buffers."""
+        leaf_offsets = np.concatenate([[0], np.cumsum(nleaves)])
+        root_sizes = np.asarray(self.nroots, dtype=_INT)
+        root_offsets = np.concatenate([[0], np.cumsum(root_sizes)])
         scatter = np.flatnonzero(rr_all >= 0).astype(_INT)
-        rr_att, ri_att = rr_all[scatter], ri_all[scatter]
+        if len(scatter) == len(rr_all):
+            rr_att, ri_att = rr_all, ri_all    # fully attached: no gather
+        else:
+            rr_att, ri_att = rr_all[scatter], ri_all[scatter]
         assert rr_att.size == 0 or rr_att.max() < self.nranks_root
         assert (ri_att >= 0).all() and (ri_att < root_sizes[rr_att]).all()
         gather = root_offsets[rr_att] + ri_att
-        leaf_rank = np.searchsorted(leaf_offsets, scatter, side="right") - 1
-        # (src=root rank, dst=leaf rank)-major, the strict sort order
-        # Comm.neighbor_alltoallv requires of its edge list
-        n_leaf = max(self.nranks_leaf, 1)
-        pair_key, pair_cnt = np.unique(
-            rr_att * n_leaf + leaf_rank, return_counts=True)
         plan = SFPlan(
             root_offsets=root_offsets,
             leaf_offsets=leaf_offsets,
             gather=gather,
             scatter=scatter,
-            pair_src=(pair_key // n_leaf).astype(_INT),
-            pair_dst=(pair_key % n_leaf).astype(_INT),
-            pair_cnt=pair_cnt.astype(_INT),
         )
         object.__setattr__(self, "plan", plan)
 
     # ------------------------------------------------------------ constructors
+    @classmethod
+    def from_flat_attachments(cls, nroots: Sequence[int],
+                              leaf_sizes: Sequence[int] | np.ndarray,
+                              rr_flat: np.ndarray, ri_flat: np.ndarray
+                              ) -> "StarForest":
+        """Construct directly from the concatenated (leaf-rank-major)
+        attachment buffers: the per-rank arrays are disjoint views and the
+        plan compile consumes the flat buffers as-is — no per-rank
+        round-trip and no re-concatenation copy, which matters at
+        element-level leaf counts (tens of millions)."""
+        leaf_sizes = np.asarray(leaf_sizes, dtype=_INT)
+        rr_flat = np.asarray(rr_flat, dtype=_INT)
+        ri_flat = np.asarray(ri_flat, dtype=_INT)
+        self = object.__new__(cls)
+        object.__setattr__(self, "nroots", tuple(int(s) for s in nroots))
+        object.__setattr__(self, "root_rank",
+                           tuple(split_segments(rr_flat, leaf_sizes)))
+        object.__setattr__(self, "root_idx",
+                           tuple(split_segments(ri_flat, leaf_sizes)))
+        self._compile(rr_flat, ri_flat, leaf_sizes)
+        return self
+
     @staticmethod
     def from_edges(
         nranks: int,
@@ -198,9 +248,8 @@ class StarForest:
         rr_flat = (np.searchsorted(starts, flat_globals, side="right") - 1
                    ).astype(_INT)
         ri_flat = flat_globals - starts[rr_flat]
-        return StarForest(tuple(int(s) for s in root_sizes),
-                          tuple(split_segments(rr_flat, leaf_sizes)),
-                          tuple(split_segments(ri_flat, leaf_sizes)))
+        return StarForest.from_flat_attachments(
+            [int(s) for s in root_sizes], leaf_sizes, rr_flat, ri_flat)
 
     @staticmethod
     def from_global_numbers(
@@ -239,37 +288,68 @@ class StarForest:
                                                    nranks_root)
 
     # ------------------------------------------------------------- operations
-    def bcast(self, root_data: Sequence[np.ndarray],
-              fill=0) -> list[np.ndarray]:
+    def bcast(self, root_data: "Sequence[np.ndarray] | np.ndarray",
+              fill=0, return_flat: bool = False):
         """Copy root values to attached leaves (PetscSFBcast).
 
         ``root_data[r]`` has leading dim ``nroots[r]``; returns per-rank leaf
         arrays (unattached leaves hold ``fill``, zero by default).  One
         gather through the precomputed plan; the per-rank outputs are
         disjoint views of a single concatenated-leaf-space buffer.
+
+        ``root_data`` may also be a single ndarray — the root-rank-major
+        concatenation a flat caller already holds — skipping the per-rank
+        concatenate copy.  With ``return_flat`` the leaf buffer is returned
+        directly (leaf-rank-major; segment bounds are ``plan.leaf_offsets``)
+        so flat pipelines skip the per-rank split too.
         """
-        assert len(root_data) == self.nranks_root
         plan: SFPlan = self.plan
-        trailing = root_data[0].shape[1:]
-        dtype = root_data[0].dtype
-        out_flat = np.full((int(plan.leaf_offsets[-1]),) + trailing, fill,
-                           dtype=dtype)
-        if plan.n_attached:
-            flat_root = np.concatenate(
+        if isinstance(root_data, np.ndarray):
+            flat_in = root_data
+            # -O-proof: a stale/foreign buffer would silently gather from
+            # the wrong prefix
+            if len(flat_in) != int(plan.root_offsets[-1]):
+                raise ValueError(
+                    f"bcast: flat root buffer has {len(flat_in)} rows, "
+                    f"root space holds {int(plan.root_offsets[-1])}")
+            trailing, dtype = flat_in.shape[1:], flat_in.dtype
+        else:
+            assert len(root_data) == self.nranks_root
+            flat_in = None
+            trailing, dtype = root_data[0].shape[1:], root_data[0].dtype
+        nleaf_flat = int(plan.leaf_offsets[-1])
+
+        def _flat_root():
+            if flat_in is not None:
+                return flat_in
+            return np.concatenate(
                 [np.asarray(a).reshape((len(a),) + trailing)
                  for a in root_data])
-            out_flat[plan.scatter] = flat_root[plan.gather]
+
+        if plan.n_attached == nleaf_flat and nleaf_flat:
+            # fully attached: scatter is the identity — ONE fancy gather,
+            # no fill pass (the element-level vec broadcast hot path)
+            out_flat = _flat_root()[plan.gather]
+            if out_flat.dtype != dtype:     # heterogeneous roots: match the
+                out_flat = out_flat.astype(dtype)  # fill-path buffer dtype
+        else:
+            out_flat = np.full((nleaf_flat,) + trailing, fill, dtype=dtype)
+            if plan.n_attached:
+                out_flat[plan.scatter] = _flat_root()[plan.gather]
+        if return_flat:
+            return out_flat
         return plan.split_leafwise(out_flat)
 
     def reduce(
         self,
-        leaf_data: Sequence[np.ndarray],
+        leaf_data: "Sequence[np.ndarray] | np.ndarray",
         op: str = "replace",
         root_data: Sequence[np.ndarray] | None = None,
         trailing: tuple[int, ...] = (),
         dtype=None,
         fill=None,
-    ) -> list[np.ndarray]:
+        return_flat: bool = False,
+    ):
         """Combine leaf values into roots (PetscSFReduce). op ∈ {replace,sum,min,max}.
 
         Runs as one scatter through the plan: attached leaf values are
@@ -280,10 +360,29 @@ class StarForest:
         in place and returned.  Without ``root_data``, the roots are
         initialised flat to ``fill`` (the op's identity by default) and the
         per-rank results come back as disjoint views of one concatenated
-        buffer — no per-rank allocation at any rank count.
+        buffer — no per-rank allocation at any rank count; ``return_flat``
+        hands back that buffer itself.  ``leaf_data`` may be the flat
+        leaf-rank-major concatenation (one ndarray), skipping the
+        concatenate copy.
         """
-        dtype = dtype or leaf_data[0].dtype
+        leaf_is_flat = isinstance(leaf_data, np.ndarray)
+        dtype = dtype or (leaf_data.dtype if leaf_is_flat
+                          else leaf_data[0].dtype)
         plan: SFPlan = self.plan
+        if leaf_is_flat and len(leaf_data) != int(plan.leaf_offsets[-1]):
+            # -O-proof, mirroring bcast: a stale/foreign buffer would
+            # silently combine the wrong leaf values into the roots
+            raise ValueError(
+                f"reduce: flat leaf buffer has {len(leaf_data)} rows, "
+                f"leaf space holds {int(plan.leaf_offsets[-1])}")
+
+        def _flat_leaf(trail):
+            if leaf_is_flat:
+                return leaf_data
+            return np.concatenate(
+                [np.asarray(a).reshape((len(a),) + trail)
+                 for a in leaf_data])
+
         if root_data is None:
             if fill is None:
                 fill = {"sum": 0, "replace": 0,
@@ -293,22 +392,18 @@ class StarForest:
                         if np.issubdtype(dtype, np.integer) else -np.inf}[op]
             flat_root = np.full((int(plan.root_offsets[-1]),) + trailing,
                                 fill, dtype=dtype)
-            root_views = [flat_root[a:b] for a, b in
-                          zip(plan.root_offsets[:-1], plan.root_offsets[1:])]
-            if not plan.n_attached:
-                return root_views
-            trail = trailing
-            flat_leaf = np.concatenate(
-                [np.asarray(a).reshape((len(a),) + trail) for a in leaf_data])
-            self._combine(flat_root, flat_leaf[plan.scatter], op)
-            return root_views
+            if plan.n_attached:
+                self._combine(flat_root, _flat_leaf(trailing)[plan.scatter],
+                              op)
+            if return_flat:
+                return flat_root
+            return [flat_root[a:b] for a, b in
+                    zip(plan.root_offsets[:-1], plan.root_offsets[1:])]
         root_data = list(root_data)
         if not plan.n_attached:
             return root_data
         trail = root_data[0].shape[1:]
-        flat_leaf = np.concatenate(
-            [np.asarray(a).reshape((len(a),) + trail) for a in leaf_data])
-        vals = flat_leaf[plan.scatter]
+        vals = _flat_leaf(trail)[plan.scatter]
         flat_root = np.concatenate(
             [np.asarray(a).reshape((len(a),) + trail) for a in root_data])
         self._combine(flat_root, vals, op)
@@ -344,10 +439,15 @@ class StarForest:
             f"compose: root space {self.nroots} != other's leaf space {other.nleaves}"
         )
         # leaves unattached in self stay unattached: bcast fills them with -1
-        # directly, so no per-rank masking pass is needed afterwards
-        new_rr = self.bcast([a for a in other.root_rank], fill=-1)
-        new_ri = self.bcast([a for a in other.root_idx], fill=-1)
-        return StarForest(other.nroots, tuple(new_rr), tuple(new_ri))
+        # directly, so no per-rank masking pass is needed afterwards; the
+        # flat buffers feed the plan compile without a re-concatenation
+        new_rr = self.bcast([a for a in other.root_rank], fill=-1,
+                            return_flat=True)
+        new_ri = self.bcast([a for a in other.root_idx], fill=-1,
+                            return_flat=True)
+        return StarForest.from_flat_attachments(
+            other.nroots, np.asarray(self.nleaves, dtype=_INT),
+            new_rr, new_ri)
 
     def invert(self, allow_partial: bool = False) -> "StarForest":
         """Invert an injective SF (paper: (χ_{I_P}^{L_P})⁻¹).
@@ -360,17 +460,27 @@ class StarForest:
         semantics.  Implemented with a reduce of the leaf identities onto the
         roots, as PetscSF does.
         """
-        leaf_rank_data = [
-            np.full(nl, r, dtype=_INT) for r, nl in enumerate(self.nleaves)
-        ]
-        leaf_idx_data = [np.arange(nl, dtype=_INT) for nl in self.nleaves]
-        inv_rr = self.reduce(leaf_rank_data, "replace",
-                             [np.full(n, -1, dtype=_INT) for n in self.nroots])
-        inv_ri = self.reduce(leaf_idx_data, "replace",
-                             [np.full(n, -1, dtype=_INT) for n in self.nroots])
-        if not allow_partial:
-            assert all((a >= 0).all() for a in inv_rr), "invert: SF not surjective"
-        return StarForest(self.nleaves, tuple(inv_rr), tuple(inv_ri))
+        nl = np.asarray(self.nleaves, dtype=_INT)
+        total_l = int(nl.sum())
+        offs = np.concatenate([[0], np.cumsum(nl)]).astype(_INT)
+        leaf_rank_flat = np.repeat(np.arange(self.nranks_leaf, dtype=_INT),
+                                   nl)
+        leaf_idx_flat = np.arange(total_l, dtype=_INT) - np.repeat(offs[:-1],
+                                                                   nl)
+        inv_rr = self.reduce(leaf_rank_flat, "replace", dtype=_INT,
+                             fill=-1, return_flat=True)
+        inv_ri = self.reduce(leaf_idx_flat, "replace", dtype=_INT,
+                             fill=-1, return_flat=True)
+        if not allow_partial and not (inv_rr >= 0).all():
+            # -O-proof: unattached inverse leaves would silently bcast fill
+            # values downstream
+            raise ValueError(
+                f"invert: SF not surjective — "
+                f"{int((inv_rr < 0).sum())} of {len(inv_rr)} roots have no "
+                "leaf (pass allow_partial=True for shrunk sections)")
+        return StarForest.from_flat_attachments(
+            self.nleaves, np.asarray(self.nroots, dtype=_INT),
+            inv_rr, inv_ri)
 
 
 def partition_sizes(total: int, nranks: int) -> np.ndarray:

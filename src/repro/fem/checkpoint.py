@@ -70,7 +70,9 @@ from typing import Sequence
 
 import numpy as np
 
-from repro.core.comm import Comm, ragged_arange, split_segments
+from repro.core.comm import (
+    Comm, edge_pack, ragged_arange, rank_radix, split_segments,
+)
 from repro.core.star_forest import (
     StarForest,
     partition_rank_of,
@@ -96,16 +98,6 @@ _INT = np.int64
 
 
 # ===================================================================== utils
-def _dest_pack(dest: np.ndarray, nranks: int
-               ) -> tuple[np.ndarray, np.ndarray]:
-    """CSR-pack one rank's send set: (stable order by destination, per-dest
-    row counts).  The permutation groups rows by ascending destination while
-    preserving source order within each destination — the packing PetscSF
-    compiles its graphs into."""
-    order = np.argsort(dest, kind="stable")
-    return order, np.bincount(dest, minlength=nranks).astype(_INT)
-
-
 def _route_rows(comm: Comm, total: int, ids: list[np.ndarray],
                 payloads: list[dict[str, np.ndarray]]
                 ) -> tuple[list[np.ndarray], list[dict[str, np.ndarray]]]:
@@ -114,27 +106,35 @@ def _route_rows(comm: Comm, total: int, ids: list[np.ndarray],
     chunk.  Payload values may be 1-D (one scalar per id) or ragged via a
     companion ``<name>__sizes`` convention handled by the caller.
 
-    One packed all-to-all per dataset (ids + each payload key); the per-rank
-    send sets are CSR-packed by destination, so nothing O(R²) is ever
-    materialised."""
+    Rank-flat: one sparse exchange per dataset (ids + each payload key) over
+    the ``edge_pack``-compiled edge list of the concatenated send set, and
+    ONE stable sort by packed (destination, id) key on the receive side —
+    no per-rank dest-pack or argsort loops at any rank count.  The edge
+    list, send buffers and receive permutation are identical to the old
+    per-rank formulation, so CommStats stay byte-for-byte."""
     R = comm.nranks
     keys = list(payloads[0].keys()) if payloads else []
-    counts = np.zeros((R, R), dtype=_INT)
-    ids_flat, pay_flat = [], {k: [] for k in keys}
-    for r in range(R):
-        g = np.asarray(ids[r], dtype=_INT)
-        order, counts[r] = _dest_pack(partition_rank_of(g, total, R), R)
-        ids_flat.append(g[order])
-        for k in keys:
-            pay_flat[k].append(payloads[r][k][order])
-    recv_ids = comm.alltoallv_packed(counts, ids_flat)
-    recv_pay = {k: comm.alltoallv_packed(counts, pay_flat[k]) for k in keys}
-    out_ids, out_pay = [], []
-    for d in range(R):
-        order = np.argsort(recv_ids[d], kind="stable")
-        out_ids.append(recv_ids[d][order])
-        out_pay.append({k: recv_pay[k][d][order] for k in keys})
-    return out_ids, out_pay
+    sizes = np.asarray([len(g) for g in ids], dtype=_INT)
+    g_flat = (np.concatenate([np.asarray(g, dtype=_INT) for g in ids])
+              if R else np.empty(0, _INT))
+    radix = rank_radix(R, total + 1)
+    src = np.repeat(np.arange(R, dtype=_INT), sizes)
+    order, es, ed, ecnt = edge_pack(src, partition_rank_of(g_flat, total, R),
+                                    R)
+    recv_ids, offs = comm.neighbor_alltoallv(es, ed, ecnt, g_flat[order],
+                                             return_flat=True)
+    dcnt = np.diff(offs)
+    drep = np.repeat(np.arange(R, dtype=_INT), dcnt)
+    rorder = np.argsort(drep * radix + recv_ids, kind="stable")
+    out_ids = split_segments(recv_ids[rorder], dcnt)
+    out_views = {}
+    for k in keys:
+        p_flat = np.concatenate([np.asarray(payloads[r][k])
+                                 for r in range(R)])
+        got, _ = comm.neighbor_alltoallv(es, ed, ecnt, p_flat[order],
+                                         return_flat=True)
+        out_views[k] = split_segments(got[rorder], dcnt)
+    return out_ids, [{k: out_views[k][d] for k in keys} for d in range(R)]
 
 
 def chi_to_LP(loc_g_list: list[np.ndarray], total: int) -> StarForest:
@@ -355,13 +355,18 @@ class FEMCheckpoint:
         st.create(f"{name}/topology/cones", total_cones, dtype="int64")
         st.create(f"{name}/topology/entity_owner", E, dtype="int64")
         chunk_starts = [int(s) for s in starts[:N]]
-        offs_rows = []
-        for r in range(N):
-            assert np.array_equal(ids_c[r], np.arange(int(starts[r]),
-                                                      int(starts[r + 1]))), \
-                "every global number must be owned by exactly one rank"
-            offs = bases[r] + np.concatenate([[0], np.cumsum(chunk_sizes[r])])
-            offs_rows.append(offs[:-1])
+        # the routed ids must tile [0, E) exactly (one owner per global
+        # number) — checked flat over the concatenation, loud under -O
+        ids_cat = np.concatenate(ids_c) if N else np.empty(0, _INT)
+        if not np.array_equal(ids_cat, np.arange(E, dtype=_INT)):
+            raise ValueError(
+                f"save_mesh: routed global ids do not tile [0, {E}) — "
+                "every global number must be owned by exactly one rank")
+        # rank-major global exclusive cumsum == bases[r] + within-rank offset
+        sizes_cat = np.concatenate(chunk_sizes) if N else np.empty(0, _INT)
+        offs_rows = split_segments(
+            (np.cumsum(sizes_cat) - sizes_cat).astype(_INT),
+            [len(s) for s in chunk_sizes])
         # one coalesced plan per dataset — every rank's segment in one pass
         st.write_plan(f"{name}/topology/dims", chunk_starts,
                       [pay_c[r]["dims"] for r in range(N)])
@@ -636,11 +641,9 @@ class FEMCheckpoint:
             raise ValueError(partition)
         # CSR-pack by (source rank, destination) and ship the sparse edges —
         # no dense R×R count matrix is ever materialised
-        skey = cell_rank * _INT(M) + dests
-        sorder = np.argsort(skey, kind="stable")
-        sek, secnt = np.unique(skey, return_counts=True)
+        sorder, sek_src, sek_dst, secnt = edge_pack(cell_rank, dests, M)
         recv_flat, recv_offs = comm.neighbor_alltoallv(
-            sek // M, sek % M, secnt, cells_flat[sorder], return_flat=True)
+            sek_src, sek_dst, secnt, cells_flat[sorder], return_flat=True)
         t0_cell_counts = np.diff(recv_offs)
         recv_rank = np.repeat(np.arange(M, dtype=_INT), t0_cell_counts)
         t0_cells = split_segments(recv_flat[np.lexsort((recv_flat,
@@ -822,13 +825,11 @@ def _grow_overlap(comm: Comm, E: int, owned_cells: list[np.ndarray],
     pub_v = forest.ids[v_pt]           # vertex global id
     pub_c = forest.ids[v_tag]          # seed cell global id
     pub_src = forest.rank_rep[v_pt]    # publishing rank (== rank of v_tag)
-    dest = partition_rank_of(pub_v, E, M)
-    key = pub_src * _INT(M) + dest
-    order = np.argsort(key, kind="stable")
-    ek, ecnt = np.unique(key, return_counts=True)
-    rv, rv_offs = comm.neighbor_alltoallv(ek // M, ek % M, ecnt,
+    order, e_src, e_dst, ecnt = edge_pack(pub_src,
+                                          partition_rank_of(pub_v, E, M), M)
+    rv, rv_offs = comm.neighbor_alltoallv(e_src, e_dst, ecnt,
                                           pub_v[order], return_flat=True)
-    rc, _ = comm.neighbor_alltoallv(ek // M, ek % M, ecnt,
+    rc, _ = comm.neighbor_alltoallv(e_src, e_dst, ecnt,
                                     pub_c[order], return_flat=True)
     # directory (per canonical rank): sorted unique (vertex, cell)
     # incidences.  3-column unique over (rank, vertex, cell) — the vertex

@@ -35,7 +35,7 @@ from typing import Sequence
 
 import numpy as np
 
-from repro.core.comm import Comm, ragged_arange
+from repro.core.comm import Comm, ragged_arange, rank_radix, split_segments
 from repro.core.star_forest import StarForest, partition_rank_of, partition_starts
 
 _INT = np.int64
@@ -75,6 +75,16 @@ def csr_from_cone_list(cones: Sequence[np.ndarray]
     indices = (np.concatenate([np.asarray(c, dtype=_INT) for c in cones])
                if len(cones) else np.empty(0, _INT))
     return csr_offsets(sizes), indices.astype(_INT, copy=False)
+
+
+def _as_id_array(ids) -> np.ndarray:
+    """Normalise an id collection (ndarray / sequence / set) to an int64
+    array WITHOUT per-element Python: set inputs go through ``np.fromiter``
+    (one C loop), never ``sorted`` (per-element compares on the save hot
+    loop); callers needing sorted-unique ids apply ``np.unique``."""
+    if isinstance(ids, (set, frozenset)):
+        return np.fromiter(ids, dtype=_INT, count=len(ids))
+    return np.asarray(ids, dtype=_INT)
 
 
 def in_sorted(values: np.ndarray, table: np.ndarray) -> np.ndarray:
@@ -129,7 +139,7 @@ def csr_closure_pairs(offsets: np.ndarray, indices: np.ndarray,
 
 
 def csr_closure_pairs_packed(offsets: np.ndarray, indices: np.ndarray,
-                             seeds: np.ndarray
+                             seeds: np.ndarray, tags: np.ndarray | None = None
                              ) -> tuple[np.ndarray, np.ndarray]:
     """Self-tagged transitive closure over *positions*: unique
     (seed position, reachable position) pairs, seeds included, sorted by
@@ -139,17 +149,32 @@ def csr_closure_pairs_packed(offsets: np.ndarray, indices: np.ndarray,
     packing the pair into the scalar key ``tag * n + point`` cannot overflow
     int64 (n² < 2**63 for any addressable n) — unlike global-id tags, where
     ``tag * E`` overflows at the paper's multi-billion-entity scale and the
-    2-column unique of :func:`csr_closure_pairs` is required."""
+    2-column unique of :func:`csr_closure_pairs` is required.
+
+    With ``tags`` (aligned to ``seeds``) the closure is tagged by those
+    values instead of the seed positions — the rank-tagged mode of the flat
+    save engine.  Packing stays safe because tags are *ranks*: the rank
+    count is bounded (checked below), unlike id×id keys."""
     n = len(offsets) - 1
-    # unconditional (survives python -O): a wrapped key silently pairs the
-    # wrong (seed, point) positions
-    if n > 0 and n > np.iinfo(np.int64).max // n:
-        raise ValueError(f"position-key packing overflows int64 for n={n}")
     seeds = np.asarray(seeds, dtype=_INT)
+    nn = np.int64(max(n, 1))
+    if tags is None:
+        # unconditional (survives python -O): a wrapped key silently pairs
+        # the wrong (seed, point) positions
+        if n > 0 and n > np.iinfo(np.int64).max // n:
+            raise ValueError(
+                f"position-key packing overflows int64 for n={n}")
+        tags = seeds
+    else:
+        tags = np.asarray(tags, dtype=_INT)
+        tmax = int(tags.max()) if tags.size else 0
+        if n > 0 and tmax > 0 and tmax >= np.iinfo(np.int64).max // nn:
+            raise ValueError(
+                f"(tag, position) key packing overflows int64 for "
+                f"max tag {tmax}, n={n}")
     if seeds.size == 0:
         return np.empty(0, _INT), np.empty(0, _INT)
-    nn = np.int64(max(n, 1))
-    seen = np.unique(seeds * nn + seeds)
+    seen = np.unique(tags * nn + seeds)
     frontier = seen
     while frontier.size:
         t, p = frontier // nn, frontier % nn
@@ -202,8 +227,7 @@ class Plex:
 
     def closure(self, seeds) -> np.ndarray:
         """Transitive cone closure (includes seeds), sorted unique."""
-        seeds = np.asarray(sorted(seeds) if isinstance(seeds, set) else seeds,
-                           dtype=_INT)
+        seeds = _as_id_array(seeds)
         if seeds.size == 0:
             return np.empty(0, _INT)
         return csr_closure(self.cone_offsets, self.cone_indices, seeds)
@@ -224,6 +248,23 @@ class Plex:
         order = np.lexsort((c, v))
         self._vci_cache = (v[order], c[order])
         return self._vci_cache
+
+    def incidence_csr(self) -> tuple[np.ndarray, np.ndarray,
+                                     np.ndarray, np.ndarray]:
+        """Both directions of :meth:`vertex_cell_incidence` as CSR over the
+        full entity id space: ``(cell→vertex offsets, indices,
+        vertex→cell offsets, indices)``.  The adjacency the rank-flat
+        overlap growth gathers through; memoised like the pair list."""
+        cached = getattr(self, "_inc_csr_cache", None)
+        if cached is not None:
+            return cached
+        v, c = self.vertex_cell_incidence()      # sorted by (v, c)
+        E = self.num_entities
+        vc_off = csr_offsets(np.bincount(v, minlength=E))
+        corder = np.lexsort((v, c))
+        cv_off = csr_offsets(np.bincount(c, minlength=E))
+        self._inc_csr_cache = (cv_off, v[corder], vc_off, c)
+        return self._inc_csr_cache
 
 
 # ----------------------------------------------------------------- builders
@@ -411,8 +452,7 @@ class LocalPlex:
         return self._g_perm[pos]
 
     def closure_local(self, seeds) -> np.ndarray:
-        seeds = np.asarray(sorted(seeds) if isinstance(seeds, set) else seeds,
-                           dtype=_INT)
+        seeds = _as_id_array(seeds)
         if seeds.size == 0:
             return np.empty(0, _INT)
         return csr_closure(self.cone_offsets, self.cone_indices, seeds)
@@ -484,10 +524,11 @@ def entity_owners(plex: Plex, cell_owner: np.ndarray) -> np.ndarray:
 def add_overlap(plex: Plex, visible_cells, layers: int) -> np.ndarray:
     """Add ``layers`` layers of vertex-adjacent neighbour cells (§2.1.2:
     'a single layer of neighboring cells and the lower dimensional entities
-    directly attached to them').  Returns sorted unique cell ids."""
-    vis = np.unique(np.asarray(
-        sorted(visible_cells) if isinstance(visible_cells, set)
-        else visible_cells, dtype=_INT))
+    directly attached to them').  Returns sorted unique cell ids.
+
+    Single-rank reference path; ``distribute`` runs the rank-flat
+    :func:`overlap_all_ranks` instead."""
+    vis = np.unique(_as_id_array(visible_cells))
     if layers == 0 or vis.size == 0:
         return vis
     inc_v, inc_c = plex.vertex_cell_incidence()
@@ -500,6 +541,103 @@ def add_overlap(plex: Plex, visible_cells, layers: int) -> np.ndarray:
     return vis
 
 
+def _rank_radix(nranks: int, E: int) -> np.int64:
+    """Packing radix for (rank, global id) scalar keys — the shared guard
+    lives in :func:`repro.core.comm.rank_radix`; ``rank * (E + 1) + id``
+    fits int64 because rank counts are bounded, where id×id keys would
+    not."""
+    return rank_radix(nranks, E + 1)
+
+
+def overlap_all_ranks(plex: Plex, vis_rank: np.ndarray, vis_cell: np.ndarray,
+                      nranks: int, layers: int
+                      ) -> tuple[np.ndarray, np.ndarray]:
+    """:func:`add_overlap` for EVERY rank at once: grow ``layers`` layers of
+    vertex-adjacent neighbour cells around the flat rank-tagged visible-cell
+    set ``(vis_rank[i], vis_cell[i])``.  Per layer, two CSR gathers over the
+    memoised cell↔vertex incidence — (rank, cell) → (rank, vertex) →
+    (rank, cell) — on ``rank * (E + 1) + id`` packed keys; no per-rank
+    Python anywhere.  Returns the grown pairs sorted unique by (rank, cell).
+    """
+    radix = _rank_radix(nranks, plex.num_entities)
+    key = np.unique(np.asarray(vis_rank, dtype=_INT) * radix
+                    + np.asarray(vis_cell, dtype=_INT))
+    if layers == 0 or key.size == 0:
+        return key // radix, key % radix
+    cv_off, cv_idx, vc_off, vc_idx = plex.incidence_csr()
+    for _ in range(layers):
+        r, c = key // radix, key % radix
+        # vertices in the closure of each rank's visible cells
+        cnt = cv_off[c + 1] - cv_off[c]
+        vk = np.unique(np.repeat(r, cnt) * radix
+                       + cv_idx[ragged_arange(cv_off[c], cnt)])
+        rv, vv = vk // radix, vk % radix
+        # every cell incident to those vertices joins the rank's set
+        cnt2 = vc_off[vv + 1] - vc_off[vv]
+        ck = np.unique(np.repeat(rv, cnt2) * radix
+                       + vc_idx[ragged_arange(vc_off[vv], cnt2)])
+        key = np.union1d(key, ck)
+    return key // radix, key % radix
+
+
+def build_local_plexes(plex: Plex, vis_rank: np.ndarray, vis_cell: np.ndarray,
+                       entity_owner: np.ndarray, nranks: int
+                       ) -> list[LocalPlex]:
+    """:func:`build_local_plex` for EVERY rank at once — the save-side
+    analogue of the loader's batched ``_build_locals``.
+
+    One rank-tagged transitive closure (``csr_closure_pairs_packed`` with
+    rank tags) yields all ranks' visible entity sets; ONE lexsort orders
+    every fragment into the deterministic local numbering (cells, faces,
+    vertices; ascending global id within a dimension) and one ragged gather
+    localises every cone.  The returned :class:`LocalPlex` arrays are
+    disjoint views of the flat buffers (``split_segments``, never
+    ``np.split``)."""
+    gdim = plex.coords.shape[1]
+    tags, ids = csr_closure_pairs_packed(
+        plex.cone_offsets, plex.cone_indices,
+        np.asarray(vis_cell, dtype=_INT),
+        tags=np.asarray(vis_rank, dtype=_INT))
+    radix = _rank_radix(nranks, plex.num_entities)
+    n = len(ids)
+    counts = np.bincount(tags, minlength=nranks).astype(_INT)
+    bases = csr_offsets(counts)
+    dims_all = plex.dims[ids]
+    # deterministic local numbering, all ranks in one lexsort
+    perm = np.lexsort((ids, -dims_all, tags))
+    inv = np.empty(n, dtype=_INT)
+    inv[perm] = np.arange(n, dtype=_INT)
+    ids_p = ids[perm]
+    rank_p = tags[perm]                    # == tags (perm is rank-major)
+    dims_p = dims_all[perm]
+    # cones of every entity in local order, localised via the sorted
+    # (rank, id) key table of the closure output
+    sz_p = (plex.cone_offsets[ids_p + 1] - plex.cone_offsets[ids_p]
+            ).astype(_INT)
+    flat_glob = plex.cone_indices[ragged_arange(plex.cone_offsets[ids_p],
+                                                sz_p)]
+    key_table = tags * radix + ids         # ascending (closure is sorted)
+    pos_sorted = np.searchsorted(key_table,
+                                 np.repeat(rank_p, sz_p) * radix + flat_glob)
+    nnz_r = np.bincount(rank_p, weights=sz_p, minlength=nranks).astype(_INT)
+    cone_local = inv[pos_sorted] - np.repeat(bases[:-1], nnz_r)
+    co = csr_offsets(sz_p)
+    # per-rank offset arrays (each n_r + 1 long, rebased to 0), built flat
+    co_idx = ragged_arange(bases[:-1], counts + 1)
+    co_local = co[co_idx] - np.repeat(co[bases[:-1]], counts + 1)
+    vcoords = np.full((n, gdim), np.nan)
+    vmask = dims_p == 0
+    vcoords[vmask] = plex.coords[ids_p[vmask] - plex.vertex_start]
+    loc_g_v = split_segments(ids_p, counts)
+    dims_v = split_segments(dims_p, counts)
+    offs_v = split_segments(co_local, counts + 1)
+    cones_v = split_segments(cone_local, nnz_r)
+    owner_v = split_segments(entity_owner[ids_p].astype(_INT), counts)
+    vc_v = split_segments(vcoords, counts)
+    return [LocalPlex(plex.dim, dims_v[r], offs_v[r], cones_v[r], loc_g_v[r],
+                      owner_v[r], r, vc_v[r]) for r in range(nranks)]
+
+
 def distribute(plex: Plex, nranks: int, *, method: str = "contiguous",
                seed: int = 0, overlap: int = 1,
                cell_owner: np.ndarray | None = None
@@ -509,41 +647,65 @@ def distribute(plex: Plex, nranks: int, *, method: str = "contiguous",
     Returns (local plexes, pointSF, cell_owner).  The pointSF maps each
     rank-local entity (leaf) to the owning rank's local copy (root) — the
     DMPlex pointSF of §3.1.
+
+    Rank-flat: overlap growth, the local builds and the pointSF each run as
+    ONE vectorised pass over all ranks' flat rank-tagged arrays (the save-
+    side counterpart of the loader's ``TopoForest`` engine) — per-rank
+    outputs are bit-identical to the per-rank ``add_overlap`` /
+    ``build_local_plex`` formulation, locked by ``tests/test_save_engine``.
     """
     cells = plex.cell_ids
     if cell_owner is None:
         cell_owner = cell_partition(len(cells), nranks, method, seed)
     owner = entity_owners(plex, cell_owner)
-    # split cell ids per owning rank without R full-mesh scans
+    # rank-major visible-cell pairs: stable sort keeps ids ascending per rank
     order = np.argsort(cell_owner, kind="stable")
-    splits = np.cumsum(np.bincount(cell_owner, minlength=nranks))[:-1]
-    per_rank_cells = np.split(cells[order], splits)
-    locals_: list[LocalPlex] = []
-    for r in range(nranks):
-        own_cells = per_rank_cells[r]
-        vis_cells = add_overlap(plex, own_cells, overlap) if overlap \
-            else own_cells
-        locals_.append(build_local_plex(plex, vis_cells, owner, r))
+    vis_rank = np.asarray(cell_owner, dtype=_INT)[order]
+    vis_cell = cells[order]
+    if overlap:
+        vis_rank, vis_cell = overlap_all_ranks(plex, vis_rank, vis_cell,
+                                               nranks, overlap)
+    locals_ = build_local_plexes(plex, vis_rank, vis_cell, owner, nranks)
     sf = point_sf(locals_)
     return locals_, sf, cell_owner
 
 
 def point_sf(locals_: list[LocalPlex]) -> StarForest:
     """Build the pointSF: leaf (r, i) -> (owner rank, owner-local index).
-    Leaves are resolved per distinct neighbour rank through the owner's
-    vectorised ``global_to_local`` — O(neighbours) lookups per rank, not
-    O(entities) dict probes."""
-    rr, ri = [], []
-    for lp in locals_:
-        a = lp.owner.astype(_INT, copy=True)
-        b = np.empty(lp.num_entities, dtype=_INT)
-        for o in np.unique(lp.owner):
-            m = lp.owner == o
-            b[m] = locals_[int(o)].global_to_local(lp.loc_g[m])
-        rr.append(a)
-        ri.append(b)
-    nroots = tuple(lp.num_entities for lp in locals_)
-    return StarForest(nroots, tuple(rr), tuple(ri))
+
+    One global sort over all ranks' (rank, global id) keys builds the
+    owner-local index table; one searchsorted resolves every leaf — no
+    per-neighbour mask loops or per-owner ``global_to_local`` probes at any
+    rank count.  The per-rank attachment arrays are disjoint views of two
+    flat buffers."""
+    nranks = len(locals_)
+    sizes = np.asarray([lp.num_entities for lp in locals_], dtype=_INT)
+    loc_g = (np.concatenate([lp.loc_g for lp in locals_])
+             if nranks else np.empty(0, _INT))
+    owner = (np.concatenate([lp.owner for lp in locals_]).astype(_INT)
+             if nranks else np.empty(0, _INT))
+    E = int(loc_g.max(initial=-1)) + 1
+    radix = _rank_radix(nranks, E)
+    rank_rep = np.repeat(np.arange(nranks, dtype=_INT), sizes)
+    bases = csr_offsets(sizes)
+    # (holder rank, global id) -> holder-local index, one sorted table
+    tab_key = rank_rep * radix + loc_g
+    torder = np.argsort(tab_key)
+    tab_sorted = tab_key[torder]
+    tab_local = (np.arange(len(loc_g), dtype=_INT)
+                 - np.repeat(bases[:-1], sizes))[torder]
+    want = owner * radix + loc_g
+    pos = np.minimum(np.searchsorted(tab_sorted, want),
+                     max(len(tab_sorted) - 1, 0))
+    # loud under -O: a miss means an entity's owner lacks a copy of it
+    if want.size and not (tab_sorted[pos] == want).all():
+        bad = int(np.flatnonzero(tab_sorted[pos] != want)[0])
+        raise ValueError(
+            f"point_sf: owner rank {int(owner[bad])} holds no copy of "
+            f"global id {int(loc_g[bad])}")
+    nroots = tuple(int(s) for s in sizes)
+    return StarForest(nroots, tuple(split_segments(owner, sizes)),
+                      tuple(split_segments(tab_local[pos], sizes)))
 
 
 # ---------------------------------------------------- distributed directory

@@ -1,0 +1,336 @@
+"""Rank-flat save-side engine tests.
+
+The PR-5 refactor runs every save-side stage as ONE vectorised pass over
+all ranks' flat rank-tagged arrays instead of ``for r in range(R)`` loops —
+the mirror of the PR-4 load-side engine.  Contracts:
+
+  1. the flat ``distribute()`` (rank-tagged ``overlap_all_ranks`` +
+     batched ``build_local_plexes`` + one-sort ``point_sf``) equals the
+     naive per-rank formulation (``add_overlap`` / ``build_local_plex`` per
+     rank, per-owner ``global_to_local`` probes) bit-for-bit — LocalPlex
+     fields, pointSF attachments, every partition method, ``overlap`` ∈
+     {0, 1, 2}, including empty-rank (R > ncells) configurations;
+  2. ``add_overlap`` accepts set input without a per-element ``sorted``
+     path and equals the array-input result;
+  3. the vectorised ``balanced_chunk_partition`` and the flat
+     ``TensorCheckpoint`` region walks equal the historical per-rank
+     formulations (partition assignment, save bytes, load values);
+  4. input-validating ``assert``s became ``ValueError``s that survive
+     ``python -O`` (ordinal order, rank-count mismatches, chunk coverage,
+     saved-size/layout disagreement);
+  5. a timed R=1024 save smoke (distribute + save_mesh + save_function)
+     guards the flat engine against gross regressions, mirroring
+     ``tests/test_load_engine.py``.
+"""
+
+import json
+import pathlib
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.chunk_layout import ArraySpec, Box, StateLayout
+from repro.core.comm import Comm
+from repro.core.star_forest import StarForest
+from repro.core.store import DatasetStore
+from repro.core.tensor_ckpt import (
+    ArrayShard,
+    TensorCheckpoint,
+    balanced_chunk_partition,
+    shards_from_arrays,
+)
+from repro.distrib.sharding import canonical_regions
+from repro.fem import (
+    Element,
+    FEMCheckpoint,
+    FunctionSpace,
+    distribute,
+    interpolate,
+    tri_mesh,
+    tri_mesh_fast,
+)
+from repro.fem.plex import (
+    add_overlap,
+    build_local_plex,
+    cell_partition,
+    entity_owners,
+    point_sf,
+)
+
+_INT = np.int64
+
+
+def _field(pts):
+    x, y = pts[:, 0], pts[:, 1]
+    return np.sin(3 * x) * (2 + np.cos(5 * y)) + x * y
+
+
+# ------------------------------------------------ naive per-rank references
+def naive_distribute(plex, nranks, method, seed, overlap):
+    """Pre-refactor save-side distribution: per-rank overlap growth + local
+    builds + per-owner global_to_local pointSF probes."""
+    cells = plex.cell_ids
+    cell_owner = cell_partition(len(cells), nranks, method, seed)
+    owner = entity_owners(plex, cell_owner)
+    order = np.argsort(cell_owner, kind="stable")
+    splits = np.cumsum(np.bincount(cell_owner, minlength=nranks))[:-1]
+    per_rank_cells = np.split(cells[order], splits)
+    locals_ = []
+    for r in range(nranks):
+        own = per_rank_cells[r]
+        vis = add_overlap(plex, own, overlap) if overlap else own
+        locals_.append(build_local_plex(plex, vis, owner, r))
+    rr, ri = [], []
+    for lp in locals_:
+        a = lp.owner.astype(_INT, copy=True)
+        b = np.empty(lp.num_entities, dtype=_INT)
+        for o in np.unique(lp.owner):
+            m = lp.owner == o
+            b[m] = locals_[int(o)].global_to_local(lp.loc_g[m])
+        rr.append(a)
+        ri.append(b)
+    sf = StarForest(tuple(lp.num_entities for lp in locals_),
+                    tuple(rr), tuple(ri))
+    return locals_, sf, cell_owner
+
+
+def naive_balanced_chunk_partition(layout, nranks):
+    """Pre-refactor per-chunk scan (Box objects + running accumulator)."""
+    entities = []
+    for spec in layout.arrays:
+        for o, box in spec.grid.iter_boxes():
+            entities.append((spec.name, o, box.size))
+    total = sum(e[2] for e in entities)
+    out = [dict() for _ in range(nranks)]
+    acc, r = 0, 0
+    bounds = [(i + 1) * total / nranks for i in range(nranks)]
+    per = [[] for _ in range(nranks)]
+    for name, o, sz in entities:
+        while r < nranks - 1 and acc + sz / 2 > bounds[r]:
+            r += 1
+        per[r].append((name, o))
+        acc += sz
+    for r in range(nranks):
+        by_arr = {}
+        for name, o in per[r]:
+            by_arr.setdefault(name, []).append(o)
+        out[r] = {k: np.array(sorted(v), dtype=_INT)
+                  for k, v in by_arr.items()}
+    return out
+
+
+CASES = [
+    # (nx, ny, mesh_seed, R) — R=12 > ncells=8 exercises empty ranks
+    (4, 3, 7, 3),
+    (3, 3, 11, 5),
+    (2, 2, 5, 12),
+]
+
+
+# ----------------------------------------------- flat == naive distribute()
+@pytest.mark.parametrize("nx,ny,mesh_seed,R", CASES)
+@pytest.mark.parametrize("method", ["contiguous", "random"])
+@pytest.mark.parametrize("overlap", [0, 1, 2])
+def test_distribute_matches_naive(nx, ny, mesh_seed, R, method, overlap):
+    mesh = tri_mesh(nx, ny, seed=mesh_seed)
+    got_lp, got_sf, got_co = distribute(mesh, R, method=method, seed=3,
+                                        overlap=overlap)
+    want_lp, want_sf, want_co = naive_distribute(mesh, R, method, 3, overlap)
+    np.testing.assert_array_equal(got_co, want_co)
+    assert len(got_lp) == len(want_lp) == R
+    for g, w in zip(got_lp, want_lp):
+        np.testing.assert_array_equal(g.dims, w.dims)
+        np.testing.assert_array_equal(g.cone_offsets, w.cone_offsets)
+        np.testing.assert_array_equal(g.cone_indices, w.cone_indices)
+        np.testing.assert_array_equal(g.loc_g, w.loc_g)
+        np.testing.assert_array_equal(g.owner, w.owner)
+        np.testing.assert_array_equal(g.vcoords, w.vcoords)
+        assert g.rank == w.rank and g.dim == w.dim
+    assert got_sf.nroots == want_sf.nroots
+    for a, b in zip(got_sf.root_rank, want_sf.root_rank):
+        np.testing.assert_array_equal(a, b)
+    for a, b in zip(got_sf.root_idx, want_sf.root_idx):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_point_sf_missing_owner_copy_raises():
+    """A leaf whose owner holds no copy of its global id must fail loudly
+    (ValueError — the old in-loop assert vanished under python -O)."""
+    mesh = tri_mesh(6, 6, seed=1)
+    plexes, _, _ = distribute(mesh, 4)
+    # find an entity and a rank that holds no copy of it, and declare that
+    # rank the owner — the lookup must miss
+    hit = None
+    for lp in plexes:
+        for o in range(len(plexes)):
+            missing = ~np.isin(lp.loc_g, plexes[o].loc_g)
+            if missing.any():
+                hit = (lp, int(np.flatnonzero(missing)[0]), o)
+                break
+        if hit:
+            break
+    assert hit is not None, "fixture needs a rank-disjoint entity"
+    lp, i, o = hit
+    lp.owner[i] = o
+    with pytest.raises(ValueError, match="point_sf"):
+        point_sf(plexes)
+
+
+# --------------------------------------------------- add_overlap set inputs
+def test_add_overlap_set_equals_array_input():
+    mesh = tri_mesh(4, 4, seed=2)
+    cells = mesh.cell_ids[::3]
+    as_set = set(int(c) for c in cells)
+    for layers in (0, 1, 2):
+        np.testing.assert_array_equal(add_overlap(mesh, as_set, layers),
+                                      add_overlap(mesh, cells, layers))
+    # frozenset too, and scrambled order must not matter
+    np.testing.assert_array_equal(add_overlap(mesh, frozenset(as_set), 1),
+                                  add_overlap(mesh, cells[::-1], 1))
+
+
+# ------------------------------------- balanced partition + tensor walks
+def test_balanced_chunk_partition_matches_naive():
+    rng = np.random.default_rng(7)
+    for _ in range(20):
+        specs = []
+        for a in range(int(rng.integers(1, 4))):
+            nd = int(rng.integers(1, 3))
+            shape = tuple(int(rng.integers(1, 30)) for _ in range(nd))
+            cs = tuple(int(rng.integers(1, 8)) for _ in range(nd))
+            specs.append(ArraySpec(f"a{a}", shape, "float64", cs))
+        layout = StateLayout(tuple(specs))
+        for R in (1, 2, 3, 7, 16):
+            got = balanced_chunk_partition(layout, R)
+            want = naive_balanced_chunk_partition(layout, R)
+            assert len(got) == len(want) == R
+            for g, w in zip(got, want):
+                assert sorted(g) == sorted(w)
+                for k in w:
+                    np.testing.assert_array_equal(g[k], w[k])
+
+
+def test_tensor_roundtrip_2d_regions_cut_chunks(tmp_path):
+    """General-path load with 2-D regions cutting across chunk boundaries:
+    the flat region walk must reproduce every element."""
+    layout = StateLayout((ArraySpec("w", (17, 23), "float64", (5, 4)),))
+    rng = np.random.default_rng(0)
+    arrays = {"w": rng.normal(size=(17, 23))}
+    N, M = 3, 5
+    per_rank = shards_from_arrays(layout, arrays,
+                                  balanced_chunk_partition(layout, N))
+    store = DatasetStore(str(tmp_path), "w")
+    ck = TensorCheckpoint(store)
+    ck.save_layout(layout)
+    ck.save_state(per_rank, Comm(N), 0)
+    plan = [{"w": regs} for regs in canonical_regions((17, 23), M)]
+    out = ck.load_state(plan, Comm(M), 0)
+    for m, p in enumerate(plan):
+        for b, got in zip(p["w"], out[m]["w"]):
+            np.testing.assert_array_equal(got, arrays["w"][b.slices()])
+    assert ck.verify_step(Comm(4), 0)
+    store.close()
+
+
+# ------------------------------------------------- -O-safe input validation
+def test_arrayshard_descending_ordinals_raise():
+    with pytest.raises(ValueError, match="ascend"):
+        ArrayShard(np.array([3, 1]), {3: np.zeros(2), 1: np.zeros(2)})
+
+
+def test_save_state_wrong_rank_count_raises(tmp_path):
+    layout = StateLayout((ArraySpec("v", (8,), "float64", (4,)),))
+    arrays = {"v": np.arange(8.0)}
+    per_rank = shards_from_arrays(layout, arrays,
+                                  balanced_chunk_partition(layout, 2))
+    store = DatasetStore(str(tmp_path), "w")
+    ck = TensorCheckpoint(store)
+    ck.save_layout(layout)
+    with pytest.raises(ValueError, match=r"2 rank states.*3-rank"):
+        ck.save_state(per_rank, Comm(3), 0)
+    store.close()
+
+
+def test_save_state_uncovered_chunks_raise(tmp_path):
+    """Ownership that does not tile the grid must raise, naming the array
+    and both counts (was an assert — gone under python -O)."""
+    layout = StateLayout((ArraySpec("v", (8,), "float64", (4,)),))
+    store = DatasetStore(str(tmp_path), "w")
+    ck = TensorCheckpoint(store)
+    ck.save_layout(layout)
+    partial = [{"v": ArrayShard(np.array([0]),
+                                {0: np.arange(4.0)})}, {}]
+    with pytest.raises(ValueError, match=r"v: owned chunks 1 != grid chunks 2"):
+        ck.save_state(partial, Comm(2), 0)
+    store.close()
+
+
+def test_load_state_wrong_plan_length_raises(tmp_path):
+    layout = StateLayout((ArraySpec("v", (8,), "float64", (4,)),))
+    arrays = {"v": np.arange(8.0)}
+    per_rank = shards_from_arrays(layout, arrays,
+                                  balanced_chunk_partition(layout, 2))
+    store = DatasetStore(str(tmp_path), "w")
+    ck = TensorCheckpoint(store)
+    ck.save_layout(layout)
+    ck.save_state(per_rank, Comm(2), 0)
+    with pytest.raises(ValueError, match=r"plan covers 1 ranks.*2-rank"):
+        ck.load_state([{"v": [Box((0,), (8,))]}], Comm(2), 0)
+    store.close()
+
+
+def test_load_state_corrupt_dof_raises(tmp_path):
+    """A DOF dataset disagreeing with the layout must raise a ValueError
+    naming the array (was an assert — gone under python -O)."""
+    layout = StateLayout((ArraySpec("v", (8,), "float64", (4,)),))
+    arrays = {"v": np.arange(8.0)}
+    per_rank = shards_from_arrays(layout, arrays,
+                                  balanced_chunk_partition(layout, 2))
+    store = DatasetStore(str(tmp_path), "w")
+    ck = TensorCheckpoint(store)
+    ck.save_layout(layout)
+    ck.save_state(per_rank, Comm(2), 0)
+    # corrupt the saved chunk sizes on disk
+    store.write_rows("v/e0/DOF", 0, np.array([5, 3], dtype=_INT))
+    # non-matching regions force the general (validating) path
+    plan = [{"v": [Box((0,), (3,))]}, {"v": [Box((3,), (8,))]}]
+    with pytest.raises(ValueError, match=r"v: saved chunk sizes disagree"):
+        ck.load_state(plan, Comm(2), 0)
+    store.close()
+
+
+# ------------------------------------------------------ timed R=1024 smoke
+def test_flat_save_engine_1024_ranks(tmp_path):
+    """Acceptance gate for the flat save engine: distribute + save_mesh +
+    save_function at 1024 simulated ranks completes and stays within 20x of
+    the recorded wall-time baseline (crash or gross regression fails; timer
+    noise does not) — the mirror of ``test_flat_load_engine_1024_ranks``."""
+    baseline = json.loads(
+        (pathlib.Path(__file__).parent / "data"
+         / "bench_fem_save_baseline.json").read_text())
+    R = baseline["ranks"]
+    mesh = tri_mesh_fast(baseline["nx"], baseline["ny"])
+    t0 = time.perf_counter()
+    plexes, sf, _ = distribute(mesh, R, method="contiguous", seed=0)
+    t_dist = time.perf_counter() - t0
+    store = DatasetStore(str(tmp_path), "w")
+    ck = FEMCheckpoint(store)
+    element = Element("P", 1, "triangle")
+    comm = Comm(R)
+    t1 = time.perf_counter()
+    ck.save_mesh("m", plexes, comm)
+    spaces = [FunctionSpace(lp, element) for lp in plexes]
+    ck.save_function("m", "f", [interpolate(sp, _field) for sp in spaces],
+                     comm)
+    t_save = time.perf_counter() - t1
+    # the mesh made it to disk intact (cheap structural check)
+    assert store.rows("m/topology/dims") == mesh.num_entities
+    dt = t_dist + t_save
+    budget = 20.0 * (baseline["distribute_seconds"]
+                     + baseline["save_seconds"]) + 2.0
+    assert dt <= budget, (
+        f"flat save engine R={R} took {dt:.2f}s "
+        f"(distribute {t_dist:.2f}s + save {t_save:.2f}s), "
+        f">20x the recorded baseline")
+    store.close()
