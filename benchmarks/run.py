@@ -28,7 +28,18 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="smaller sizes (CI)")
+    ap.add_argument("--lint", action="store_true",
+                    help="run ckptlint over src+benchmarks and exit "
+                         "(no benchmarks)")
     args = ap.parse_args(argv)
+
+    if args.lint:
+        # hot-path invariant check only: the benches this driver runs are
+        # exactly the code the rules protect, so give them a fast pre-flight
+        from repro.analysis import ckptlint
+        return ckptlint.main(["src", "benchmarks",
+                              "--root", str(_REPO_ROOT)])
+
     scale = 1 << 14 if args.quick else 1 << 17
 
     from benchmarks import bench_checkpoint as bc

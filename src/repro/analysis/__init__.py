@@ -1,0 +1,10 @@
+"""Static analysis for the checkpoint engine (``ckptlint``).
+
+Only the zero-cost markers are exported at package level so that engine
+modules can ``from repro.analysis import hot_path`` without importing the
+linter itself; the rule engine lives in :mod:`repro.analysis.ckptlint`.
+"""
+
+from repro.analysis.markers import HOT_PATH_ATTR, hot_path
+
+__all__ = ["HOT_PATH_ATTR", "hot_path"]

@@ -1,0 +1,218 @@
+"""``ckptlint`` — rule engine, suppression/baseline handling, and CLI.
+
+Run over the engine tree::
+
+    python -m repro.analysis.ckptlint src benchmarks
+
+Exit status 0 means every rule passed (after per-line suppressions and the
+committed baseline); 1 means unsuppressed findings were printed.
+
+Hot-path selection
+    A function is linted as a hot path when it (a) carries the
+    ``@hot_path`` decorator (detected syntactically, so decorate by that
+    name), (b) is listed in ``repro.analysis.registry.HOT_PATH_REGISTRY``,
+    or (c) is lexically nested inside a hot function.  CKPT005 applies to
+    whole files regardless of hotness.
+
+Suppressions
+    Append ``# ckptlint: disable=CKPT004`` (comma-separate several rule
+    ids) to the offending line.  Suppressions are per-line and per-rule by
+    design — a justification comment next to the pragma is expected.
+
+Baseline
+    ``baseline.json`` (next to this module) holds line-number-free keys
+    ``path::rule::qualname`` for grandfathered findings.  It is kept
+    near-empty on purpose: fix findings instead of baselining them.
+"""
+
+from __future__ import annotations
+
+import argparse
+import ast
+import json
+import re
+import sys
+from pathlib import Path
+
+from repro.analysis import registry as _registry
+from repro.analysis.rules import (
+    ALL_RULES,
+    Finding,
+    FunctionInfo,
+    HOT_RULES,
+    _check_ckpt005,
+)
+
+_SUPPRESS_RE = re.compile(r"#\s*ckptlint:\s*disable=([A-Z0-9_, ]+)")
+_DEFAULT_BASELINE = Path(__file__).with_name("baseline.json")
+
+
+# ----------------------------------------------------------- per-file engine
+def _has_hot_decorator(node: ast.AST) -> bool:
+    for dec in getattr(node, "decorator_list", []):
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        if isinstance(target, ast.Name) and target.id == "hot_path":
+            return True
+        if isinstance(target, ast.Attribute) and target.attr == "hot_path":
+            return True
+    return False
+
+
+def _registered(path: str, registry: dict[str, tuple[str, ...]]) -> set[str]:
+    """Qualnames registered hot for ``path`` (suffix-matched)."""
+    out: set[str] = set()
+    for key, quals in registry.items():
+        if path.endswith(key):
+            out |= set(quals)
+    return out
+
+
+def _collect(tree: ast.Module, path: str,
+             registry: dict[str, tuple[str, ...]],
+             ) -> tuple[list[FunctionInfo], dict[int, str]]:
+    """All functions (with hotness) plus an id(node) -> qualname owner map."""
+    reg = _registered(path, registry)
+    funcs: list[FunctionInfo] = []
+    owner: dict[int, str] = {}
+
+    def visit(node: ast.AST, prefix: str, qual: str, hot: bool) -> None:
+        for child in ast.iter_child_nodes(node):
+            owner[id(child)] = qual
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                child_qual = prefix + child.name
+                child_hot = (hot or _has_hot_decorator(child)
+                             or child_qual in reg or "*" in reg)
+                funcs.append(FunctionInfo(child, child_qual, child_hot))
+                visit(child, child_qual + ".", child_qual, child_hot)
+            elif isinstance(child, ast.ClassDef):
+                visit(child, prefix + child.name + ".", qual, hot)
+            else:
+                visit(child, prefix, qual, hot)
+
+    visit(tree, "", "<module>", False)
+    return funcs, owner
+
+
+def _suppressions(source: str) -> dict[int, set[str]]:
+    out: dict[int, set[str]] = {}
+    for lineno, line in enumerate(source.splitlines(), start=1):
+        m = _SUPPRESS_RE.search(line)
+        if m:
+            out[lineno] = {r.strip() for r in m.group(1).split(",")
+                           if r.strip()}
+    return out
+
+
+def lint_source(source: str, path: str, *,
+                registry: dict[str, tuple[str, ...]] | None = None,
+                shims: frozenset[tuple[str, str]] | None = None,
+                baseline: frozenset[str] = frozenset(),
+                ) -> list[Finding]:
+    """Lint one file's source text; ``path`` is its repo-relative POSIX
+    path (rule gating and registry matching key off it)."""
+    registry = _registry.HOT_PATH_REGISTRY if registry is None else registry
+    shims = _registry.ALLTOALLV_SHIMS if shims is None else shims
+    tree = ast.parse(source, filename=path)
+    funcs, owner = _collect(tree, path, registry)
+
+    findings: list[Finding] = []
+    # hot roots only: a hot function nested in a hot function is already
+    # covered by its parent's subtree walk
+    hot_quals = {f.qualname for f in funcs if f.hot}
+    for fn in funcs:
+        if fn.hot and owner.get(id(fn.node)) not in hot_quals:
+            for check in HOT_RULES.values():
+                check(fn, path, findings)
+
+    def qualname_of(node: ast.AST) -> str:
+        return owner.get(id(node), "<module>")
+
+    # CKPT005 is file-wide; attribute findings to the *nearest* enclosing
+    # function for stable baseline keys
+    for sub in ast.walk(tree):
+        for child in ast.iter_child_nodes(sub):
+            owner.setdefault(id(child), owner.get(id(sub), "<module>"))
+    _check_ckpt005(tree, path, qualname_of, shims, findings)
+
+    sup = _suppressions(source)
+    kept = [f for f in findings
+            if f.rule not in sup.get(f.line, ())
+            and f.key not in baseline]
+    kept.sort(key=lambda f: (f.path, f.line, f.rule))
+    return kept
+
+
+# ------------------------------------------------------------------ tree run
+def iter_py_files(paths: list[Path]) -> list[Path]:
+    files: list[Path] = []
+    for p in paths:
+        if p.is_dir():
+            files.extend(sorted(
+                f for f in p.rglob("*.py")
+                if "__pycache__" not in f.parts))
+        elif p.suffix == ".py":
+            files.append(p)
+    return files
+
+
+def load_baseline(path: Path | None) -> frozenset[str]:
+    if path is None or not path.exists():
+        return frozenset()
+    data = json.loads(path.read_text())
+    if not isinstance(data, list) or \
+            not all(isinstance(k, str) for k in data):
+        raise ValueError(f"baseline {path} must be a JSON list of "
+                         f"'path::rule::qualname' strings")
+    return frozenset(data)
+
+
+def lint_paths(paths: list[str | Path], *, root: str | Path | None = None,
+               baseline: frozenset[str] = frozenset(),
+               registry: dict[str, tuple[str, ...]] | None = None,
+               shims: frozenset[tuple[str, str]] | None = None,
+               ) -> list[Finding]:
+    root = Path.cwd() if root is None else Path(root)
+    resolved = [Path(root, p) for p in paths]
+    findings: list[Finding] = []
+    for f in iter_py_files(resolved):
+        try:
+            rel = f.resolve().relative_to(root.resolve()).as_posix()
+        except ValueError:
+            rel = f.as_posix()
+        findings.extend(lint_source(
+            f.read_text(), rel, registry=registry, shims=shims,
+            baseline=baseline))
+    findings.sort(key=lambda x: (x.path, x.line, x.rule))
+    return findings
+
+
+# ----------------------------------------------------------------------- CLI
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.ckptlint",
+        description="Enforce the rank-flat checkpoint engine's hot-path "
+                    "invariants (rules %s)." % ", ".join(ALL_RULES))
+    ap.add_argument("paths", nargs="*", default=["src", "benchmarks"],
+                    help="files or directories to lint "
+                         "(default: src benchmarks)")
+    ap.add_argument("--root", default=".",
+                    help="repo root paths are resolved against")
+    ap.add_argument("--baseline", type=Path, default=_DEFAULT_BASELINE,
+                    help="JSON baseline of grandfathered findings")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore the baseline file")
+    args = ap.parse_args(argv)
+
+    baseline = frozenset() if args.no_baseline \
+        else load_baseline(args.baseline)
+    findings = lint_paths(args.paths, root=args.root, baseline=baseline)
+    for f in findings:
+        print(f)
+    nfiles = len(iter_py_files([Path(args.root, p) for p in args.paths]))
+    status = "clean" if not findings else f"{len(findings)} finding(s)"
+    print(f"ckptlint: {status} across {nfiles} file(s)", file=sys.stderr)
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,31 @@
+"""Hot-path markers for the ``ckptlint`` static checker.
+
+Hot paths are *declared, not guessed*: engine functions that run once per
+save/load/reshard phase carry the :func:`hot_path` decorator, and
+``ckptlint`` (``python -m repro.analysis.ckptlint``) enforces the rank-flat
+invariants (no per-rank loops, no ``np.split``, ``-O``-safe validation,
+overflow-safe key packing, coalesced store access) inside exactly those
+functions.  Code that cannot carry the decorator (benchmarks) opts in via
+``repro.analysis.registry``.
+"""
+
+from __future__ import annotations
+
+#: Attribute set on decorated callables; purely informational at runtime —
+#: the linter detects the decoration *syntactically*, so ``hot_path`` must be
+#: applied by its own name (``@hot_path`` or ``@markers.hot_path``).
+HOT_PATH_ATTR = "__ckpt_hot_path__"
+
+
+def hot_path(fn):
+    """Mark ``fn`` as a checkpoint-engine hot path (zero runtime cost).
+
+    The decorator returns ``fn`` unchanged apart from a marker attribute;
+    there is no wrapper, so call overhead, tracebacks, pickling and
+    ``inspect`` signatures are untouched.
+    """
+    try:
+        setattr(fn, HOT_PATH_ATTR, True)
+    except (AttributeError, TypeError):   # builtins / slotted callables
+        pass
+    return fn

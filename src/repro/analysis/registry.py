@@ -1,0 +1,38 @@
+"""Opt-in registries for ``ckptlint``.
+
+Two escape hatches keep the checker's policy explicit and reviewable:
+
+``HOT_PATH_REGISTRY``
+    Maps repo-relative file paths to function qualnames that must be linted
+    as hot paths even though the file does not import the
+    :func:`repro.analysis.markers.hot_path` decorator (benchmarks stay free
+    of engine imports beyond what they measure).  ``"*"`` opts in every
+    function in the file.
+
+``ALLTOALLV_SHIMS``
+    ``(path, qualname)`` pairs allowed to call the dense list-of-lists
+    ``Comm.alltoallv`` (rule CKPT005).  The dense collective is a migration
+    shim — O(R^2) Python list handling — and every engine path uses the
+    packed CSR collectives instead.  The set is empty on purpose: tests may
+    exercise the shim (tests are not linted), but no ``src/`` or
+    ``benchmarks/`` code may.
+
+Paths are POSIX-style and matched by suffix, so the checker works from any
+working directory.
+"""
+
+from __future__ import annotations
+
+HOT_PATH_REGISTRY: dict[str, tuple[str, ...]] = {
+    # Bench drivers whose timed regions must stay rank-flat: a stray
+    # per-rank loop here would corrupt the measurement, not just slow it.
+    "benchmarks/bench_checkpoint.py": (
+        "rank_scaling_roundtrip",
+        "timeseries_append",
+        "weak_scaling_save",
+        "weak_scaling_load",
+    ),
+    "benchmarks/bench_fem.py": ("*",),
+}
+
+ALLTOALLV_SHIMS: frozenset[tuple[str, str]] = frozenset()

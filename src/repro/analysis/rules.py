@@ -1,0 +1,428 @@
+"""AST rules for ``ckptlint`` (CKPT001–CKPT006).
+
+Each rule mechanizes one of the rank-flat engine invariants that PRs 1–5
+established in prose (ROADMAP "Standing constraints").  Rules other than
+CKPT005 fire only inside *hot-path* functions — functions carrying the
+``@hot_path`` decorator, listed in ``repro.analysis.registry``, or lexically
+nested inside one.
+
+CKPT001  no ``for``/``while`` loop over a rank/chunk index space
+         (``range(R)``, ``range(nranks)``, ``range(num_chunks)``,
+         ``enumerate(per_rank...)``).  Comprehensions are exempt: building a
+         list of array *views* (``split_segments``) is the sanctioned
+         splitting idiom; statement loops are where per-rank work hides.
+CKPT002  no ``np.split``/``np.array_split`` (quadratic list handling; use
+         ``split_segments`` views).
+CKPT003  no ``assert`` in ``src/repro/{core,fem}`` hot paths — validation
+         must survive ``python -O``, so raise ``ValueError``/``TypeError``
+         naming the offending dataset/counts.
+CKPT004  no multiplication of two id-scale operands without an explicit
+         uint64 cast.  ``(rank, id)`` keys pack as ``rank * (E + 1) + id``
+         — one factor rank-bounded (guarded by ``rank_radix``) — because an
+         id×id product wraps int64 near 2**62 at the paper's 8.2B-DoF
+         scale.  Operand scale is inferred from names (``rank``/``src``/
+         ``dst``/``owner`` tokens are rank-scale; ``id``/``key``/``tag``/
+         ``E``/``radix`` tokens are id-scale) with dataflow over
+         assignments, so ``g = x.astype(np.uint64); g * g`` passes.
+CKPT005  no call to the dense list-of-lists ``Comm.alltoallv`` outside the
+         ``ALLTOALLV_SHIMS`` allowlist (applies file-wide, not just hot
+         paths — the dense shim is never acceptable in engine code).
+CKPT006  no ``DatasetStore`` data access (``read_rows``/``write_rows``
+         families, ``read_plan``/``write_plan``) lexically inside a loop
+         whose iterations address the *same* dataset — that breaks the
+         one-coalesced-plan-per-dataset-per-phase contract.  A loop over
+         datasets (the dataset-name argument mentions the loop variable) is
+         allowed.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+from collections.abc import Iterator
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    path: str          # repo-relative POSIX path
+    line: int
+    rule: str          # "CKPT001" .. "CKPT006"
+    qualname: str      # enclosing function qualname, or "<module>"
+    message: str
+
+    @property
+    def key(self) -> str:
+        """Line-number-free identity used by the baseline file."""
+        return f"{self.path}::{self.rule}::{self.qualname}"
+
+    def __str__(self) -> str:
+        return (f"{self.path}:{self.line}: {self.rule} "
+                f"[{self.qualname}] {self.message}")
+
+
+# --------------------------------------------------------------- name scales
+# CKPT001: names that denote a rank/chunk *count* (an index-space extent).
+RANK_COUNT_NAMES = frozenset({
+    "R", "M", "N", "nranks", "nranks_root", "nranks_leaf", "n_ranks",
+    "num_chunks", "nchunks", "n_chunks",
+})
+
+# CKPT004 operand scales.  Token sets match whole ``_``-separated tokens of
+# a (lower-cased) identifier; exact sets match the identifier verbatim.
+# Rank tokens win over id tokens ("rank_tags" is rank-scale): a variable
+# named for ranks is bounded by the radix guard whatever it indexes.
+_RANK_TOKENS = frozenset({
+    "rank", "ranks", "nranks", "src", "dst", "dest", "dests",
+    "owner", "owners",
+})
+_RANK_EXACT = frozenset({"r", "m", "R", "M", "N"})
+_ID_TOKENS = frozenset({
+    "id", "ids", "gid", "gids", "g", "glob", "globals", "key", "keys",
+    "ord", "ords", "ordinal", "ordinals", "seed", "seeds", "tag", "tags",
+    "point", "points", "cell", "cells", "vert", "verts", "node", "nodes",
+    "total", "radix", "stride", "strides",
+})
+_ID_EXACT = frozenset({"E", "D", "Eo", "nn"})
+
+# Single-argument numpy/builtin wrappers that preserve operand scale.
+_TRANSPARENT_CALLS = frozenset({
+    "asarray", "ascontiguousarray", "array", "repeat", "arange", "unique",
+    "concatenate", "abs", "int", "_INT",
+})
+# Calls whose *result* is id-scale (a packing radix is as large as E).
+_ID_CALLS = frozenset({"rank_radix", "_rank_radix"})
+
+UINT64, RANK, ID, SMALL, UNKNOWN = "uint64", "rank", "id", "small", "unknown"
+
+#: DatasetStore data-plane methods covered by CKPT006.
+STORE_OPS = frozenset({
+    "read_rows", "read_rows_at", "read_plan",
+    "write_rows", "write_rows_at", "write_plan",
+})
+
+
+def _tokens(name: str) -> set[str]:
+    return set(name.lower().split("_")) - {""}
+
+
+def _name_scale(name: str) -> str:
+    toks = _tokens(name)
+    if name in _RANK_EXACT or toks & _RANK_TOKENS:
+        return RANK
+    if name in _ID_EXACT or toks & _ID_TOKENS:
+        return ID
+    return UNKNOWN
+
+
+def _names_in(node: ast.AST) -> Iterator[str]:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name):
+            yield sub.id
+        elif isinstance(sub, ast.Attribute):
+            yield sub.attr
+
+
+def _call_name(node: ast.Call) -> str:
+    f = node.func
+    if isinstance(f, ast.Name):
+        return f.id
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    return ""
+
+
+def _is_uint64_ref(node: ast.AST) -> bool:
+    """``np.uint64`` / ``uint64`` / ``"uint64"`` as an expression."""
+    if isinstance(node, ast.Attribute):
+        return node.attr == "uint64"
+    if isinstance(node, ast.Name):
+        return node.id == "uint64"
+    if isinstance(node, ast.Constant):
+        return node.value == "uint64"
+    return False
+
+
+class _ScaleEnv:
+    """Operand-scale inference with dataflow over straight-line assignments
+    inside one function body (CKPT004)."""
+
+    def __init__(self) -> None:
+        self.env: dict[str, str] = {}
+
+    def assign(self, target: ast.AST, value_scale: str) -> None:
+        if isinstance(target, ast.Name):
+            self.env[target.id] = value_scale
+
+    def scale(self, node: ast.AST) -> str:
+        if isinstance(node, ast.Constant):
+            if isinstance(node.value, bool) or not isinstance(
+                    node.value, int):
+                return UNKNOWN
+            return ID if abs(node.value) >= 1 << 20 else SMALL
+        if isinstance(node, ast.Name):
+            got = self.env.get(node.id)
+            if got == UINT64:
+                return UINT64
+            by_name = _name_scale(node.id)
+            if by_name is not UNKNOWN:
+                return by_name
+            return got or UNKNOWN
+        if isinstance(node, ast.Attribute):
+            return _name_scale(node.attr)
+        if isinstance(node, ast.Subscript):
+            return self.scale(node.value)
+        if isinstance(node, ast.UnaryOp):
+            return self.scale(node.operand)
+        if isinstance(node, ast.Call):
+            name = _call_name(node)
+            if name == "uint64":
+                return UINT64
+            if name in ("astype", "view") and node.args and \
+                    _is_uint64_ref(node.args[0]):
+                return UINT64
+            if name == "astype" and isinstance(node.func, ast.Attribute):
+                # non-uint64 astype: scale of the array being cast
+                return self.scale(node.func.value)
+            if name in _ID_CALLS:
+                return ID
+            if name in _TRANSPARENT_CALLS and node.args:
+                scales = [self.scale(a) for a in node.args]
+                for want in (UINT64, ID, RANK, SMALL):
+                    if want in scales:
+                        return want
+                return UNKNOWN
+            return UNKNOWN
+        if isinstance(node, ast.BinOp):
+            left, right = self.scale(node.left), self.scale(node.right)
+            if UINT64 in (left, right):
+                return UINT64
+            if isinstance(node.op, (ast.Add, ast.Sub)):
+                for want in (ID, RANK, SMALL):
+                    if want in (left, right):
+                        return want
+                return UNKNOWN
+            if isinstance(node.op, ast.Mult):
+                return ID      # any product is as large as its widest factor
+            return UNKNOWN
+        return UNKNOWN
+
+
+# ------------------------------------------------------------------- context
+@dataclasses.dataclass
+class FunctionInfo:
+    node: ast.AST                 # FunctionDef | AsyncFunctionDef
+    qualname: str
+    hot: bool
+
+
+class _LoopCtx:
+    """Stack of enclosing-loop target-name sets (CKPT006)."""
+
+    def __init__(self) -> None:
+        self.stack: list[set[str]] = []
+
+    @property
+    def in_loop(self) -> bool:
+        return bool(self.stack)
+
+    def targets(self) -> set[str]:
+        out: set[str] = set()
+        for s in self.stack:
+            out |= s
+        return out
+
+
+def _loop_targets(node: ast.AST) -> set[str]:
+    if isinstance(node, ast.For):
+        return {n for n in _names_in(node.target)}
+    if isinstance(node, ast.comprehension):
+        return {n for n in _names_in(node.target)}
+    return set()               # while loops bind nothing
+
+
+# ----------------------------------------------------------------- the rules
+def _check_ckpt001(fn: FunctionInfo, path: str,
+                   findings: list[Finding]) -> None:
+    def rankish(expr: ast.AST) -> str | None:
+        for name in _names_in(expr):
+            if name in RANK_COUNT_NAMES:
+                return name
+        return None
+
+    for node in ast.walk(fn.node):
+        if isinstance(node, ast.For):
+            it = node.iter
+            if isinstance(it, ast.Call):
+                cname = _call_name(it)
+                hit = rankish(it) if cname == "range" else None
+                if cname == "range" and hit:
+                    findings.append(Finding(
+                        path, node.lineno, "CKPT001", fn.qualname,
+                        f"per-rank loop: `for ... in range({hit})` on a hot "
+                        f"path — vectorize, or split into views with "
+                        f"split_segments"))
+                elif cname == "enumerate" and any(
+                        "per_rank" in n for n in _names_in(it)):
+                    findings.append(Finding(
+                        path, node.lineno, "CKPT001", fn.qualname,
+                        "per-rank loop: `enumerate(per_rank...)` on a hot "
+                        "path — vectorize over the rank-flat concatenation"))
+            elif any("per_rank" in n for n in _names_in(it)):
+                findings.append(Finding(
+                    path, node.lineno, "CKPT001", fn.qualname,
+                    "per-rank loop: iterating a per_rank container on a "
+                    "hot path — vectorize over the rank-flat concatenation"))
+        elif isinstance(node, ast.While):
+            hit = rankish(node.test)
+            if hit:
+                findings.append(Finding(
+                    path, node.lineno, "CKPT001", fn.qualname,
+                    f"per-rank loop: `while` over rank count `{hit}` on a "
+                    f"hot path — vectorize"))
+
+
+def _check_ckpt002(fn: FunctionInfo, path: str,
+                   findings: list[Finding]) -> None:
+    for node in ast.walk(fn.node):
+        if isinstance(node, ast.Call) and \
+                isinstance(node.func, ast.Attribute) and \
+                node.func.attr in ("split", "array_split") and \
+                isinstance(node.func.value, ast.Name) and \
+                node.func.value.id in ("np", "numpy"):
+            findings.append(Finding(
+                path, node.lineno, "CKPT002", fn.qualname,
+                f"np.{node.func.attr} on a hot path builds a Python list "
+                f"of copies/views with list-append semantics — use "
+                f"split_segments (zero-copy views off the flat buffer)"))
+
+
+def _check_ckpt003(fn: FunctionInfo, path: str,
+                   findings: list[Finding]) -> None:
+    if not ("src/repro/core/" in path or "src/repro/fem/" in path):
+        return
+    for node in ast.walk(fn.node):
+        if isinstance(node, ast.Assert):
+            findings.append(Finding(
+                path, node.lineno, "CKPT003", fn.qualname,
+                "assert on a hot path is stripped by `python -O` — raise "
+                "ValueError/TypeError naming the offending dataset/counts"))
+
+
+def _check_ckpt004(fn: FunctionInfo, path: str,
+                   findings: list[Finding]) -> None:
+    env = _ScaleEnv()
+
+    def walk(node: ast.AST) -> None:
+        # statement-order dataflow: record assignments as encountered
+        if isinstance(node, ast.Assign):
+            val_scale = env.scale(node.value)
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Tuple) and \
+                        isinstance(node.value, ast.Tuple) and \
+                        len(tgt.elts) == len(node.value.elts):
+                    for t, v in zip(tgt.elts, node.value.elts):
+                        env.assign(t, env.scale(v))
+                else:
+                    env.assign(tgt, val_scale)
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            env.assign(node.target, env.scale(node.value))
+        if isinstance(node, ast.BinOp) and isinstance(node.op, ast.Mult):
+            left, right = env.scale(node.left), env.scale(node.right)
+            if left == ID and right == ID:
+                findings.append(Finding(
+                    path, node.lineno, "CKPT004", fn.qualname,
+                    "product of two id-scale operands wraps int64 near "
+                    "2**62 at paper scale — pack keys as rank*(E+1)+id "
+                    "(rank_radix-guarded) or cast both via np.uint64"))
+        for child in ast.iter_child_nodes(node):
+            walk(child)
+
+    walk(fn.node)
+
+
+def _check_ckpt005(tree: ast.Module, path: str, qualname_of,
+                   shims: frozenset[tuple[str, str]],
+                   findings: list[Finding]) -> None:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and \
+                isinstance(node.func, ast.Attribute) and \
+                node.func.attr == "alltoallv":
+            qual = qualname_of(node)
+            if any(path.endswith(p) and qual == q for p, q in shims):
+                continue
+            findings.append(Finding(
+                path, node.lineno, "CKPT005", qual,
+                "dense list-of-lists Comm.alltoallv is a migration shim "
+                "(O(R^2) Python list handling) — use alltoallv_packed / "
+                "neighbor_alltoallv, or allowlist the caller in "
+                "repro.analysis.registry.ALLTOALLV_SHIMS"))
+
+
+def _check_ckpt006(fn: FunctionInfo, path: str,
+                   findings: list[Finding]) -> None:
+    ctx = _LoopCtx()
+
+    def walk(node: ast.AST) -> None:
+        # a loop's iterable is evaluated ONCE, before any iteration — a
+        # store op there is a single coalesced call, not a per-iteration one
+        if isinstance(node, ast.For):
+            walk(node.iter)
+            ctx.stack.append(_loop_targets(node))
+            walk(node.target)
+            for child in node.body + node.orelse:
+                walk(child)
+            ctx.stack.pop()
+            return
+        if isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                             ast.GeneratorExp)):
+            pushed = 0
+            for gen in node.generators:
+                walk(gen.iter)     # nested iters correctly see outer targets
+                ctx.stack.append(_loop_targets(gen))
+                pushed += 1
+                for cond in gen.ifs:
+                    walk(cond)
+            if isinstance(node, ast.DictComp):
+                walk(node.key)
+                walk(node.value)
+            else:
+                walk(node.elt)
+            for _ in range(pushed):
+                ctx.stack.pop()
+            return
+        pushed = 0
+        if isinstance(node, ast.While):
+            ctx.stack.append(set())
+            pushed = 1
+        if isinstance(node, ast.Call) and \
+                isinstance(node.func, ast.Attribute) and \
+                node.func.attr in STORE_OPS and ctx.in_loop:
+            first = node.args[0] if node.args else None
+            dataset_varies = first is not None and \
+                bool(set(_names_in(first)) & ctx.targets())
+            if not dataset_varies:
+                findings.append(Finding(
+                    path, node.lineno, "CKPT006", fn.qualname,
+                    f"store .{node.func.attr} inside a loop on a fixed "
+                    f"dataset breaks the one-coalesced-plan-per-dataset-"
+                    f"per-phase contract — batch the segments into a "
+                    f"single read_plan/write_plan call"))
+        for child in ast.iter_child_nodes(node):
+            walk(child)
+        for _ in range(pushed):
+            ctx.stack.pop()
+
+    walk(fn.node)
+
+
+#: rule id -> (per-hot-function checker or None, doc one-liner)
+HOT_RULES = {
+    "CKPT001": _check_ckpt001,
+    "CKPT002": _check_ckpt002,
+    "CKPT003": _check_ckpt003,
+    "CKPT004": _check_ckpt004,
+    "CKPT006": _check_ckpt006,
+}
+
+ALL_RULES = ("CKPT001", "CKPT002", "CKPT003", "CKPT004", "CKPT005",
+             "CKPT006")

@@ -25,6 +25,7 @@ from typing import Iterator, Sequence
 
 import numpy as np
 
+from repro.analysis import hot_path
 from repro.core.comm import rank_radix
 
 _INT = np.int64
@@ -37,9 +38,14 @@ class Box:
     start: tuple[int, ...]
     stop: tuple[int, ...]
 
+    @hot_path
     def __post_init__(self):
-        assert len(self.start) == len(self.stop)
-        assert all(a <= b for a, b in zip(self.start, self.stop))
+        if len(self.start) != len(self.stop):
+            raise ValueError(f"box start {self.start} and stop {self.stop} "
+                             f"have different ranks")
+        if not all(a <= b for a, b in zip(self.start, self.stop)):
+            raise ValueError(f"inverted box: start {self.start} > "
+                             f"stop {self.stop}")
 
     @property
     def ndim(self) -> int:
@@ -77,7 +83,9 @@ def row_major_ids(box: Box, within: Box) -> np.ndarray:
 
     This is the intra-entity DoF numbering: stable because it is defined by
     global coordinates (the paper's cone-derived DoF order, §2.2)."""
-    assert within.contains(box)
+    if not within.contains(box):
+        raise ValueError(f"box [{box.start}, {box.stop}) not contained in "
+                         f"frame [{within.start}, {within.stop})")
     grids = np.meshgrid(*[np.arange(a - wa, b - wa, dtype=_INT)
                           for a, b, wa in
                           zip(box.start, box.stop, within.start)],
@@ -98,9 +106,14 @@ class ChunkGrid:
     shape: tuple[int, ...]
     chunk_shape: tuple[int, ...]
 
+    @hot_path
     def __post_init__(self):
-        assert len(self.shape) == len(self.chunk_shape)
-        assert all(c >= 1 for c in self.chunk_shape)
+        if len(self.shape) != len(self.chunk_shape):
+            raise ValueError(f"array shape {self.shape} and chunk shape "
+                             f"{self.chunk_shape} have different ranks")
+        if not all(c >= 1 for c in self.chunk_shape):
+            raise ValueError(f"chunk shape {self.chunk_shape} must be >= 1 "
+                             f"in every dim")
 
     @property
     def counts(self) -> tuple[int, ...]:
@@ -134,6 +147,7 @@ class ChunkGrid:
             yield o, self.chunk_box(o)
 
     # ------------------------------------------------- vectorised geometry
+    @hot_path
     def chunk_bounds(self, ordinals: np.ndarray
                      ) -> tuple[np.ndarray, np.ndarray]:
         """``chunk_box`` for a whole ordinal array at once: (starts, stops)
@@ -151,11 +165,13 @@ class ChunkGrid:
         stops = np.minimum(starts + cs, np.asarray(self.shape, dtype=_INT))
         return starts, stops
 
+    @hot_path
     def chunk_sizes(self, ordinals: np.ndarray) -> np.ndarray:
         """Box volumes of ``ordinals``, vectorised (the DOF column)."""
         starts, stops = self.chunk_bounds(ordinals)
         return np.prod(stops - starts, axis=1, dtype=_INT)
 
+    @hot_path
     def intersections(self, box_starts: np.ndarray, box_stops: np.ndarray
                       ) -> tuple[np.ndarray, np.ndarray,
                                  np.ndarray, np.ndarray, np.ndarray]:
@@ -199,6 +215,7 @@ class ChunkGrid:
         return rep, ords, istart, istop, cstart
 
 
+@hot_path
 def box_element_positions(inner_start: np.ndarray, inner_stop: np.ndarray,
                           outers: Sequence[tuple[np.ndarray, np.ndarray]]
                           ) -> tuple[np.ndarray, list[np.ndarray]]:
@@ -269,6 +286,7 @@ class RegionPlan:
     elem_target: np.ndarray    # [ne] position into the concatenated boxes
     elem_counts: np.ndarray    # [M] elements per rank
 
+    @hot_path
     def scatter_to_boxes(self, vals: np.ndarray, dtype) -> list[list[np.ndarray]]:
         """Scatter per-element values (in plan enumeration order) into the
         target boxes: one fancy assignment into the concatenated box buffer,
@@ -283,6 +301,7 @@ class RegionPlan:
         return [bufs[a:b] for a, b in zip(bb[:-1], bb[1:])]
 
 
+@hot_path
 def plan_regions(grid: ChunkGrid, regions: Sequence[Sequence[Box]]
                  ) -> RegionPlan:
     """Build the :class:`RegionPlan` for ``regions[rank] = [Box, ...]``."""
@@ -356,9 +375,12 @@ class StateLayout:
 
     arrays: tuple[ArraySpec, ...]
 
+    @hot_path
     def __post_init__(self):
         names = [a.name for a in self.arrays]
-        assert len(set(names)) == len(names), "duplicate array names"
+        if len(set(names)) != len(names):
+            dup = sorted(n for n in set(names) if names.count(n) > 1)
+            raise ValueError(f"duplicate array names: {dup}")
 
     def spec(self, name: str) -> ArraySpec:
         return next(a for a in self.arrays if a.name == name)

@@ -35,9 +35,12 @@ from typing import Sequence
 
 import numpy as np
 
+from repro.analysis import hot_path
+
 _INT = np.int64
 
 
+@hot_path
 def split_segments(flat: np.ndarray, sizes) -> list[np.ndarray]:
     """Cut a rank-major concatenated array into per-rank views — plain
     slices, NOT ``np.split`` (whose axis plumbing costs two ``swapaxes``
@@ -46,6 +49,7 @@ def split_segments(flat: np.ndarray, sizes) -> list[np.ndarray]:
     return [flat[a:b] for a, b in zip(offs[:-1], offs[1:])]
 
 
+@hot_path
 def rank_radix(nranks: int, radix: int) -> np.int64:
     """Guarded packing radix for ``rank * radix + id`` scalar keys: rank
     counts are bounded, so the product fits int64 — but only checked-for
@@ -60,6 +64,7 @@ def rank_radix(nranks: int, radix: int) -> np.int64:
     return _INT(radix)
 
 
+@hot_path
 def edge_pack(src: np.ndarray, dst: np.ndarray, nranks: int
               ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
     """CSR-pack flat rank-tagged rows for a sparse exchange: the stable
@@ -77,6 +82,7 @@ def edge_pack(src: np.ndarray, dst: np.ndarray, nranks: int
         ecnt.astype(_INT)
 
 
+@hot_path
 def ragged_arange(starts: np.ndarray, lengths: np.ndarray) -> np.ndarray:
     """Concatenation of ``arange(s, s + n)`` for each (s, n) pair, fully
     vectorised — the workhorse of every CSR gather in this package."""
@@ -110,7 +116,8 @@ class Comm:
     """In-process BSP communicator over ``nranks`` simulated ranks."""
 
     def __init__(self, nranks: int):
-        assert nranks >= 1
+        if nranks < 1:
+            raise ValueError(f"Comm needs nranks >= 1, got {nranks}")
         self.nranks = int(nranks)
         self.stats = CommStats()
 
@@ -122,6 +129,7 @@ class Comm:
         self.stats.record(moved, local)
 
     # ----------------------------------------------------- packed collectives
+    @hot_path
     def neighbor_alltoallv(self, src: np.ndarray, dst: np.ndarray,
                            cnt: np.ndarray,
                            send_flat: "Sequence[np.ndarray] | np.ndarray",
@@ -148,24 +156,34 @@ class Comm:
         src = np.asarray(src, dtype=_INT)
         dst = np.asarray(dst, dtype=_INT)
         cnt = np.asarray(cnt, dtype=_INT)
-        assert src.shape == dst.shape == cnt.shape
+        if not (src.shape == dst.shape == cnt.shape):
+            raise ValueError(f"edge arrays disagree: src {src.shape}, "
+                             f"dst {dst.shape}, cnt {cnt.shape}")
         if src.size:
             key = src * R + dst
-            assert (np.diff(key) > 0).all(), \
-                "edges must be strictly sorted by (src, dst)"
+            if not (np.diff(key) > 0).all():
+                raise ValueError("edges must be strictly sorted by "
+                                 "(src, dst)")
         if isinstance(send_flat, np.ndarray):
             flat = send_flat
-            assert int(cnt.sum()) == len(flat), \
-                "edge counts must cover every row of send_flat"
+            if int(cnt.sum()) != len(flat):
+                raise ValueError(f"edge counts must cover every row of "
+                                 f"send_flat: sum(cnt)={int(cnt.sum())}, "
+                                 f"rows={len(flat)}")
         else:
             data = [np.asarray(b) for b in send_flat]
-            assert len(data) == R
+            if len(data) != R:
+                raise ValueError(f"send_flat has {len(data)} per-rank "
+                                 f"buffers, expected R={R}")
             flat = np.concatenate(data) if R > 1 else data[0]
             sent_rows = np.bincount(src, weights=cnt, minlength=R
                                     ).astype(_INT)
-            assert np.array_equal(sent_rows,
-                                  np.array([len(d) for d in data])), \
-                "edge counts must cover every row of send_flat"
+            if not np.array_equal(sent_rows,
+                                  np.array([len(d) for d in data])):
+                raise ValueError("edge counts must cover every row of "
+                                 "send_flat: per-source rows "
+                                 f"{sent_rows.tolist()} != buffer rows "
+                                 f"{[len(d) for d in data]}")
         # uniform row type across the exchange (one MPI datatype per call)
         row_nbytes = flat.itemsize * int(np.prod(flat.shape[1:], initial=1))
 
@@ -185,6 +203,7 @@ class Comm:
             return out_flat, offs
         return [out_flat[offs[d]:offs[d + 1]] for d in range(R)]
 
+    @hot_path
     def alltoallv_packed(self, counts: np.ndarray,
                          send_flat: Sequence[np.ndarray]) -> list[np.ndarray]:
         """Dense-plan packed all-to-all: ``counts[s, d]`` rows go s→d.
@@ -197,7 +216,9 @@ class Comm:
         """
         R = self.nranks
         counts = np.asarray(counts, dtype=_INT)
-        assert counts.shape == (R, R), counts.shape
+        if counts.shape != (R, R):
+            raise ValueError(f"counts matrix is {counts.shape}, expected "
+                             f"(R, R)=({R}, {R})")
         src, dst = np.nonzero(counts)          # row-major == (src, dst) sorted
         return self.neighbor_alltoallv(src, dst, counts[src, dst], send_flat)
 

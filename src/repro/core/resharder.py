@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.analysis import hot_path
 from repro.core.store import np_dtype
 
 from repro.core.chunk_layout import Box, StateLayout, plan_regions
@@ -31,6 +32,7 @@ from repro.core.tensor_ckpt import PerRankState
 _INT = np.int64
 
 
+@hot_path
 def reshard(layout: StateLayout, source: PerRankState,
             plan: list[dict[str, list[Box]]], comm_src: Comm, comm_dst: Comm
             ) -> list[dict[str, list[np.ndarray]]]:

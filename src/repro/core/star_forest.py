@@ -31,6 +31,7 @@ from typing import Callable, Sequence
 
 import numpy as np
 
+from repro.analysis import hot_path
 from repro.core.comm import split_segments
 
 _INT = np.int64
@@ -94,6 +95,7 @@ class SFPlan:
     def pair_cnt(self) -> np.ndarray:
         return self._pairs()[2]
 
+    @hot_path
     def split_leafwise(self, flat: np.ndarray) -> list[np.ndarray]:
         """Cut a concatenated-leaf-space array back into per-rank views."""
         return [flat[a:b] for a, b in zip(self.leaf_offsets[:-1],
@@ -128,17 +130,24 @@ class StarForest:
 
     @property
     def nranks(self) -> int:
-        assert self.nranks_root == self.nranks_leaf, "square SF expected"
+        if self.nranks_root != self.nranks_leaf:
+            raise ValueError(f"square SF expected, got {self.nranks_root} "
+                             f"root ranks / {self.nranks_leaf} leaf ranks")
         return self.nranks_root
 
     @property
     def nleaves(self) -> tuple[int, ...]:
         return tuple(len(a) for a in self.root_rank)
 
+    @hot_path
     def __post_init__(self):
-        assert len(self.root_rank) == len(self.root_idx)
+        if len(self.root_rank) != len(self.root_idx):
+            raise ValueError(f"{len(self.root_rank)} root_rank arrays for "
+                             f"{len(self.root_idx)} root_idx arrays")
         for rr, ri in zip(self.root_rank, self.root_idx):
-            assert rr.shape == ri.shape
+            if rr.shape != ri.shape:
+                raise ValueError(f"attachment arrays disagree: root_rank "
+                                 f"{rr.shape} != root_idx {ri.shape}")
         nleaves = np.array([len(a) for a in self.root_rank], dtype=_INT)
         rr_all = (np.concatenate(self.root_rank) if self.nranks_leaf
                   else np.empty(0, _INT)).astype(_INT, copy=False)
@@ -146,6 +155,7 @@ class StarForest:
                   else np.empty(0, _INT)).astype(_INT, copy=False)
         self._compile(rr_all, ri_all, nleaves)
 
+    @hot_path
     def _compile(self, rr_all: np.ndarray, ri_all: np.ndarray,
                  nleaves: np.ndarray) -> None:
         """Compile the packed communication plan (PetscSFSetUp analogue)
@@ -158,8 +168,13 @@ class StarForest:
             rr_att, ri_att = rr_all, ri_all    # fully attached: no gather
         else:
             rr_att, ri_att = rr_all[scatter], ri_all[scatter]
-        assert rr_att.size == 0 or rr_att.max() < self.nranks_root
-        assert (ri_att >= 0).all() and (ri_att < root_sizes[rr_att]).all()
+        if rr_att.size and rr_att.max() >= self.nranks_root:
+            raise ValueError(f"attachment root rank {int(rr_att.max())} out "
+                             f"of range for {self.nranks_root} root ranks")
+        if rr_att.size and not ((ri_att >= 0).all()
+                                and (ri_att < root_sizes[rr_att]).all()):
+            raise ValueError("attachment root index out of range for its "
+                             "root rank's local space")
         gather = root_offsets[rr_att] + ri_att
         plan = SFPlan(
             root_offsets=root_offsets,
@@ -171,6 +186,7 @@ class StarForest:
 
     # ------------------------------------------------------------ constructors
     @classmethod
+    @hot_path
     def from_flat_attachments(cls, nroots: Sequence[int],
                               leaf_sizes: Sequence[int] | np.ndarray,
                               rr_flat: np.ndarray, ri_flat: np.ndarray
@@ -230,6 +246,7 @@ class StarForest:
         return StarForest(tuple(int(s) for s in root_sizes), tuple(rr), tuple(ri))
 
     @staticmethod
+    @hot_path
     def from_flat_global_numbers(
         flat_globals: np.ndarray, leaf_sizes: Sequence[int] | np.ndarray,
         total: int, nranks_root: int
@@ -242,7 +259,9 @@ class StarForest:
         rank count."""
         flat_globals = np.asarray(flat_globals, dtype=_INT)
         leaf_sizes = np.asarray(leaf_sizes, dtype=_INT)
-        assert int(leaf_sizes.sum()) == len(flat_globals)
+        if int(leaf_sizes.sum()) != len(flat_globals):
+            raise ValueError(f"leaf_sizes sum to {int(leaf_sizes.sum())} "
+                             f"but flat_globals has {len(flat_globals)} ids")
         root_sizes = partition_sizes(total, nranks_root)
         starts = np.concatenate([[0], np.cumsum(root_sizes)])
         rr_flat = (np.searchsorted(starts, flat_globals, side="right") - 1
@@ -252,6 +271,7 @@ class StarForest:
             [int(s) for s in root_sizes], leaf_sizes, rr_flat, ri_flat)
 
     @staticmethod
+    @hot_path
     def from_global_numbers(
         leaf_globals: Sequence[np.ndarray], total: int, nranks_root: int
     ) -> "StarForest":
@@ -266,6 +286,7 @@ class StarForest:
                                                    nranks_root)
 
     @staticmethod
+    @hot_path
     def from_sorted_global_numbers(
         leaf_globals: Sequence[np.ndarray], total: int, nranks_root: int
     ) -> "StarForest":
@@ -282,12 +303,15 @@ class StarForest:
             interior = np.ones(len(flat) - 1, dtype=bool)
             bounds = np.cumsum(sizes)[:-1]
             interior[bounds[(bounds > 0) & (bounds < len(flat))] - 1] = False
-            assert (np.diff(flat)[interior] >= 0).all(), \
-                "from_sorted_global_numbers: ids must be ascending"
+            if not (np.diff(flat)[interior] >= 0).all():
+                raise ValueError(
+                    "from_sorted_global_numbers: ids must be ascending "
+                    "within each rank's segment")
         return StarForest.from_flat_global_numbers(flat, sizes, total,
                                                    nranks_root)
 
     # ------------------------------------------------------------- operations
+    @hot_path
     def bcast(self, root_data: "Sequence[np.ndarray] | np.ndarray",
               fill=0, return_flat: bool = False):
         """Copy root values to attached leaves (PetscSFBcast).
@@ -314,7 +338,9 @@ class StarForest:
                     f"root space holds {int(plan.root_offsets[-1])}")
             trailing, dtype = flat_in.shape[1:], flat_in.dtype
         else:
-            assert len(root_data) == self.nranks_root
+            if len(root_data) != self.nranks_root:
+                raise ValueError(f"bcast: {len(root_data)} per-rank root "
+                                 f"buffers for {self.nranks_root} root ranks")
             flat_in = None
             trailing, dtype = root_data[0].shape[1:], root_data[0].dtype
         nleaf_flat = int(plan.leaf_offsets[-1])
@@ -340,6 +366,7 @@ class StarForest:
             return out_flat
         return plan.split_leafwise(out_flat)
 
+    @hot_path
     def reduce(
         self,
         leaf_data: "Sequence[np.ndarray] | np.ndarray",
@@ -412,6 +439,7 @@ class StarForest:
             np.copyto(root_data[r], flat_root[a:b].reshape(root_data[r].shape))
         return root_data
 
+    @hot_path
     def _combine(self, flat_root: np.ndarray, vals: np.ndarray,
                  op: str) -> None:
         plan: SFPlan = self.plan
@@ -429,15 +457,17 @@ class StarForest:
         else:
             raise ValueError(op)
 
+    @hot_path
     def compose(self, other: "StarForest") -> "StarForest":
         """``self``: L_A → R_A; ``other``: L_B(=R_A) → R_B.  Result: L_A → R_B.
 
         (PetscSFCompose.)  Implemented as a bcast of ``other``'s attachment
         arrays through ``self`` — which is exactly how it is done distributed.
         """
-        assert self.nroots == other.nleaves, (
-            f"compose: root space {self.nroots} != other's leaf space {other.nleaves}"
-        )
+        if self.nroots != other.nleaves:
+            raise ValueError(
+                f"compose: root space {self.nroots} != other's leaf space "
+                f"{other.nleaves}")
         # leaves unattached in self stay unattached: bcast fills them with -1
         # directly, so no per-rank masking pass is needed afterwards; the
         # flat buffers feed the plan compile without a re-concatenation
@@ -449,6 +479,7 @@ class StarForest:
             other.nroots, np.asarray(self.nleaves, dtype=_INT),
             new_rr, new_ri)
 
+    @hot_path
     def invert(self, allow_partial: bool = False) -> "StarForest":
         """Invert an injective SF (paper: (χ_{I_P}^{L_P})⁻¹).
 
@@ -483,6 +514,7 @@ class StarForest:
             inv_rr, inv_ri)
 
 
+@hot_path
 def partition_sizes(total: int, nranks: int) -> np.ndarray:
     """Near-equal contiguous partition sizes (differ by at most one) — the
     paper's partition formula (eq. 2.6): rank m owns [m*total//M, (m+1)*total//M)."""
@@ -491,11 +523,13 @@ def partition_sizes(total: int, nranks: int) -> np.ndarray:
     return np.diff(bounds)
 
 
+@hot_path
 def partition_starts(total: int, nranks: int) -> np.ndarray:
     m = np.arange(nranks + 1, dtype=_INT)
     return m * total // nranks
 
 
+@hot_path
 def partition_segments(total: int, nranks: int) -> tuple[list[int], list[int]]:
     """The canonical partition as ``(starts, counts)`` lists — the per-rank
     segment shape :meth:`DatasetStore.write_plan`/``read_plan`` consume."""
@@ -504,6 +538,7 @@ def partition_segments(total: int, nranks: int) -> tuple[list[int], list[int]]:
             [int(starts[r + 1] - starts[r]) for r in range(nranks)])
 
 
+@hot_path
 def partition_rank_of(global_idx: np.ndarray, total: int, nranks: int) -> np.ndarray:
     """Which rank owns each global index under the canonical partition."""
     starts = partition_starts(total, nranks)

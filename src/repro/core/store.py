@@ -51,6 +51,8 @@ from typing import Any
 
 import numpy as np
 
+from repro.analysis import hot_path
+
 
 def np_dtype(name) -> np.dtype:
     """np.dtype constructor that also resolves ml_dtypes names (bfloat16,
@@ -79,7 +81,8 @@ class DatasetStore:
     """A directory of named datasets + JSON attrs; one .bin file per dataset."""
 
     def __init__(self, root: str, mode: str = "r", buffer_rows: int | None = None):
-        assert mode in ("r", "w", "a")
+        if mode not in ("r", "w", "a"):
+            raise ValueError(f"store mode must be r/w/a, got {mode!r}")
         self.root = root
         self.mode = mode
         self.buffer_rows = buffer_rows
@@ -132,7 +135,8 @@ class DatasetStore:
         os.replace(tmp, self._meta_path())  # atomic commit
 
     def set_attrs(self, key: str, value: Any) -> None:
-        assert self.mode in ("w", "a")
+        if self.mode not in ("w", "a"):
+            raise ValueError(f"set_attrs({key!r}) on read-only store")
         self._meta["attrs"][key] = value
         self._flush_meta()
 
@@ -158,6 +162,7 @@ class DatasetStore:
     def _row_nbytes(self, info: dict) -> int:
         return int(np_dtype(info["dtype"]).itemsize * int(np.prod(info["row_shape"], initial=1)))
 
+    @hot_path
     def create(self, name: str, rows: int, row_shape: tuple[int, ...] = (),
                dtype="float64") -> None:
         """Create a dataset of ``rows`` rows; each row has shape ``row_shape``.
@@ -165,7 +170,8 @@ class DatasetStore:
         The file is pre-sized (sparse) so that concurrent disjoint row-range
         writes need no coordination — the parallel-filesystem contract.
         """
-        assert self.mode in ("w", "a")
+        if self.mode not in ("w", "a"):
+            raise ValueError(f"create({name!r}) on read-only store")
         info = {"rows": int(rows), "row_shape": [int(s) for s in row_shape],
                 "dtype": str(np_dtype(dtype))}
         self._meta["datasets"][name] = info
@@ -186,14 +192,19 @@ class DatasetStore:
         return tuple(self._info(name)["row_shape"])
 
     # --------------------------------------------------------------- writes
+    @hot_path
     def write_rows(self, name: str, start: int, data: np.ndarray) -> None:
         """Contiguous row-range write (the fast path)."""
         info = self._info(name)
         rb = self._row_nbytes(info)
         data = np.ascontiguousarray(data, dtype=np_dtype(info["dtype"]))
-        assert data.shape[1:] == tuple(info["row_shape"]), (
-            f"{name}: row shape {data.shape[1:]} != {info['row_shape']}")
-        assert 0 <= start and start + data.shape[0] <= info["rows"]
+        if data.shape[1:] != tuple(info["row_shape"]):
+            raise ValueError(
+                f"{name}: row shape {data.shape[1:]} != {info['row_shape']}")
+        if not (0 <= start and start + data.shape[0] <= info["rows"]):
+            raise ValueError(
+                f"{name}: write range [{start}, {start + data.shape[0]}) "
+                f"out of range for {info['rows']} rows")
         self._invalidate_reader(name)
         t0 = time.perf_counter()
         buf_rows = self.buffer_rows or data.shape[0] or 1
@@ -207,6 +218,7 @@ class DatasetStore:
         self.stats.write_seconds += time.perf_counter() - t0
         self.stats.bytes_written += data.nbytes
 
+    @hot_path
     def write_plan(self, name: str, starts, arrays) -> None:
         """Batched multi-segment write: every rank's contiguous segment of one
         dataset in a single open + one coalesced pass.
@@ -222,26 +234,30 @@ class DatasetStore:
         rb = self._row_nbytes(info)
         dt = np_dtype(info["dtype"])
         rows = int(info["rows"])
-        assert len(starts) == len(arrays), (
-            f"{name}: {len(starts)} starts for {len(arrays)} arrays")
+        if len(starts) != len(arrays):
+            raise ValueError(
+                f"{name}: {len(starts)} starts for {len(arrays)} arrays")
         segs = []
         for start, data in zip(starts, arrays):
             data = np.ascontiguousarray(data, dtype=dt)
             if data.shape[0] == 0:
                 continue
-            assert data.shape[1:] == tuple(info["row_shape"]), (
-                f"{name}: row shape {data.shape[1:]} != {info['row_shape']}")
+            if data.shape[1:] != tuple(info["row_shape"]):
+                raise ValueError(f"{name}: row shape {data.shape[1:]} != "
+                                 f"{info['row_shape']}")
             start = int(start)
-            assert 0 <= start and start + data.shape[0] <= rows, (
-                f"{name}: write segment [{start}, {start + data.shape[0]}) "
-                f"out of range for {rows} rows")
+            if not (0 <= start and start + data.shape[0] <= rows):
+                raise ValueError(
+                    f"{name}: write segment [{start}, "
+                    f"{start + data.shape[0]}) out of range for {rows} rows")
             segs.append((start, data))
         if not segs:
             return
         segs.sort(key=lambda s: s[0])
         for (a, d), (b, _) in zip(segs, segs[1:]):
-            assert a + d.shape[0] <= b, (
-                f"{name}: overlapping write segments at row {b}")
+            if a + d.shape[0] > b:
+                raise ValueError(
+                    f"{name}: overlapping write segments at row {b}")
         self._invalidate_reader(name)
         total = sum(d.nbytes for _, d in segs)
         t0 = time.perf_counter()
@@ -277,13 +293,18 @@ class DatasetStore:
         self.stats.write_seconds += time.perf_counter() - t0
         self.stats.bytes_written += total
 
+    @hot_path
     def write_rows_at(self, name: str, row_idx: np.ndarray, data: np.ndarray) -> None:
         """Scattered row writes (slow path: one seek+write per contiguous run)."""
         info = self._info(name)
         rb = self._row_nbytes(info)
         data = np.ascontiguousarray(data, dtype=np_dtype(info["dtype"]))
         row_idx = np.asarray(row_idx, dtype=np.int64)
-        assert row_idx.ndim == 1 and data.shape[0] == row_idx.shape[0]
+        if row_idx.ndim != 1 or data.shape[0] != row_idx.shape[0]:
+            raise ValueError(
+                f"{name}: scattered write needs 1-D row_idx matching data "
+                f"rows, got idx shape {row_idx.shape} for "
+                f"{data.shape[0]} rows")
         if row_idx.size == 0:
             return
         self._invalidate_reader(name)
@@ -303,12 +324,14 @@ class DatasetStore:
         self.stats.bytes_written += data.nbytes
 
     # ---------------------------------------------------------------- reads
+    @hot_path
     def read_rows(self, name: str, start: int, count: int) -> np.ndarray:
         info = self._info(name)
         rb = self._row_nbytes(info)
-        assert 0 <= start and 0 <= count and start + count <= info["rows"], (
-            f"{name}: read range [{start}, {start + count}) out of range "
-            f"for {info['rows']} rows")
+        if not (0 <= start and 0 <= count and start + count <= info["rows"]):
+            raise ValueError(
+                f"{name}: read range [{start}, {start + count}) out of "
+                f"range for {info['rows']} rows")
         t0 = time.perf_counter()
         f = self._reader(name)
         f.seek(start * rb)
@@ -319,6 +342,7 @@ class DatasetStore:
         arr = np.frombuffer(raw, dtype=np_dtype(info["dtype"]))
         return arr.reshape((count, *info["row_shape"])).copy()
 
+    @hot_path
     def read_plan(self, name: str, starts, counts) -> list[np.ndarray]:
         """Batched multi-segment contiguous read: every rank's ``(start,
         count)`` segment of one dataset in a single (cached) open + one
@@ -331,11 +355,14 @@ class DatasetStore:
         rows = int(info["rows"])
         starts = [int(s) for s in starts]
         counts = [int(c) for c in counts]
-        assert len(starts) == len(counts)
+        if len(starts) != len(counts):
+            raise ValueError(
+                f"{name}: {len(starts)} starts for {len(counts)} counts")
         for s, c in zip(starts, counts):
-            assert 0 <= s and 0 <= c and s + c <= rows, (
-                f"{name}: read segment [{s}, {s + c}) out of range "
-                f"for {rows} rows")
+            if not (0 <= s and 0 <= c and s + c <= rows):
+                raise ValueError(
+                    f"{name}: read segment [{s}, {s + c}) out of range "
+                    f"for {rows} rows")
         order = sorted((i for i in range(len(starts)) if counts[i]),
                        key=lambda i: starts[i])
         out: list[np.ndarray] = [
@@ -363,6 +390,7 @@ class DatasetStore:
         self.stats.read_seconds += time.perf_counter() - t0
         return out
 
+    @hot_path
     def read_rows_at(self, name: str, row_idx: np.ndarray) -> np.ndarray:
         """Scattered row reads, coalesced into maximal contiguous runs."""
         info = self._info(name)
@@ -371,9 +399,10 @@ class DatasetStore:
                        dtype=np_dtype(info["dtype"]))
         if row_idx.size == 0:
             return out
-        assert int(row_idx.min()) >= 0 and int(row_idx.max()) < info["rows"], (
-            f"{name}: scattered read row index out of range "
-            f"[0, {info['rows']})")
+        if int(row_idx.min()) < 0 or int(row_idx.max()) >= info["rows"]:
+            raise ValueError(
+                f"{name}: scattered read row index out of range "
+                f"[0, {info['rows']})")
         order = np.argsort(row_idx, kind="stable")
         sorted_idx = row_idx[order]
         breaks = np.flatnonzero(np.diff(sorted_idx) != 1) + 1

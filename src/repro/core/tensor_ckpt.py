@@ -30,6 +30,7 @@ from typing import Sequence
 
 import numpy as np
 
+from repro.analysis import hot_path
 from repro.core.chunk_layout import (
     ArraySpec, Box, StateLayout, plan_regions,
 )
@@ -61,6 +62,7 @@ class ArrayShard:
 PerRankState = list[dict[str, ArrayShard]]   # [rank][array name]
 
 
+@hot_path
 def balanced_chunk_partition(layout: StateLayout, nranks: int
                              ) -> list[dict[str, np.ndarray]]:
     """Contiguous, element-balanced assignment of all chunks (global entity
@@ -106,6 +108,7 @@ def balanced_chunk_partition(layout: StateLayout, nranks: int
     return out
 
 
+@hot_path
 def shards_from_arrays(layout: StateLayout, arrays: dict[str, np.ndarray],
                        ownership: list[dict[str, np.ndarray]]) -> PerRankState:
     """Cut monolithic arrays into per-rank ArrayShards (test/sim helper)."""
@@ -151,6 +154,7 @@ class TensorCheckpoint:
         return sorted(int(s) for s in self.store.get_attrs("meta")["steps"])
 
     # ----------------------------------------------------------------- save
+    @hot_path
     def save_state(self, per_rank: PerRankState, comm: Comm, step: int) -> None:
         layout = self.layout()
         meta = self.store.get_attrs("meta")
@@ -166,6 +170,7 @@ class TensorCheckpoint:
             name: meta["epochs"][name]["current"] for name in layout.names}
         self.store.set_attrs("meta", meta)
 
+    @hot_path
     def _save_array(self, spec: ArraySpec, per_rank: PerRankState, comm: Comm,
                     step: int, meta: dict) -> None:
         st, name = self.store, spec.name
@@ -201,6 +206,7 @@ class TensorCheckpoint:
         st.write_plan(vec, d_base, split_segments(vec_flat, sec["d_cnt"]))
         st.write_plan(crc, e_base, split_segments(crc_flat, sec["e_cnt"]))
 
+    @hot_path
     def _write_section(self, spec: ArraySpec, per_rank: PerRankState,
                        comm: Comm, epoch: int, meta: dict) -> None:
         st, N, name = self.store, comm.nranks, spec.name
@@ -240,6 +246,7 @@ class TensorCheckpoint:
         }
 
     # ----------------------------------------------------------------- load
+    @hot_path
     def load_state(self, plan: list[dict[str, list[Box]]], comm: Comm,
                    step: int) -> list[dict[str, list[np.ndarray]]]:
         """``plan[rank][array] = [target Box, ...]`` -> same structure of
@@ -264,6 +271,7 @@ class TensorCheckpoint:
                     slot[spec.name] = v
         return out
 
+    @hot_path
     def _load_array(self, spec: ArraySpec, regions: list[list[Box]],
                     comm: Comm, epoch: int, step: int, meta: dict
                     ) -> list[list[np.ndarray]]:
@@ -337,6 +345,7 @@ class TensorCheckpoint:
         return rp.scatter_to_boxes(vec_flat, np_dtype(spec.dtype))
 
     # ------------------------------------------------------------- integrity
+    @hot_path
     def verify_step(self, comm: Comm, step: int) -> bool:
         """Distributed integrity scan: each rank re-reads the entities in its
         canonical L_P chunk and checks the stored per-chunk crc32.  One
@@ -349,20 +358,18 @@ class TensorCheckpoint:
         ok = True
         for spec in layout.arrays:
             epoch = int(step_epochs[spec.name])
-            key = f"{spec.name}/e{epoch}"
             Eo = meta[f"section/{spec.name}/e{epoch}"]["Eo"]
             ea, en = partition_segments(Eo, M)
-            dof = np.concatenate(
-                self.store.read_plan(f"{key}/DOF", ea, en)).astype(_INT)
-            off = np.concatenate(
-                self.store.read_plan(f"{key}/OFF", ea, en)).astype(_INT)
-            crc = np.concatenate(
-                self.store.read_plan(f"{key}/s{step}/crc", ea, en)
-                ).astype(_INT)
+            dof = np.concatenate(self.store.read_plan(
+                f"{spec.name}/e{epoch}/DOF", ea, en)).astype(_INT)
+            off = np.concatenate(self.store.read_plan(
+                f"{spec.name}/e{epoch}/OFF", ea, en)).astype(_INT)
+            crc = np.concatenate(self.store.read_plan(
+                f"{spec.name}/e{epoch}/s{step}/crc", ea, en)).astype(_INT)
             # one coalesced plan over all chunk ranges: peak memory is
             # ~2x the dataset (run buffer + per-chunk copies) — the same
             # envelope as the load path, traded for R-independent read_calls
-            vals = self.store.read_plan(f"{key}/s{step}/vec",
+            vals = self.store.read_plan(f"{spec.name}/e{epoch}/s{step}/vec",
                                         off.tolist(), dof.tolist())
             got = np.fromiter(
                 (zlib.crc32(np.ascontiguousarray(v).tobytes())

@@ -70,6 +70,7 @@ from typing import Sequence
 
 import numpy as np
 
+from repro.analysis import hot_path
 from repro.core.comm import (
     Comm, edge_pack, ragged_arange, rank_radix, split_segments,
 )
@@ -98,6 +99,7 @@ _INT = np.int64
 
 
 # ===================================================================== utils
+@hot_path
 def _route_rows(comm: Comm, total: int, ids: list[np.ndarray],
                 payloads: list[dict[str, np.ndarray]]
                 ) -> tuple[list[np.ndarray], list[dict[str, np.ndarray]]]:
@@ -124,8 +126,8 @@ def _route_rows(comm: Comm, total: int, ids: list[np.ndarray],
     recv_ids, offs = comm.neighbor_alltoallv(es, ed, ecnt, g_flat[order],
                                              return_flat=True)
     dcnt = np.diff(offs)
-    drep = np.repeat(np.arange(R, dtype=_INT), dcnt)
-    rorder = np.argsort(drep * radix + recv_ids, kind="stable")
+    dst_rep = np.repeat(np.arange(R, dtype=_INT), dcnt)
+    rorder = np.argsort(dst_rep * radix + recv_ids, kind="stable")
     out_ids = split_segments(recv_ids[rorder], dcnt)
     out_views = {}
     for k in keys:
@@ -137,6 +139,7 @@ def _route_rows(comm: Comm, total: int, ids: list[np.ndarray],
     return out_ids, [{k: out_views[k][d] for k in keys} for d in range(R)]
 
 
+@hot_path
 def chi_to_LP(loc_g_list: list[np.ndarray], total: int) -> StarForest:
     """χ_{X}^{L_P}: SF from any local numbering carrying LocG arrays to the
     canonical partition of the global numbers (2.7 / 2.12)."""
@@ -251,6 +254,7 @@ class TopoForest:
     def counts(self) -> np.ndarray:
         return np.diff(self.bases)
 
+    @hot_path
     def positions_of(self, ranks: np.ndarray, globals_: np.ndarray
                      ) -> np.ndarray:
         """Concatenated positions of (rank, global id) pairs — one
@@ -261,9 +265,11 @@ class TopoForest:
                + np.asarray(globals_, dtype=_INT))
         pos = np.minimum(np.searchsorted(self._key, key),
                          max(self.n - 1, 0))
-        assert key.size == 0 or (self.n > 0
-                                 and (self._key[pos] == key).all()), \
-            "TopoForest.positions_of: (rank, id) not in the forest"
+        if key.size and (self.n == 0 or not (self._key[pos] == key).all()):
+            miss = (key if self.n == 0 else key[self._key[pos] != key])
+            raise ValueError(
+                f"TopoForest.positions_of: (rank {int(miss[0] // (self.E + 1))}"
+                f", id {int(miss[0] % (self.E + 1))}) not in the forest")
         return pos
 
     def positions_of_lists(self, per_rank: Sequence[np.ndarray]
@@ -312,6 +318,7 @@ class FEMCheckpoint:
         self.store = store
 
     # ------------------------------------------------------------- save mesh
+    @hot_path
     def save_mesh(self, name: str, plexes: list[LocalPlex], comm: Comm,
                   labels: dict[str, list[np.ndarray]] | None = None) -> None:
         st, N = self.store, comm.nranks
@@ -411,6 +418,7 @@ class FEMCheckpoint:
         el = sp.element
         return f"{mesh}/section/{el.family}{el.degree}_{el.cell}_bs{sp.bs}"
 
+    @hot_path
     def save_function(self, mesh: str, fname: str, funcs: list[Function],
                       comm: Comm, time_index: int | None = None) -> None:
         """DMPlexSectionView (first call per space) + DMPlexGlobalVectorView."""
@@ -457,6 +465,7 @@ class FEMCheckpoint:
         st.set_attrs(f"{mesh}/func/{fname}/meta", {"section": key})
 
     # ------------------------------------------------------------- load mesh
+    @hot_path
     def _fetch_entities(self, name: str, ids: np.ndarray
                         ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
         """Random-access read of (dims, cone sizes, flat cones) for arbitrary
@@ -476,6 +485,7 @@ class FEMCheckpoint:
         flat = st.read_rows_at(f"{name}/topology/cones", rows).astype(_INT)
         return dims.astype(_INT), sizes, flat
 
+    @hot_path
     def _close_forest(self, name: str, seed_lists: Sequence[np.ndarray],
                       E: int) -> TopoForest:
         """Transitively fetch cones until closed, for ALL ranks at once,
@@ -550,6 +560,7 @@ class FEMCheckpoint:
         E = int(self.store.get_attrs(f"{name}/meta")["E"])
         return self._close_forest(name, seed_lists, E).fragments()
 
+    @hot_path
     def _build_locals(self, forest: TopoForest, dim: int, gdim: int,
                       owner_cat: np.ndarray | None = None
                       ) -> list[LocalPlex]:
@@ -588,6 +599,7 @@ class FEMCheckpoint:
                           owner_v[m].astype(_INT, copy=False), m, vc_v[m])
                 for m in range(M)]
 
+    @hot_path
     def load_mesh(self, name: str, comm: Comm, *, partition: str = "contiguous",
                   seed: int = 0, overlap: int = 1,
                   exact_distribution: bool = False) -> LoadedMesh:
@@ -714,6 +726,7 @@ class FEMCheckpoint:
         return mesh
 
     # --------------------------------------------------------- load function
+    @hot_path
     def load_function(self, mesh: LoadedMesh, fname: str, comm: Comm,
                       time_index: int | None = None
                       ) -> tuple[list[FunctionSpace], list[Function]]:
@@ -742,8 +755,12 @@ class FEMCheckpoint:
         DOF_T = chi_IT_IP.bcast(locDOF_P)
         OFFg_T = chi_IT_IP.bcast(locOFF_P)
         for sp, dof in zip(spaces, DOF_T):
-            assert np.array_equal(dof, sp.loc_dof), (
-                "section/element mismatch between saved and loaded space")
+            if not np.array_equal(dof, sp.loc_dof):
+                raise ValueError(
+                    f"section/element mismatch between saved and loaded "
+                    f"space for '{fname}': saved per-entity DoF counts "
+                    f"disagree with {sp.element.family}{sp.element.degree} "
+                    f"bs={sp.bs}")
 
         # ---- (2.22–2.23): lift to DoF level — one ragged_arange per rank ---
         dof_globals = [ragged_arange(offg, sp.loc_dof)
@@ -760,6 +777,7 @@ class FEMCheckpoint:
 
 
 # ============================================================ loader helpers
+@hot_path
 def random_partition_dests(cell_globals: np.ndarray, nranks: int,
                            seed: int) -> np.ndarray:
     """Pseudo-random repartition destinations for the adversarial load path:
@@ -777,6 +795,7 @@ def random_partition_dests(cell_globals: np.ndarray, nranks: int,
     return (h % np.uint64(nranks)).astype(_INT)
 
 
+@hot_path
 def _resolve_owners(comm: Comm, E: int, loc_g_flat: np.ndarray,
                     loc_sizes: np.ndarray, owned_cells: list[np.ndarray],
                     forest: TopoForest) -> list[np.ndarray]:
@@ -805,6 +824,7 @@ def _resolve_owners(comm: Comm, E: int, loc_g_flat: np.ndarray,
     return out
 
 
+@hot_path
 def _grow_overlap(comm: Comm, E: int, owned_cells: list[np.ndarray],
                   forest: TopoForest, layers: int) -> list[np.ndarray]:
     """Single-layer vertex-adjacency overlap growth (DMPlexDistributeOverlap;
@@ -813,7 +833,10 @@ def _grow_overlap(comm: Comm, E: int, owned_cells: list[np.ndarray],
     each compiled to its sparse edge list straight from flat rank-tagged
     arrays.  The (vertex, cell) incidence publish for EVERY rank is one
     position-tagged CSR closure over the forest; nothing iterates ranks."""
-    assert layers == 1, "the loader grows one overlap layer, as in the paper"
+    if layers != 1:
+        raise ValueError(
+            f"the loader grows one overlap layer, as in the paper; "
+            f"got layers={layers}")
     M = comm.nranks
     radix = _INT(E + 1)
     # ---- publish (vertex -> cell) incidences of owned cells, all ranks ----
@@ -838,8 +861,8 @@ def _grow_overlap(comm: Comm, E: int, owned_cells: list[np.ndarray],
     # the only packed-safe axis.
     dir_rep = np.repeat(np.arange(M, dtype=_INT), np.diff(rv_offs))
     trip = np.unique(np.stack([dir_rep, rv, rc], axis=1), axis=0)
-    dir_d, dir_v, dir_c = trip[:, 0], trip[:, 1], trip[:, 2]
-    dir_key = dir_d * radix + dir_v    # non-decreasing (trip is lexsorted)
+    dir_rank, dir_v, dir_c = trip[:, 0], trip[:, 1], trip[:, 2]
+    dir_key = dir_rank * radix + dir_v  # non-decreasing (trip is lexsorted)
     # ---- query: my vertices -> all incident cells anywhere ---------------
     qk = np.unique(pub_src * radix + pub_v)
     q_src, q_v = qk // radix, qk % radix
@@ -851,11 +874,11 @@ def _grow_overlap(comm: Comm, E: int, owned_cells: list[np.ndarray],
     # ---- answer: per querying rank, the sorted-unique incident cells -----
     qe_order = np.lexsort((qek // M, qek % M))     # receive side: (dst, src)
     src_of_q = np.repeat((qek // M)[qe_order], qecnt[qe_order])
-    rq_d = np.repeat(np.arange(M, dtype=_INT), np.diff(rq_offs))
-    lo = np.searchsorted(dir_key, rq_d * radix + rq, side="left")
-    hi = np.searchsorted(dir_key, rq_d * radix + rq, side="right")
+    rq_rank = np.repeat(np.arange(M, dtype=_INT), np.diff(rq_offs))
+    lo = np.searchsorted(dir_key, rq_rank * radix + rq, side="left")
+    hi = np.searchsorted(dir_key, rq_rank * radix + rq, side="right")
     cells = dir_c[ragged_arange(lo, hi - lo)]
-    atrip = np.unique(np.stack([np.repeat(rq_d, hi - lo),
+    atrip = np.unique(np.stack([np.repeat(rq_rank, hi - lo),
                                 np.repeat(src_of_q, hi - lo),
                                 cells], axis=1), axis=0)
     akey = atrip[:, 0] * _INT(M) + atrip[:, 1]

@@ -35,6 +35,7 @@ from typing import Sequence
 
 import numpy as np
 
+from repro.analysis import hot_path
 from repro.core.comm import Comm, ragged_arange, rank_radix, split_segments
 from repro.core.star_forest import StarForest, partition_rank_of, partition_starts
 
@@ -96,6 +97,7 @@ def in_sorted(values: np.ndarray, table: np.ndarray) -> np.ndarray:
     return table[pos] == values
 
 
+@hot_path
 def csr_closure(offsets: np.ndarray, indices: np.ndarray,
                 seeds: np.ndarray) -> np.ndarray:
     """Transitive cone closure over a CSR graph (includes seeds), returned as
@@ -112,6 +114,7 @@ def csr_closure(offsets: np.ndarray, indices: np.ndarray,
     return seen
 
 
+@hot_path
 def csr_closure_pairs(offsets: np.ndarray, indices: np.ndarray,
                       tags: np.ndarray, seeds: np.ndarray
                       ) -> tuple[np.ndarray, np.ndarray]:
@@ -138,6 +141,7 @@ def csr_closure_pairs(offsets: np.ndarray, indices: np.ndarray,
     return seen[:, 0], seen[:, 1]
 
 
+@hot_path
 def csr_closure_pairs_packed(offsets: np.ndarray, indices: np.ndarray,
                              seeds: np.ndarray, tags: np.ndarray | None = None
                              ) -> tuple[np.ndarray, np.ndarray]:
@@ -174,7 +178,9 @@ def csr_closure_pairs_packed(offsets: np.ndarray, indices: np.ndarray,
                 f"max tag {tmax}, n={n}")
     if seeds.size == 0:
         return np.empty(0, _INT), np.empty(0, _INT)
-    seen = np.unique(tags * nn + seeds)
+    # id-scale product is safe: both factors are bounded by the overflow
+    # guards above (positions < n, or radix-checked rank tags)
+    seen = np.unique(tags * nn + seeds)  # ckptlint: disable=CKPT004
     frontier = seen
     while frontier.size:
         t, p = frontier // nn, frontier % nn
@@ -437,6 +443,7 @@ class LocalPlex:
     def cell_ids_local(self) -> np.ndarray:
         return np.flatnonzero(self.dims == self.dim).astype(_INT)
 
+    @hot_path
     def global_to_local(self, g: np.ndarray) -> np.ndarray:
         """Vectorised global→local id resolution (every ``g`` must be
         present).  O(n log n) searchsorted through the sorted LocG copy."""
@@ -446,9 +453,13 @@ class LocalPlex:
         g = np.asarray(g, dtype=_INT)
         pos = np.minimum(np.searchsorted(self._g_sorted, g),
                          max(len(self._g_sorted) - 1, 0))
-        assert g.size == 0 or (len(self._g_sorted) > 0
-                               and (self._g_sorted[pos] == g).all()), \
-            "global_to_local: id not present on this rank"
+        if g.size and (len(self._g_sorted) == 0
+                       or not (self._g_sorted[pos] == g).all()):
+            miss = (g if len(self._g_sorted) == 0
+                    else g[self._g_sorted[pos] != g])
+            raise ValueError(
+                f"global_to_local: global id {int(miss[0])} not present "
+                f"on rank {self.rank}")
         return self._g_perm[pos]
 
     def closure_local(self, seeds) -> np.ndarray:
@@ -507,6 +518,7 @@ def cell_partition(ncells: int, nranks: int, method: str = "contiguous",
     raise ValueError(method)
 
 
+@hot_path
 def entity_owners(plex: Plex, cell_owner: np.ndarray) -> np.ndarray:
     """Ownership rule: an entity is owned by the minimum rank among owners of
     cells whose closure contains it (one owner per entity; others see ghosts).
@@ -541,6 +553,7 @@ def add_overlap(plex: Plex, visible_cells, layers: int) -> np.ndarray:
     return vis
 
 
+@hot_path
 def _rank_radix(nranks: int, E: int) -> np.int64:
     """Packing radix for (rank, global id) scalar keys — the shared guard
     lives in :func:`repro.core.comm.rank_radix`; ``rank * (E + 1) + id``
@@ -549,6 +562,7 @@ def _rank_radix(nranks: int, E: int) -> np.int64:
     return rank_radix(nranks, E + 1)
 
 
+@hot_path
 def overlap_all_ranks(plex: Plex, vis_rank: np.ndarray, vis_cell: np.ndarray,
                       nranks: int, layers: int
                       ) -> tuple[np.ndarray, np.ndarray]:
@@ -571,15 +585,16 @@ def overlap_all_ranks(plex: Plex, vis_rank: np.ndarray, vis_cell: np.ndarray,
         cnt = cv_off[c + 1] - cv_off[c]
         vk = np.unique(np.repeat(r, cnt) * radix
                        + cv_idx[ragged_arange(cv_off[c], cnt)])
-        rv, vv = vk // radix, vk % radix
+        v_rank, v_ids = vk // radix, vk % radix
         # every cell incident to those vertices joins the rank's set
-        cnt2 = vc_off[vv + 1] - vc_off[vv]
-        ck = np.unique(np.repeat(rv, cnt2) * radix
-                       + vc_idx[ragged_arange(vc_off[vv], cnt2)])
+        cnt2 = vc_off[v_ids + 1] - vc_off[v_ids]
+        ck = np.unique(np.repeat(v_rank, cnt2) * radix
+                       + vc_idx[ragged_arange(vc_off[v_ids], cnt2)])
         key = np.union1d(key, ck)
     return key // radix, key % radix
 
 
+@hot_path
 def build_local_plexes(plex: Plex, vis_rank: np.ndarray, vis_cell: np.ndarray,
                        entity_owner: np.ndarray, nranks: int
                        ) -> list[LocalPlex]:
@@ -594,21 +609,21 @@ def build_local_plexes(plex: Plex, vis_rank: np.ndarray, vis_cell: np.ndarray,
     disjoint views of the flat buffers (``split_segments``, never
     ``np.split``)."""
     gdim = plex.coords.shape[1]
-    tags, ids = csr_closure_pairs_packed(
+    rank_tags, ids = csr_closure_pairs_packed(
         plex.cone_offsets, plex.cone_indices,
         np.asarray(vis_cell, dtype=_INT),
         tags=np.asarray(vis_rank, dtype=_INT))
     radix = _rank_radix(nranks, plex.num_entities)
     n = len(ids)
-    counts = np.bincount(tags, minlength=nranks).astype(_INT)
+    counts = np.bincount(rank_tags, minlength=nranks).astype(_INT)
     bases = csr_offsets(counts)
     dims_all = plex.dims[ids]
     # deterministic local numbering, all ranks in one lexsort
-    perm = np.lexsort((ids, -dims_all, tags))
+    perm = np.lexsort((ids, -dims_all, rank_tags))
     inv = np.empty(n, dtype=_INT)
     inv[perm] = np.arange(n, dtype=_INT)
     ids_p = ids[perm]
-    rank_p = tags[perm]                    # == tags (perm is rank-major)
+    rank_p = rank_tags[perm]               # == rank_tags (perm is rank-major)
     dims_p = dims_all[perm]
     # cones of every entity in local order, localised via the sorted
     # (rank, id) key table of the closure output
@@ -616,7 +631,7 @@ def build_local_plexes(plex: Plex, vis_rank: np.ndarray, vis_cell: np.ndarray,
             ).astype(_INT)
     flat_glob = plex.cone_indices[ragged_arange(plex.cone_offsets[ids_p],
                                                 sz_p)]
-    key_table = tags * radix + ids         # ascending (closure is sorted)
+    key_table = rank_tags * radix + ids    # ascending (closure is sorted)
     pos_sorted = np.searchsorted(key_table,
                                  np.repeat(rank_p, sz_p) * radix + flat_glob)
     nnz_r = np.bincount(rank_p, weights=sz_p, minlength=nranks).astype(_INT)
@@ -638,6 +653,7 @@ def build_local_plexes(plex: Plex, vis_rank: np.ndarray, vis_cell: np.ndarray,
                       owner_v[r], r, vc_v[r]) for r in range(nranks)]
 
 
+@hot_path
 def distribute(plex: Plex, nranks: int, *, method: str = "contiguous",
                seed: int = 0, overlap: int = 1,
                cell_owner: np.ndarray | None = None
@@ -670,6 +686,7 @@ def distribute(plex: Plex, nranks: int, *, method: str = "contiguous",
     return locals_, sf, cell_owner
 
 
+@hot_path
 def point_sf(locals_: list[LocalPlex]) -> StarForest:
     """Build the pointSF: leaf (r, i) -> (owner rank, owner-local index).
 

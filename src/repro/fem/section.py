@@ -16,6 +16,7 @@ import dataclasses
 
 import numpy as np
 
+from repro.analysis import hot_path
 from repro.fem.element import Element
 from repro.fem.plex import LocalPlex
 
@@ -32,9 +33,12 @@ class FunctionSpace:
     loc_off: np.ndarray = dataclasses.field(init=False)   # [El]
     ndof_local: int = dataclasses.field(init=False)
 
+    @hot_path
     def __post_init__(self):
-        assert self.element.dim == self.plex.dim, (
-            f"element cell dim {self.element.dim} != mesh dim {self.plex.dim}")
+        if self.element.dim != self.plex.dim:
+            raise ValueError(
+                f"element cell dim {self.element.dim} != mesh dim "
+                f"{self.plex.dim}")
         # nodes-per-entity depends only on entity dimension: one small table
         # lookup instead of a per-entity Python call
         table = np.array([self.element.nodes_per_entity_dim(d)

@@ -1,0 +1,320 @@
+"""Gate + unit tests for the ``ckptlint`` static analyser.
+
+Two surfaces:
+
+  1. **the tier-1 gate**: the committed tree must lint clean over ``src``
+     and ``benchmarks`` (with the committed baseline), and a violation
+     seeded into a hot engine file must fail — proving the gate is live,
+     not vacuously green;
+  2. **per-rule mechanics**: every rule CKPT001–CKPT006 has a violating
+     snippet and a compliant twin, plus the suppression / baseline /
+     hot-path-selection machinery (decorator, registry, nesting).
+
+Snippets are only *parsed* (``lint_source`` is pure AST analysis), so they
+may reference undefined names freely.
+"""
+
+import pathlib
+import textwrap
+
+from repro.analysis.ckptlint import (
+    _DEFAULT_BASELINE,
+    lint_paths,
+    lint_source,
+    load_baseline,
+    main,
+)
+
+_REPO = pathlib.Path(__file__).resolve().parents[1]
+_CORE = "src/repro/core/fake.py"          # virtual path inside the gated tree
+
+
+def _lint(body: str, path: str = _CORE, **kw):
+    return lint_source(textwrap.dedent(body), path, **kw)
+
+
+def _rules(findings):
+    return [f.rule for f in findings]
+
+
+# ===================================================== the tree gate (tier 1)
+def test_committed_tree_lints_clean():
+    findings = lint_paths(["src", "benchmarks"], root=_REPO,
+                          baseline=load_baseline(_DEFAULT_BASELINE))
+    assert findings == [], "\n".join(str(f) for f in findings)
+
+
+def test_cli_exit_status_on_clean_tree(capsys):
+    assert main(["src", "benchmarks", "--root", str(_REPO)]) == 0
+    assert "clean" in capsys.readouterr().err
+
+
+def test_seeded_violation_in_hot_engine_file_fails():
+    """A per-rank loop or bare assert slipped into fem/checkpoint.py must
+    produce findings — the gate cannot be green by accident."""
+    src = (_REPO / "src/repro/fem/checkpoint.py").read_text()
+    seeded = src + textwrap.dedent("""
+
+        @hot_path
+        def _seeded(per_rank, R):
+            for r in range(R):
+                per_rank[r]
+            assert R > 0
+    """)
+    rules = set(_rules(lint_source(seeded, "src/repro/fem/checkpoint.py")))
+    assert "CKPT001" in rules and "CKPT003" in rules
+
+
+# ============================================= CKPT001: no per-rank for/while
+def test_ckpt001_flags_range_over_rank_count():
+    bad = """
+        @hot_path
+        def f(per_rank, R):
+            out = []
+            for r in range(R):
+                out.append(per_rank[r])
+            return out
+    """
+    assert _rules(_lint(bad)) == ["CKPT001"]
+
+
+def test_ckpt001_flags_enumerate_per_rank_and_while():
+    bad = """
+        @hot_path
+        def f(per_rank, nranks):
+            for r, st in enumerate(per_rank):
+                use(st)
+            i = 0
+            while i < nranks:
+                i += 1
+    """
+    assert _rules(_lint(bad)) == ["CKPT001", "CKPT001"]
+
+
+def test_ckpt001_comprehensions_are_the_sanctioned_idiom():
+    ok = """
+        @hot_path
+        def f(per_rank, R):
+            return [per_rank[r] for r in range(R)]
+    """
+    assert _lint(ok) == []
+
+
+def test_ckpt001_ignores_non_rank_loops_and_cold_functions():
+    ok = """
+        @hot_path
+        def f(layers, frontier):
+            for _ in range(layers):        # BFS depth, not rank space
+                frontier = grow(frontier)
+
+        def cold(per_rank, R):
+            for r in range(R):             # not a hot path
+                use(per_rank[r])
+    """
+    assert _lint(ok) == []
+
+
+# ======================================================= CKPT002: no np.split
+def test_ckpt002_flags_np_split_and_passes_split_segments():
+    bad = """
+        @hot_path
+        def f(buf, counts):
+            return np.split(buf, np.cumsum(counts)[:-1])
+    """
+    ok = """
+        @hot_path
+        def f(buf, counts):
+            return split_segments(buf, counts)
+    """
+    assert _rules(_lint(bad)) == ["CKPT002"]
+    assert _lint(ok) == []
+
+
+# ================================== CKPT003: no assert in core/fem hot paths
+def test_ckpt003_flags_assert_and_passes_valueerror():
+    bad = """
+        @hot_path
+        def f(counts):
+            assert counts.sum() > 0
+    """
+    ok = """
+        @hot_path
+        def f(counts):
+            if counts.sum() <= 0:
+                raise ValueError(f"empty plan: counts sum {counts.sum()}")
+    """
+    assert _rules(_lint(bad)) == ["CKPT003"]
+    assert _lint(ok) == []
+
+
+def test_ckpt003_only_gates_core_and_fem_trees():
+    bench = """
+        @hot_path
+        def f(rows):
+            assert rows, "bench self-check"
+    """
+    assert _lint(bench, path="benchmarks/fake_bench.py") == []
+    assert _rules(_lint(bench, path="src/repro/fem/fake.py")) == ["CKPT003"]
+
+
+# ============================== CKPT004: id*id products need an explicit cast
+def test_ckpt004_flags_id_by_id_product():
+    bad = """
+        @hot_path
+        def f(ids, E):
+            return ids * E + ids
+    """
+    assert _rules(_lint(bad)) == ["CKPT004"]
+
+
+def test_ckpt004_passes_rank_radix_packing_and_uint64_cast():
+    ok = """
+        @hot_path
+        def f(rank, ids, E, nranks):
+            radix = rank_radix(nranks, E + 1)
+            key = rank * radix + ids          # bounded factor: fine
+            g = ids.astype(np.uint64)
+            h = g * g + np.uint64(7)          # explicit uint64: fine
+            return key, h
+    """
+    assert _lint(ok) == []
+
+
+def test_ckpt004_dataflow_follows_assignments():
+    bad = """
+        @hot_path
+        def f(ids):
+            k = np.asarray(ids)               # still id-scale through asarray
+            return k * k
+    """
+    assert _rules(_lint(bad)) == ["CKPT004"]
+
+
+# ================================= CKPT005: dense alltoallv needs a shim slot
+def test_ckpt005_flags_dense_alltoallv_file_wide():
+    bad = """
+        def cold(comm, lists):
+            return comm.alltoallv(lists)      # not even hot: still banned
+    """
+    assert _rules(_lint(bad)) == ["CKPT005"]
+
+
+def test_ckpt005_allowlist_and_packed_variant_pass():
+    src = """
+        def shim(comm, lists):
+            return comm.alltoallv(lists)
+    """
+    ok = """
+        @hot_path
+        def f(comm, es, ed, ecnt, flat):
+            return comm.alltoallv_packed(es, ed, ecnt, flat)
+    """
+    shims = frozenset({(_CORE, "shim")})
+    assert _lint(src, shims=shims) == []
+    assert _lint(ok) == []
+
+
+# ===================== CKPT006: no store data ops inside loops (same dataset)
+def test_ckpt006_flags_fixed_dataset_op_in_loop():
+    bad = """
+        @hot_path
+        def f(st, starts, rows):
+            for a, b in zip(starts, rows):
+                st.write_rows("ds", a, b)
+    """
+    assert _rules(_lint(bad)) == ["CKPT006"]
+
+
+def test_ckpt006_loop_over_datasets_is_allowed():
+    ok = """
+        @hot_path
+        def f(st, names, starts, rows):
+            for name in names:
+                st.write_plan(name, starts, rows)
+    """
+    assert _lint(ok) == []
+
+
+def test_ckpt006_store_op_as_loop_iterable_is_one_call():
+    ok = """
+        @hot_path
+        def f(st, ea, en):
+            return [a.astype(np.int64) for a in st.read_plan("key/G", ea, en)]
+    """
+    assert _lint(ok) == []
+
+
+def test_ckpt006_flags_op_under_while():
+    bad = """
+        @hot_path
+        def f(st, frontier):
+            while frontier.size:
+                frontier = st.read_rows("ds", 0, 4)
+    """
+    assert _rules(_lint(bad)) == ["CKPT006"]
+
+
+# ================================================ hot-path selection mechanics
+def test_registry_marks_functions_hot_by_path_suffix():
+    bad = """
+        def f(per_rank, R):
+            for r in range(R):
+                use(per_rank[r])
+    """
+    reg = {"fake_bench.py": ("f",)}
+    assert _lint(bad, path="benchmarks/fake_bench.py") == []
+    assert _rules(_lint(bad, path="benchmarks/fake_bench.py",
+                        registry=reg)) == ["CKPT001"]
+    star = {"fake_bench.py": ("*",)}
+    assert _rules(_lint(bad, path="benchmarks/fake_bench.py",
+                        registry=star)) == ["CKPT001"]
+
+
+def test_nested_functions_inherit_hotness_without_double_report():
+    bad = """
+        @hot_path
+        def outer(per_rank, R):
+            @hot_path
+            def inner():
+                for r in range(R):
+                    use(per_rank[r])
+            return inner
+    """
+    findings = _lint(bad)
+    assert _rules(findings) == ["CKPT001"]
+    assert findings[0].qualname == "outer"     # reported at the hot root
+
+
+def test_attribute_decorator_spelling_is_detected():
+    bad = """
+        @markers.hot_path
+        def f(per_rank, R):
+            for r in range(R):
+                use(per_rank[r])
+    """
+    assert _rules(_lint(bad)) == ["CKPT001"]
+
+
+# =========================================== suppressions and baseline filter
+def test_line_suppression_silences_exactly_its_rule():
+    src = """
+        @hot_path
+        def f(ids, E):
+            a = ids * E + ids  # ckptlint: disable=CKPT004
+            b = ids * E + ids  # ckptlint: disable=CKPT001
+            return a + b
+    """
+    findings = _lint(src)
+    assert _rules(findings) == ["CKPT004"]     # wrong-rule pragma is inert
+    assert findings[0].line == 5
+
+
+def test_baseline_filters_by_line_free_key():
+    bad = """
+        @hot_path
+        def f(counts):
+            assert counts.sum() > 0
+    """
+    [finding] = _lint(bad)
+    assert finding.key == f"{_CORE}::CKPT003::f"
+    assert _lint(bad, baseline=frozenset({finding.key})) == []

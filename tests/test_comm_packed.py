@@ -162,7 +162,7 @@ def test_packed_multidim_rows():
 
 def test_neighbor_rejects_unsorted_edges():
     comm = Comm(3)
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError):
         comm.neighbor_alltoallv(np.array([1, 0]), np.array([0, 1]),
                                 np.array([1, 1]),
                                 [np.zeros(1), np.zeros(1), np.zeros(0)])

@@ -60,9 +60,9 @@ def test_write_plan_counts_runs_and_respects_buffer_rows(tmp_path):
 def test_write_plan_rejects_overlap_and_out_of_range(tmp_path):
     st = DatasetStore(str(tmp_path), "w")
     st.create("named/ds", 10, dtype="int64")
-    with pytest.raises(AssertionError, match="named/ds"):
+    with pytest.raises(ValueError, match="named/ds"):
         st.write_plan("named/ds", [0, 3], [np.arange(5), np.arange(2)])
-    with pytest.raises(AssertionError, match="named/ds"):
+    with pytest.raises(ValueError, match="named/ds"):
         st.write_plan("named/ds", [8], [np.arange(5)])
 
 
@@ -112,12 +112,12 @@ def test_read_rows_out_of_range_fails_loudly(tmp_path):
     st = DatasetStore(str(tmp_path), "w")
     st.create("grp/vec", 10, dtype="float64")
     st.write_rows("grp/vec", 0, np.zeros(10))
-    with pytest.raises(AssertionError, match="grp/vec"):
+    with pytest.raises(ValueError, match="grp/vec"):
         st.read_rows("grp/vec", 8, 5)
-    with pytest.raises(AssertionError, match="grp/vec"):
+    with pytest.raises(ValueError, match="grp/vec"):
         st.read_rows("grp/vec", -1, 2)
     bytes_before = st.stats.bytes_read
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError):
         st.read_rows("grp/vec", 0, 11)
     assert st.stats.bytes_read == bytes_before   # failed read not accounted
 
@@ -126,9 +126,9 @@ def test_read_rows_at_out_of_range_fails_loudly(tmp_path):
     st = DatasetStore(str(tmp_path), "w")
     st.create("grp/dims", 10, dtype="int64")
     st.write_rows("grp/dims", 0, np.arange(10))
-    with pytest.raises(AssertionError, match="grp/dims"):
+    with pytest.raises(ValueError, match="grp/dims"):
         st.read_rows_at("grp/dims", np.array([3, 10]))
-    with pytest.raises(AssertionError, match="grp/dims"):
+    with pytest.raises(ValueError, match="grp/dims"):
         st.read_rows_at("grp/dims", np.array([-2, 4]))
 
 
@@ -136,7 +136,7 @@ def test_read_plan_out_of_range_fails_loudly(tmp_path):
     st = DatasetStore(str(tmp_path), "w")
     st.create("grp/off", 10, dtype="int64")
     st.write_rows("grp/off", 0, np.arange(10))
-    with pytest.raises(AssertionError, match="grp/off"):
+    with pytest.raises(ValueError, match="grp/off"):
         st.read_plan("grp/off", [0, 6], [4, 5])
 
 

@@ -1,0 +1,81 @@
+"""IOStats rank-independence gate (satellite of the ckptlint PR).
+
+The batched I/O convention — ONE ``write_plan``/``read_plan`` per dataset
+per phase — implies the store *call counts* of a full FE round-trip are a
+property of the pipeline's phase structure, not of the rank count.  ckptlint
+(CKPT006) enforces the shape of the code; this test pins the observable
+consequence: saving the same mesh+function from R = 4, 16 and 64 ranks and
+reloading on a fixed M must produce EXACTLY the same write_calls and
+read_calls at every R.
+
+The constants are part of the engine's contract: a new dataset or phase
+changes them legitimately (update them together with ROADMAP's I/O-plan
+notes); a per-rank loop creeping into a hot path changes them with R, which
+is the regression this gate exists to catch.  The load side is pinned at
+M = 5 because read_calls depend on M (the closure BFS depth and directory
+layout), not on the saved rank count.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.comm import Comm
+from repro.core.store import DatasetStore
+from repro.fem import (
+    Element,
+    FEMCheckpoint,
+    FunctionSpace,
+    distribute,
+    interpolate,
+    tri_mesh,
+)
+
+# one mesh save (topology + labels-free meta + coordinates) + one P2
+# function save; one 3-step load_mesh + one load_function on M = 5
+EXPECTED_WRITE_CALLS = 13
+EXPECTED_READ_CALLS = 32
+M_LOAD = 5
+
+
+def _field(pts):
+    return np.sin(3 * pts[:, 0]) * (2 + np.cos(5 * pts[:, 1]))
+
+
+def _roundtrip_counts(tmp, R):
+    mesh = tri_mesh(10, 10)
+    plexes, _, _ = distribute(mesh, R)
+    comm = Comm(R)
+    store = DatasetStore(str(tmp), "w")
+    ck = FEMCheckpoint(store)
+    ck.save_mesh("m", plexes, comm)
+    spaces = [FunctionSpace(lp, Element("P", 2, "triangle"))
+              for lp in plexes]
+    ck.save_function("m", "f",
+                     [interpolate(sp, _field) for sp in spaces], comm)
+    writes = store.stats.write_calls
+    reads0 = store.stats.read_calls
+
+    comm_l = Comm(M_LOAD)
+    loaded = ck.load_mesh("m", comm_l, partition="random", seed=1)
+    lspaces, lfuncs = ck.load_function(loaded, "f", comm_l)
+    reads = store.stats.read_calls - reads0
+
+    # the round-trip must actually round-trip, or flat counts prove nothing
+    from repro.fem import node_points
+    for sp, f in zip(lspaces, lfuncs):
+        np.testing.assert_allclose(f.values, _field(node_points(sp)))
+    store.close()
+    return writes, reads
+
+
+@pytest.mark.parametrize("R", (4, 16, 64))
+def test_fe_roundtrip_store_calls_are_rank_independent(tmp_path, R):
+    writes, reads = _roundtrip_counts(tmp_path, R)
+    assert writes == EXPECTED_WRITE_CALLS, (
+        f"write_calls {writes} at R={R}: expected {EXPECTED_WRITE_CALLS} — "
+        f"a per-rank store loop has crept into a save phase (or a phase/"
+        f"dataset was added; update the constant deliberately)")
+    assert reads == EXPECTED_READ_CALLS, (
+        f"read_calls {reads} at R={R} (M={M_LOAD}): expected "
+        f"{EXPECTED_READ_CALLS} — a per-rank store loop has crept into a "
+        f"load phase (or a phase/dataset was added; update deliberately)")

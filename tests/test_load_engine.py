@@ -319,3 +319,65 @@ def test_flat_load_engine_1024_ranks(tmp_path):
         f"flat load engine R={R} took {dt:.2f}s, >20x the recorded "
         f"{baseline['load_seconds']}s baseline")
     store.close()
+
+
+# ------------------------------------- packed-key safety near the int64 edge
+def test_edge_pack_keys_safe_near_int64_limit():
+    """``edge_pack`` packs (src, dst) as ``src * R + dst``.  At R = 2**31
+    the keys reach ~2**62 — two bits shy of the int64 limit — and the edge
+    list must come back exact with overflow trapping on (a silent wrap
+    would scramble every send in the exchange)."""
+    from repro.core.comm import edge_pack
+    R = 1 << 31
+    src = np.array([0, 5, R - 1, R - 1], dtype=_INT)
+    dst = np.array([R - 1, 7, 0, R - 1], dtype=_INT)
+    with np.errstate(over="raise"):
+        order, es, ed, ecnt = edge_pack(src, dst, R)
+    np.testing.assert_array_equal(src[order], es.repeat(ecnt))
+    np.testing.assert_array_equal(dst[order], ed.repeat(ecnt))
+    np.testing.assert_array_equal(ecnt, np.ones(4, _INT))
+
+
+def test_rank_radix_overflow_guard_raises_loudly():
+    """The shared (rank, id) packing guard must refuse combinations whose
+    product would wrap int64 — and still hand back the radix in the safe
+    regime (the PR-5 ``rank * (E + 1) + id`` contract)."""
+    from repro.core.comm import rank_radix
+    with pytest.raises(ValueError, match=r"R=8192"):
+        rank_radix(8192, 1 << 62)
+    assert int(rank_radix(8192, 1 << 40)) == 1 << 40
+
+
+def test_forest_and_plex_packing_guards_at_paper_scale():
+    """Both (rank, id) packing sites — the loader's ``TopoForest`` and the
+    save side's ``_rank_radix`` — refuse E near 2**62 at R = 8192 instead
+    of wrapping."""
+    from repro.fem import plex as plexmod
+    from repro.fem.checkpoint import TopoForest
+    E = 1 << 62
+    with pytest.raises(ValueError, match="overflows int64"):
+        TopoForest(E, np.zeros(8193, _INT), np.empty(0, _INT),
+                   np.empty(0, _INT), np.zeros(1, _INT),
+                   np.empty(0, _INT), np.empty(0, _INT))
+    with pytest.raises(ValueError, match="overflows int64"):
+        plexmod._rank_radix(8192, E)
+
+
+def test_forest_positions_of_keys_near_two_to_62():
+    """Just inside the guard (M = 2, ids near 2**61) the packed lookup must
+    resolve exactly and still fail loudly on an absent (rank, id) pair —
+    the regime where a wrapped key would silently alias."""
+    from repro.fem.checkpoint import TopoForest
+    E = 1 << 61
+    big = E - 1
+    forest = TopoForest(E, np.array([0, 1, 2], dtype=_INT),
+                        np.array([big, big], dtype=_INT),
+                        np.zeros(2, _INT), np.zeros(3, _INT),
+                        np.empty(0, _INT), np.array([0, 1], dtype=_INT))
+    with np.errstate(over="raise"):
+        pos = forest.positions_of(np.array([1], dtype=_INT),
+                                  np.array([big], dtype=_INT))
+    np.testing.assert_array_equal(pos, [1])
+    with pytest.raises(ValueError, match="not in the forest"):
+        forest.positions_of(np.array([0], dtype=_INT),
+                            np.array([big - 1], dtype=_INT))

@@ -1,0 +1,118 @@
+"""``python -O`` smoke test (satellite of the ckptlint PR).
+
+CKPT003 bans ``assert`` on hot paths because ``-O`` strips it.  This test
+proves the engine actually *works* with asserts stripped: a subprocess runs
+``python -O`` through one FE N-to-M round-trip and one tensor N-to-M
+round-trip, then drives the known bad-input paths and checks each still
+raises ``ValueError`` — i.e. validation survives optimisation.
+
+The subprocess script deliberately avoids ``assert`` for its own checks
+(they would vanish under ``-O`` too); failures exit non-zero with a FAIL
+line that pytest surfaces.
+"""
+
+import os
+import pathlib
+import subprocess
+import sys
+
+_REPO = pathlib.Path(__file__).resolve().parents[1]
+
+_SCRIPT = r"""
+import sys
+
+import numpy as np
+
+from repro.core.chunk_layout import ArraySpec, StateLayout
+from repro.core.comm import Comm, rank_radix
+from repro.core.store import DatasetStore
+from repro.core.tensor_ckpt import (
+    TensorCheckpoint, balanced_chunk_partition, shards_from_arrays,
+)
+from repro.distrib.sharding import canonical_regions
+from repro.fem import (
+    Element, FEMCheckpoint, FunctionSpace, distribute, interpolate, tri_mesh,
+)
+
+tmp = sys.argv[1]
+
+
+def check(cond, label):
+    if not cond:
+        raise SystemExit("FAIL: " + label)
+
+
+def raises(fn, label):
+    try:
+        fn()
+    except ValueError:
+        return
+    raise SystemExit("FAIL: no ValueError from " + label)
+
+
+check(not __debug__, "script must run under python -O")
+
+# ---- tensor N=3 -> M=2 round-trip ----------------------------------------
+layout = StateLayout((ArraySpec("w", (20, 12), "float64", (8, 5)),))
+arrays = {"w": np.random.default_rng(0).normal(size=(20, 12))}
+per_rank = shards_from_arrays(layout, arrays,
+                              balanced_chunk_partition(layout, 3))
+store = DatasetStore(tmp + "/tensor", "w")
+ck = TensorCheckpoint(store)
+ck.save_layout(layout)
+ck.save_state(per_rank, Comm(3), step=0)
+plan = [{"w": canonical_regions((20, 12), 2)[m]} for m in range(2)]
+out = ck.load_state(plan, Comm(2), step=0)
+got = np.concatenate([np.concatenate([b.reshape(-1) for b in slot["w"]])
+                      for slot in out])
+check(np.array_equal(got, arrays["w"].reshape(-1)),
+      "tensor round-trip bitwise equality")
+check(ck.verify_step(Comm(2), 0), "tensor crc verify")
+
+# ---- FE N=3 -> M=2 round-trip --------------------------------------------
+plexes, _, _ = distribute(tri_mesh(5, 5), 3)
+comm = Comm(3)
+fstore = DatasetStore(tmp + "/fem", "w")
+fck = FEMCheckpoint(fstore)
+fck.save_mesh("m", plexes, comm)
+
+
+def field(pts):
+    return np.sin(3 * pts[:, 0]) + pts[:, 1] ** 2
+
+
+spaces = [FunctionSpace(lp, Element("P", 2, "triangle")) for lp in plexes]
+fck.save_function("m", "f", [interpolate(sp, field) for sp in spaces], comm)
+comm2 = Comm(2)
+loaded = fck.load_mesh("m", comm2, partition="random", seed=1)
+sp2, f2 = fck.load_function(loaded, "f", comm2)
+check(len(f2) == 2, "loaded on 2 ranks")
+for sp, f in zip(sp2, f2):
+    ref = interpolate(sp, field)
+    check(np.allclose(ref.values, f.values), "FE round-trip values")
+
+# ---- bad-input paths must still raise with asserts stripped --------------
+raises(lambda: DatasetStore(tmp + "/x", "z"), "bad store mode")
+raises(lambda: store.read_rows("w/e0/s0/vec", 0, 10**9),
+       "out-of-range read_rows")
+raises(lambda: Comm(0), "Comm(0)")
+raises(lambda: rank_radix(8192, 1 << 62), "rank_radix overflow guard")
+raises(lambda: fck.load_mesh("m", Comm(2), exact_distribution=True),
+       "exact_distribution with M != N")
+raises(lambda: FunctionSpace(plexes[0], Element("P", 1, "interval")),
+       "element/mesh dimension mismatch")
+
+print("OK")
+"""
+
+
+def test_roundtrips_and_validation_survive_dash_O(tmp_path):
+    script = tmp_path / "smoke_O.py"
+    script.write_text(_SCRIPT)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(_REPO / "src")
+    proc = subprocess.run(
+        [sys.executable, "-O", str(script), str(tmp_path)],
+        capture_output=True, text=True, timeout=300, env=env)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert proc.stdout.strip().endswith("OK"), proc.stdout + proc.stderr

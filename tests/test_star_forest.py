@@ -148,7 +148,7 @@ def test_compose_matches_pointwise(total, a, b, c, seed):
 def test_compose_space_mismatch_raises():
     sf1 = StarForest.from_partition(10, nranks_root=2, nranks_leaf=2)
     sf2 = StarForest.from_partition(11, nranks_root=2, nranks_leaf=2)
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError):
         sf1.compose(sf2)
 
 
