@@ -59,6 +59,12 @@ def main(argv=None):
     tensor_rank_rows = bc.rank_scaling_roundtrip(
         ranks=rank_sweep, elems_per_rank=max(scale >> 5, 1 << 10))
     _print_table("Rank scaling: save/load round-trip", tensor_rank_rows)
+    # async overlap: how much of the save wall-time hides behind compute
+    async_rows = bc.async_overlap(
+        ranks=(2, 4, 8) if args.quick else (2, 4, 8, 16),
+        elems_per_rank=max(scale >> 2, 1 << 14))
+    _print_table("Beyond-paper: async save overlapped with compute",
+                 async_rows)
     print("\n== §2.2.7: time-series appends (section saved once) ==")
     print(json.dumps(bc.timeseries_append(elems_per_rank=scale // 2),
                      indent=1))
@@ -87,6 +93,7 @@ def main(argv=None):
         "quick": bool(args.quick),
         "fem_rank_sweep": fem_rank_rows,
         "tensor_rank_scaling": tensor_rank_rows,
+        "async_overlap": async_rows,
     }
     out_path = _REPO_ROOT / ("BENCH_loadscale_quick.json" if args.quick
                              else "BENCH_loadscale.json")

@@ -1,11 +1,15 @@
-"""Elastic restart: train on one mesh, restart on a DIFFERENT mesh.
+"""Elastic restart: train on one mesh, crash mid-checkpoint, restart on a
+DIFFERENT mesh.
 
-The N-to-M headline applied to live training state: a run sharded over
-mesh (4, 2) ("data", "model") checkpoints; a second run re-loads the
-same checkpoint onto mesh (2, 4) — different device count per axis,
-different parameter partitions — and continues training seamlessly.
-The loader never sees the save-time sharding; the checkpoint's global
-numbering makes the re-partition automatic.
+The N-to-M headline applied to live training state, now with the failure
+actually injected: a run sharded over mesh (4, 2) ("data", "model")
+checkpoints steps 10 and 20; a second run on the same mesh dies
+mid-checkpoint of step 30 (a fault-injected store kills the async writer
+after a handful of write ops — before the commit marker lands); a third
+run re-loads onto mesh (2, 4) — different device count per axis, different
+parameter partitions — and restarts from the last COMMITTED step (20): the
+torn step-30 write is invisible, exactly the recovery contract documented
+in ``core/async_io.py``.
 
 Run:  PYTHONPATH=src python examples/elastic_restart.py
 (relaunches itself with XLA_FLAGS for 8 simulated host devices)
@@ -20,7 +24,8 @@ import sys
 CKPT = "/tmp/ex_elastic_ckpt"
 
 
-def phase(mesh_shape, steps, expect_start):
+def phase(mesh_shape, steps, expect_start, store_factory=None,
+          expect_crash=False):
     import jax
 
     from repro.configs import get_smoke_config
@@ -43,7 +48,8 @@ def phase(mesh_shape, steps, expect_start):
                               total=100)
     step = make_train_step(api, opt, sched, mesh, rules, shape)
     data = SyntheticLM(cfg.vocab, 32, 8, seed=0)
-    tcfg = TrainerConfig(ckpt_dir=CKPT, ckpt_every=10, log_every=10)
+    tcfg = TrainerConfig(ckpt_dir=CKPT, ckpt_every=10, log_every=10,
+                         store_factory=store_factory)
     tr = Trainer(step, data, tcfg,
                  init_state_fn=lambda: init_train_state(
                      api, opt, jax.random.key(0)))
@@ -52,6 +58,14 @@ def phase(mesh_shape, steps, expect_start):
     print(f"mesh {mesh_shape}: restored step {start}; param sharding "
           f"example: "
           f"{step.state_shardings['params/wq'].spec}")
+    if expect_crash:
+        try:
+            tr.run(steps, start_state=state, start_step=start)
+        except RuntimeError as e:
+            print(f"mesh {mesh_shape}: died mid-checkpoint as injected "
+                  f"({e.__cause__ or e})")
+            return
+        raise SystemExit("FAIL: the injected crash never fired")
     res = tr.run(steps, start_state=state, start_step=start)
     print(f"mesh {mesh_shape}: ran to step {steps}; "
           f"last loss {tr.history[-1]['loss']:.4f}")
@@ -64,16 +78,27 @@ def main():
         env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         env["_ELASTIC_CHILD"] = "1"
         repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-        env["PYTHONPATH"] = os.path.join(repo, "src")
+        # tests dir on the path for helpers.faultstore (the fault injector)
+        env["PYTHONPATH"] = os.pathsep.join(
+            [os.path.join(repo, "src"), os.path.join(repo, "tests")])
         r = subprocess.run([sys.executable, os.path.abspath(__file__)],
                            env=env)
         sys.exit(r.returncode)
 
+    from helpers.faultstore import FaultStore
+
     print("== phase 1: mesh (4, 2) — N side ==")
     phase((4, 2), steps=20, expect_start=0)
-    print("== phase 2: mesh (2, 4) — M side (elastic restart) ==")
+    print("== phase 2: crash mid-checkpoint of step 30 (fault injection) ==")
+    # the async writer dies after 4 write ops of the step-30 save — well
+    # before its commit marker — leaving step 20 the last committed step
+    phase((4, 2), steps=30, expect_start=20,
+          store_factory=lambda root, mode: FaultStore(
+              root, mode, kill_after_ops=4),
+          expect_crash=True)
+    print("== phase 3: mesh (2, 4) — M side (elastic restart) ==")
     phase((2, 4), steps=40, expect_start=20)
-    print("elastic N-to-M restart OK")
+    print("elastic N-to-M restart after an injected crash OK")
 
 
 if __name__ == "__main__":

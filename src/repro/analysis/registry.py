@@ -31,6 +31,7 @@ HOT_PATH_REGISTRY: dict[str, tuple[str, ...]] = {
         "timeseries_append",
         "weak_scaling_save",
         "weak_scaling_load",
+        "async_overlap",
     ),
     "benchmarks/bench_fem.py": ("*",),
 }

@@ -332,15 +332,21 @@ class DatasetStore:
             raise ValueError(
                 f"{name}: read range [{start}, {start + count}) out of "
                 f"range for {info['rows']} rows")
+        # readinto a preallocated buffer: one pass instead of the old
+        # read -> frombuffer -> copy (two passes over 268 MiB reads)
+        out = np.empty((count, *info["row_shape"]), dtype=np_dtype(info["dtype"]))
         t0 = time.perf_counter()
         f = self._reader(name)
         f.seek(start * rb)
-        raw = f.read(count * rb)
+        got = f.readinto(out.reshape(-1).view(np.uint8))
         self.stats.read_seconds += time.perf_counter() - t0
         self.stats.read_calls += 1
-        self.stats.bytes_read += len(raw)
-        arr = np.frombuffer(raw, dtype=np_dtype(info["dtype"]))
-        return arr.reshape((count, *info["row_shape"])).copy()
+        self.stats.bytes_read += int(got)
+        if got != count * rb:
+            raise ValueError(
+                f"{name}: short read at row {start}: got {got} of "
+                f"{count * rb} bytes")
+        return out
 
     @hot_path
     def read_plan(self, name: str, starts, counts) -> list[np.ndarray]:

@@ -153,6 +153,24 @@ class TensorCheckpoint:
     def steps(self) -> list[int]:
         return sorted(int(s) for s in self.store.get_attrs("meta")["steps"])
 
+    def latest_step(self) -> int | None:
+        """Restart point: the last committed step, or None for a fresh
+        store (a torn in-flight step is never visible — see the recovery
+        contract in ``core/async_io.py``)."""
+        committed = self.steps()
+        return committed[-1] if committed else None
+
+    def _committed_epochs(self, meta: dict, step: int) -> dict:
+        """The per-array epoch map of a *committed* step; a torn or unknown
+        step raises ``ValueError`` (never a bare KeyError) so recovery code
+        can distinguish 'not committed' from store corruption."""
+        if str(step) not in meta["steps"]:
+            raise ValueError(
+                f"step {step} is not committed (committed steps: "
+                f"{sorted(int(s) for s in meta['steps'])}) — a crash "
+                f"mid-write leaves no visible trace of the torn step")
+        return meta["steps"][str(step)]
+
     # ----------------------------------------------------------------- save
     @hot_path
     def save_state(self, per_rank: PerRankState, comm: Comm, step: int) -> None:
@@ -253,7 +271,7 @@ class TensorCheckpoint:
         filled numpy arrays.  Regions may cut across saved chunks freely."""
         layout = self.layout()
         meta = self.store.get_attrs("meta")
-        step_epochs = meta["steps"][str(step)]
+        step_epochs = self._committed_epochs(meta, step)
         M = comm.nranks
         if len(plan) != M:
             raise ValueError(
@@ -353,7 +371,7 @@ class TensorCheckpoint:
         ranges), so store call counts stay independent of the rank count."""
         layout = self.layout()
         meta = self.store.get_attrs("meta")
-        step_epochs = meta["steps"][str(step)]
+        step_epochs = self._committed_epochs(meta, step)
         M = comm.nranks
         ok = True
         for spec in layout.arrays:

@@ -317,6 +317,31 @@ class FEMCheckpoint:
     def __init__(self, store: DatasetStore):
         self.store = store
 
+    # --------------------------------------------------- commit-log recovery
+    def _commit_log(self) -> list[dict] | None:
+        """The async commit log, or None for a purely-synchronous store
+        (legacy semantics: every dataset present is assumed complete)."""
+        from repro.core.async_io import COMMIT_LOG_KEY
+        if self.store.has_attrs(COMMIT_LOG_KEY):
+            return self.store.get_attrs(COMMIT_LOG_KEY)
+        return None
+
+    def steps(self, mesh: str, fname: str) -> list[int]:
+        """Committed time indices of ``fname`` on ``mesh``.  With an async
+        commit log only committed saves are listed — a save torn by a crash
+        is never visible; legacy sync stores report every time-indexed vec
+        dataset present."""
+        log = self._commit_log()
+        if log is not None:
+            return sorted({int(e["step"]) for e in log
+                           if e.get("kind") == "func"
+                           and e.get("mesh") == mesh
+                           and e.get("fname") == fname
+                           and e.get("step") is not None})
+        prefix = f"{mesh}/func/{fname}/vec_t"
+        return sorted(int(d[len(prefix):]) for d in self.store.datasets()
+                      if d.startswith(prefix) and d[len(prefix):].isdigit())
+
     # ------------------------------------------------------------- save mesh
     @hot_path
     def save_mesh(self, name: str, plexes: list[LocalPlex], comm: Comm,
@@ -604,6 +629,14 @@ class FEMCheckpoint:
                   seed: int = 0, overlap: int = 1,
                   exact_distribution: bool = False) -> LoadedMesh:
         st, M = self.store, comm.nranks
+        log = self._commit_log()
+        if log is not None and not any(
+                e.get("kind") == "mesh" and e.get("mesh") == name
+                for e in log):
+            raise ValueError(
+                f"load_mesh: mesh '{name}' has no entry in the async commit "
+                f"log — its save was interrupted before the commit marker; "
+                f"the torn datasets are not loadable")
         meta = st.get_attrs(f"{name}/meta")
         E, dim, gdim = meta["E"], meta["dim"], meta["gdim"]
         starts = partition_starts(E, M)
@@ -731,6 +764,18 @@ class FEMCheckpoint:
                       time_index: int | None = None
                       ) -> tuple[list[FunctionSpace], list[Function]]:
         st, M = self.store, comm.nranks
+        # coordinates ride on the mesh's own commit entry (load_mesh checks)
+        log = self._commit_log()
+        if log is not None and fname != "__coordinates":
+            committed = [e.get("step") for e in log
+                         if e.get("kind") == "func"
+                         and e.get("mesh") == mesh.name
+                         and e.get("fname") == fname]
+            if time_index not in committed:
+                raise ValueError(
+                    f"load_function: '{fname}' time_index {time_index} is "
+                    f"not committed (committed: {sorted(s for s in committed if s is not None)}) "
+                    f"— a crash mid-write leaves the torn save invisible")
         fmeta = st.get_attrs(f"{mesh.name}/func/{fname}/meta")
         key = fmeta["section"]
         smeta = st.get_attrs(f"{key}/meta")

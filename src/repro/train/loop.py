@@ -47,6 +47,9 @@ class TrainerConfig:
     ckpt_every: int = 20
     async_ckpt: bool = True
     log_every: int = 10
+    # store constructor (root, mode) -> DatasetStore; lets harnesses swap in
+    # an instrumented store (e.g. tests/helpers/faultstore.FaultStore)
+    store_factory: Callable[[str, str], DatasetStore] | None = None
 
 
 class Trainer:
@@ -63,8 +66,8 @@ class Trainer:
 
     # ------------------------------------------------------------ ckpt io
     def _open_ckpt(self, mode: str) -> TensorCheckpoint:
-        store = DatasetStore(self.cfg.ckpt_dir, mode)
-        return TensorCheckpoint(store)
+        make = self.cfg.store_factory or DatasetStore
+        return TensorCheckpoint(make(self.cfg.ckpt_dir, mode))
 
     def restore_latest(self) -> tuple[dict, int]:
         """(state on the CURRENT mesh/sharding, start_step).  Fresh init

@@ -1,0 +1,105 @@
+"""Fault injection for crash-consistency tests.
+
+``FaultStore`` wraps :class:`repro.core.store.DatasetStore` and kills the
+process-under-test after the k-th mutating store operation: the first
+``kill_after_ops`` ops complete normally, the next one dies *before* (or,
+with ``tear=True`` on data writes, midway through) touching disk, and every
+op after that dies immediately — the process is gone.
+
+Crash faithfulness: every completed op is flushed (data writes hit the
+dataset file; attr writes are an atomic ``os.replace`` of ``store.json``),
+so discarding all in-memory state and reopening the directory with a fresh
+``DatasetStore(root, "r")`` observes exactly what a new process would after
+a real kill at that point.  ``kill_mode="exit"`` calls ``os._exit`` instead
+of raising, for subprocess tests that want a *real* process death.
+
+``SimulatedCrash`` derives from ``BaseException`` so no engine
+``except Exception`` path can accidentally swallow the "process died"
+event; only the test harness catches it.
+"""
+
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from repro.core.store import DatasetStore
+
+
+class SimulatedCrash(BaseException):
+    """The simulated process death (never catch this outside a test)."""
+
+
+class FaultStore(DatasetStore):
+    mutating_ops = ("create", "write_rows", "write_plan", "write_rows_at",
+                    "set_attrs")
+
+    def __init__(self, root: str, mode: str = "w", *,
+                 kill_after_ops: int | None = None, tear: bool = False,
+                 kill_mode: str = "raise", **kw):
+        super().__init__(root, mode, **kw)
+        if kill_mode not in ("raise", "exit"):
+            raise ValueError(f"kill_mode must be raise/exit, got {kill_mode!r}")
+        self.kill_after_ops = kill_after_ops
+        self.tear = tear
+        self.kill_mode = kill_mode
+        self.ops_seen = 0          # mutating ops that completed
+        self._dead = False
+
+    # ------------------------------------------------------------- internals
+    def _fatal(self) -> bool:
+        """True iff the *current* op is the one that kills the process."""
+        if self._dead:
+            self._die()
+        if (self.kill_after_ops is not None
+                and self.ops_seen >= self.kill_after_ops):
+            self._dead = True
+            return True
+        self.ops_seen += 1
+        return False
+
+    def _die(self):
+        if self.kill_mode == "exit":
+            os._exit(17)
+        raise SimulatedCrash(
+            f"simulated process death at mutating store op "
+            f"{self.ops_seen}")
+
+    # ----------------------------------------------------------- wrapped ops
+    def create(self, name, rows, row_shape=(), dtype="float64"):
+        if self._fatal():
+            self._die()
+        super().create(name, rows, row_shape, dtype)
+
+    def set_attrs(self, key, value):
+        if self._fatal():
+            self._die()
+        super().set_attrs(key, value)
+
+    def write_rows(self, name, start, data):
+        if self._fatal():
+            if self.tear:
+                data = np.asarray(data)
+                super().write_rows(name, start, data[:len(data) // 2])
+            self._die()
+        super().write_rows(name, start, data)
+
+    def write_plan(self, name, starts, arrays):
+        if self._fatal():
+            if self.tear:
+                starts = [int(s) for s in starts]
+                torn = [np.asarray(a)[:max(0, len(a) // 2)] for a in arrays]
+                super().write_plan(name, starts, torn)
+            self._die()
+        super().write_plan(name, starts, arrays)
+
+    def write_rows_at(self, name, row_idx, data):
+        if self._fatal():
+            if self.tear:
+                row_idx = np.asarray(row_idx)
+                data = np.asarray(data)
+                half = len(row_idx) // 2
+                super().write_rows_at(name, row_idx[:half], data[:half])
+            self._die()
+        super().write_rows_at(name, row_idx, data)

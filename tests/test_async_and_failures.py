@@ -147,3 +147,524 @@ def test_corruption_detected_by_crc(tmp_path):
     raw[100:108] = b"\xde\xad\xbe\xef\xde\xad\xbe\xef"
     p.write_bytes(bytes(raw))
     assert not ck.verify_step(comm, 0), "crc must detect bitrot"
+
+
+# ===========================================================================
+# PR 7: bounded staging arena, flat snapshots, FE coverage, and the
+# fault-injection crash-point grid (every write op × save-on-N × load-on-M).
+# ===========================================================================
+
+import json
+import pathlib
+import time
+
+import pytest
+from helpers.faultstore import FaultStore, SimulatedCrash
+from helpers.hypothesis_shim import given, settings, strategies as st
+
+from repro.core.async_io import (
+    COMMIT_LOG_KEY, StagingArena, _snapshot, _state_nbytes, pack_flat,
+)
+from repro.core.store import np_dtype
+from repro.fem import (
+    Element, FEMCheckpoint, FunctionSpace, distribute, interpolate,
+    node_points, tri_mesh,
+)
+
+DATA = pathlib.Path(__file__).parent / "data"
+
+
+class _SlowStore(DatasetStore):
+    """Writes slowed enough that submitted jobs stay in flight."""
+
+    def write_plan(self, name, starts, arrays):
+        time.sleep(0.01)
+        super().write_plan(name, starts, arrays)
+
+
+# ------------------------------------------------------------ staging arena
+def test_arena_slots_and_budget_accounting():
+    ar = StagingArena(budget_bytes=100)
+    s0 = ar.acquire(60)
+    assert ar.buffer(s0).size == 60
+    s1 = ar.acquire(40)
+    ar.release(s0)
+    ar.release(s1)
+    # slabs are reused, grown never shrunk
+    s2 = ar.acquire(10)
+    assert ar.buffer(s2).size == 10
+    ar.release(s2)
+    assert ar.stats.peak_live_bytes == 100
+    assert ar.stats.acquires == 3
+
+
+def test_arena_rejects_snapshot_larger_than_budget():
+    ar = StagingArena(budget_bytes=64)
+    with pytest.raises(ValueError, match="exceeds the staging budget"):
+        ar.acquire(65)
+
+
+def test_submit_rejects_state_larger_than_budget(tmp_path):
+    store = DatasetStore(str(tmp_path), "w")
+    ck = TensorCheckpoint(store)
+    ck.save_layout(LAYOUT)
+    ac = AsyncCheckpointer(ck, Comm(2), staging_budget_bytes=64)
+    with pytest.raises(ValueError, match="staging budget"):
+        ac.submit(_shards(_state(0), 2), step=0)
+
+
+def test_backpressure_third_snapshot_blocks_until_writer_drains(tmp_path):
+    """At most two snapshots alive: the third submit must block (slot
+    back-pressure), and every step still round-trips bit-exact."""
+    store = _SlowStore(str(tmp_path), "w")
+    ck = TensorCheckpoint(store)
+    ck.save_layout(LAYOUT)
+    ac = AsyncCheckpointer(ck, Comm(2))
+    states = {s: _state(s) for s in (0, 1, 2)}
+    for s in (0, 1, 2):
+        ac.submit(_shards(states[s], 2), step=s)
+    ac.wait()
+    assert ac.arena.stats.backpressure_hits >= 1
+    assert ac.arena.stats.blocked_seconds > 0.0
+    assert ck.steps() == [0, 1, 2]
+    for s in (0, 1, 2):
+        _check(ck, s, states[s], M=3)
+
+
+def test_backpressure_byte_budget_single_snapshot_at_a_time(tmp_path):
+    """A budget fitting exactly one snapshot degrades to fully-synchronous
+    double submission — correctness unchanged, back-pressure recorded."""
+    need = _state_nbytes(_shards(_state(0), 2))
+    store = _SlowStore(str(tmp_path), "w")
+    ck = TensorCheckpoint(store)
+    ck.save_layout(LAYOUT)
+    ac = AsyncCheckpointer(ck, Comm(2), staging_budget_bytes=need)
+    states = {s: _state(s) for s in (0, 1)}
+    for s in (0, 1):
+        ac.submit(_shards(states[s], 2), step=s)
+    ac.wait()
+    assert ac.arena.stats.backpressure_hits >= 1
+    for s in (0, 1):
+        _check(ck, s, states[s], M=2)
+
+
+# ------------------------------------------------------ flat snapshot (sat 1)
+def test_pack_flat_mixed_dtypes_roundtrip():
+    rng = np.random.default_rng(5)
+    blocks = [rng.normal(size=(3, 4)),
+              np.arange(7, dtype=np.int32),
+              rng.normal(size=5).astype(np_dtype("bfloat16")),
+              np.empty((0, 2), dtype=np.float32)]
+    buf, views = pack_flat(blocks)
+    assert buf.dtype == np.uint8
+    assert buf.size == sum(b.nbytes for b in blocks)
+    for b, v in zip(blocks, views):
+        assert v.dtype == b.dtype and v.shape == b.shape
+        np.testing.assert_array_equal(np.asarray(v, np.float64),
+                                      np.asarray(b, np.float64))
+        assert v.size == 0 or np.shares_memory(v, buf)
+    with pytest.raises(ValueError, match="staging buffer"):
+        pack_flat(blocks, np.empty(3, np.uint8))
+
+
+def test_snapshot_views_live_in_one_flat_buffer():
+    per_rank = _shards(_state(3), 3)
+    buf = np.empty(_state_nbytes(per_rank), dtype=np.uint8)
+    snap = _snapshot(per_rank, buf)
+    assert [sorted(st) for st in snap] == [sorted(st) for st in per_rank]
+    for st_snap, st_ref in zip(snap, per_rank):
+        for name, sh in st_ref.items():
+            np.testing.assert_array_equal(st_snap[name].ordinals, sh.ordinals)
+            for o in sh.ordinals:
+                v = st_snap[name].data[int(o)]
+                np.testing.assert_array_equal(v, sh.data[int(o)])
+                assert np.shares_memory(v, buf)
+    # isolation: mutating the source must not leak into the snapshot
+    ref = [{n: {int(o): a.copy() for o, a in sh.data.items()}
+            for n, sh in st.items()} for st in per_rank]
+    for st in per_rank:
+        for sh in st.values():
+            for a in sh.data.values():
+                a[...] = -99.0
+    for st, rst in zip(snap, ref):
+        for n, sh in st.items():
+            for o, v in sh.data.items():
+                np.testing.assert_array_equal(v, rst[n][o])
+
+
+def test_writer_error_surfaces_on_next_submit(tmp_path):
+    """A loop that never calls wait() still hears about writer failures."""
+    store = DatasetStore(str(tmp_path), "w")
+    ck = TensorCheckpoint(store)
+    ck.save_layout(LAYOUT)
+    ac = AsyncCheckpointer(ck, Comm(2))
+    ac.fail_on_step = 0
+    ac.submit(_shards(_state(0), 2), step=0)
+    for _ in range(500):                     # let the writer hit the failure
+        if not ac.in_flight:
+            break
+        time.sleep(0.002)
+    with pytest.raises(RuntimeError, match="async checkpoint write failed"):
+        ac.submit(_shards(_state(1), 2), step=1)
+
+
+# ------------------------------------------------------- FE async (tentpole)
+def _ffield(pts):
+    x, y = pts[:, 0], pts[:, 1]
+    return np.sin(3 * x) * (2 + np.cos(5 * y)) + x * y
+
+
+def _ffield2(pts):
+    return 2.0 * _ffield(pts) - 0.25
+
+
+FE_FIELDS = (_ffield, _ffield2)
+
+
+def test_fem_async_roundtrip_and_committed_steps(tmp_path):
+    mesh = tri_mesh(3, 2, seed=41)
+    plexes, _, _ = distribute(mesh, 2)
+    store = DatasetStore(str(tmp_path), "w")
+    fck = FEMCheckpoint(store)
+    ac = AsyncCheckpointer(fck, Comm(2))
+    spaces = [FunctionSpace(lp, Element("P", 2, "triangle")) for lp in plexes]
+    ac.save_mesh("m", plexes)
+    for t, fn in enumerate(FE_FIELDS):
+        ac.save_function("m", "f", [interpolate(sp, fn) for sp in spaces],
+                         time_index=t)
+    ac.wait()
+    assert fck.steps("m", "f") == [0, 1]
+    loaded = fck.load_mesh("m", Comm(3))
+    for t, fn in enumerate(FE_FIELDS):
+        lsp, lfn = fck.load_function(loaded, "f", Comm(3), time_index=t)
+        for sp, f in zip(lsp, lfn):
+            np.testing.assert_array_equal(
+                f.values, np.asarray(fn(node_points(sp))).reshape(-1))
+
+
+def test_fem_snapshot_isolation_mid_flight(tmp_path):
+    """ROADMAP item-1 gate: mutate mesh coordinates AND function dats while
+    async save_mesh/save_function are in flight — the checkpoint holds the
+    pre-mutation values and the live state keeps the mutation."""
+    mesh = tri_mesh(3, 2, seed=41)
+    plexes, _, _ = distribute(mesh, 2)
+    store = _SlowStore(str(tmp_path), "w")
+    fck = FEMCheckpoint(store)
+    ac = AsyncCheckpointer(fck, Comm(2))
+    spaces = [FunctionSpace(lp, Element("P", 1, "triangle")) for lp in plexes]
+    funcs = [interpolate(sp, _ffield) for sp in spaces]
+    ref_coords = [lp.vcoords.copy() for lp in plexes]
+    ac.save_mesh("m", plexes)
+    ac.save_function("m", "f", funcs, time_index=0)
+    # the simulation keeps stepping while I/O drains
+    for lp in plexes:
+        lp.vcoords[...] += 123.0
+    for f in funcs:
+        f.values[...] = -7.0
+    ac.wait()
+    # live state: mutation intact (the writer touched only its snapshot)
+    for lp, rc in zip(plexes, ref_coords):
+        np.testing.assert_array_equal(lp.vcoords, rc + 123.0)
+    # checkpoint: pre-mutation bits (node_points evaluates on the LOADED,
+    # i.e. checkpointed, coordinates — equality proves neither was torn)
+    loaded = fck.load_mesh("m", Comm(3))
+    lsp, lfn = fck.load_function(loaded, "f", Comm(3), time_index=0)
+    for sp, f in zip(lsp, lfn):
+        np.testing.assert_array_equal(
+            f.values, np.asarray(_ffield(node_points(sp))).reshape(-1))
+
+
+def test_fem_steps_legacy_sync_store_without_log(tmp_path):
+    """Stores written purely by the sync path carry no commit log: steps()
+    falls back to listing the time-indexed vec datasets present."""
+    mesh = tri_mesh(3, 2, seed=41)
+    plexes, _, _ = distribute(mesh, 2)
+    store = DatasetStore(str(tmp_path), "w")
+    fck = FEMCheckpoint(store)
+    comm = Comm(2)
+    fck.save_mesh("m", plexes, comm)
+    spaces = [FunctionSpace(lp, Element("P", 1, "triangle")) for lp in plexes]
+    for t in (0, 2):
+        fck.save_function("m", "f", [interpolate(sp, _ffield)
+                                     for sp in spaces], comm, time_index=t)
+    assert not store.has_attrs(COMMIT_LOG_KEY)
+    assert fck.steps("m", "f") == [0, 2]
+    fck.load_mesh("m", Comm(3))              # no log -> no commit gating
+
+
+# ----------------------------------------- the crash-point grids (tentpole)
+def _drain(ac):
+    try:
+        ac.wait()
+    except (SimulatedCrash, RuntimeError):
+        pass
+
+
+def _run_tensor_seq(root, n, kill_after, tear):
+    """Layout + async steps 0,1,2 over a FaultStore; every completed op is
+    on disk when this returns.  -> (crashed, completed op count)."""
+    store = FaultStore(str(root), "w", kill_after_ops=kill_after, tear=tear)
+    ck = TensorCheckpoint(store)
+    ac = None
+    crashed = False
+    try:
+        ck.save_layout(LAYOUT)
+        ac = AsyncCheckpointer(ck, Comm(n))
+        for s in (0, 1, 2):
+            ac.submit(_shards(_state(s), n), step=s)
+        ac.wait()
+    except (SimulatedCrash, RuntimeError):
+        crashed = True
+    if ac is not None:
+        _drain(ac)
+    store.close()
+    return crashed, store.ops_seen
+
+
+def _assert_tensor_recoverable(root, m, states, nsteps=3):
+    """Reopen as a fresh process would and check the recovery contract."""
+    store = DatasetStore(str(root), "r")
+    try:
+        booted = store.has_attrs("meta") and store.has_attrs("layout")
+        ck = TensorCheckpoint(store) if booted else None
+        steps = ck.steps() if booted else []
+        # committed steps are always the exact prefix; torn steps invisible
+        assert steps == list(range(len(steps)))
+        if steps:
+            last = steps[-1]
+            _check(ck, last, states[last], M=m)      # bit-exact on M ranks
+            assert ck.verify_step(Comm(m), last)     # crc-clean
+        if booted and len(steps) < nsteps:
+            plan = [{s.name: canonical_regions(s.shape, m)[r]
+                     for s in LAYOUT.arrays} for r in range(m)]
+            with pytest.raises(ValueError, match="not committed"):
+                ck.load_state(plan, Comm(m), step=len(steps))
+    finally:
+        store.close()
+
+
+TENSOR_CRASH_GRID = [(n, m, tear) for n in (2, 3) for m in (1, 4)
+                     for tear in (False, True)]
+
+
+@settings(max_examples=len(TENSOR_CRASH_GRID), deadline=None)
+@given(case=st.sampled_from(TENSOR_CRASH_GRID))
+def test_tensor_crash_point_grid(tmp_path_factory, case):
+    """Crash after EVERY mutating store op k: the last committed step always
+    loads bit-exact on a different rank count; the torn step never shows."""
+    n, m, tear = case
+    states = {s: _state(s) for s in (0, 1, 2)}
+    base = tmp_path_factory.mktemp("crash_t")
+    crashed, total = _run_tensor_seq(base / "probe", n, None, tear)
+    assert not crashed and total > 10
+    for k in range(total):
+        root = base / f"k{k}"
+        crashed, _ = _run_tensor_seq(root, n, k, tear)
+        assert crashed
+        _assert_tensor_recoverable(root, m, states)
+
+
+def _run_fem_seq(root, n, plexes, kill_after):
+    store = FaultStore(str(root), "w", kill_after_ops=kill_after)
+    fck = FEMCheckpoint(store)
+    ac = None
+    crashed = False
+    try:
+        ac = AsyncCheckpointer(fck, Comm(n))
+        ac.save_mesh("m", plexes)
+        spaces = [FunctionSpace(lp, Element("P", 2, "triangle"))
+                  for lp in plexes]
+        for t, fn in enumerate(FE_FIELDS):
+            ac.save_function("m", "f", [interpolate(sp, fn) for sp in spaces],
+                             time_index=t)
+        ac.wait()
+    except (SimulatedCrash, RuntimeError):
+        crashed = True
+    if ac is not None:
+        _drain(ac)
+    store.close()
+    return crashed, store.ops_seen
+
+
+def _assert_fem_recoverable(root, n, m):
+    store = DatasetStore(str(root), "r")
+    try:
+        fck = FEMCheckpoint(store)
+        comm_m = Comm(m)
+        if not store.has_attrs(COMMIT_LOG_KEY):
+            # died before the pipeline even marked the store async-managed:
+            # nothing was written, so there is nothing loadable either
+            with pytest.raises((ValueError, KeyError)):
+                fck.load_mesh("m", comm_m)
+            return
+        log = store.get_attrs(COMMIT_LOG_KEY)
+        if not any(e.get("kind") == "mesh" for e in log):
+            # mesh never committed: the torn datasets must be unreachable
+            with pytest.raises(ValueError, match="commit"):
+                fck.load_mesh("m", comm_m)
+            return
+        loaded = fck.load_mesh("m", comm_m, partition="random",
+                               seed=m + 100 * n)
+        steps = fck.steps("m", "f")
+        assert steps == list(range(len(steps)))
+        if steps:
+            last = steps[-1]
+            lsp, lfn = fck.load_function(loaded, "f", comm_m, time_index=last)
+            for sp, f in zip(lsp, lfn):
+                np.testing.assert_array_equal(
+                    f.values,
+                    np.asarray(FE_FIELDS[last](node_points(sp))).reshape(-1))
+        if len(steps) < len(FE_FIELDS):
+            with pytest.raises(ValueError, match="not committed"):
+                fck.load_function(loaded, "f", comm_m, time_index=len(steps))
+    finally:
+        store.close()
+
+
+FEM_CRASH_GRID = [(2, 3), (3, 2)]
+
+
+@settings(max_examples=len(FEM_CRASH_GRID), deadline=None)
+@given(case=st.sampled_from(FEM_CRASH_GRID))
+def test_fem_crash_point_grid(tmp_path_factory, case):
+    """Same grid on the FE path: mesh + two function time steps through the
+    async pipeline, a crash at every op, recovery on a different M."""
+    n, m = case
+    mesh = tri_mesh(3, 2, seed=41)
+    plexes, _, _ = distribute(mesh, n)
+    base = tmp_path_factory.mktemp("crash_f")
+    crashed, total = _run_fem_seq(base / "probe", n, plexes, None)
+    assert not crashed and total > 20
+    for k in range(total):
+        root = base / f"k{k}"
+        crashed, _ = _run_fem_seq(root, n, plexes, k)
+        assert crashed
+        _assert_fem_recoverable(root, n, m)
+
+
+# -------------------------------------------------- readinto (satellite 2)
+def _read_rows_frombuffer(store, name, start, count):
+    """The pre-PR-7 read path, kept as the equivalence oracle."""
+    info = store._info(name)
+    rb = store._row_nbytes(info)
+    f = store._reader(name)
+    f.seek(start * rb)
+    raw = f.read(count * rb)
+    arr = np.frombuffer(raw, dtype=np_dtype(info["dtype"]))
+    return arr.reshape((count, *info["row_shape"])).copy()
+
+
+def test_read_rows_readinto_matches_frombuffer(tmp_path):
+    rng = np.random.default_rng(11)
+    store = DatasetStore(str(tmp_path), "w")
+    cases = [("f64", (), "float64"), ("f32m", (3, 2), "float32"),
+             ("i64", (4,), "int64"), ("bf16", (5,), "bfloat16")]
+    for name, row_shape, dtype in cases:
+        rows = 37
+        data = rng.normal(size=(rows, *row_shape)).astype(np_dtype(dtype))
+        store.create(name, rows, row_shape, dtype)
+        store.write_rows(name, 0, data)
+    for name, row_shape, dtype in cases:
+        for start, count in ((0, 37), (5, 13), (36, 1), (7, 0)):
+            got = store.read_rows(name, start, count)
+            want = _read_rows_frombuffer(store, name, start, count)
+            assert got.dtype == want.dtype and got.shape == want.shape
+            np.testing.assert_array_equal(
+                got.view(np.uint8), want.view(np.uint8))
+    with pytest.raises(ValueError, match="out of range"):
+        store.read_rows("f64", 30, 10)
+
+
+# -------------------------------------------- timed overlap smoke (sat 6)
+def test_async_overlap_smoke():
+    """Fast-tier guard: submit must not degrade to a blocking save.  Bounds
+    are generous (20x wall / a fixed overlap floor well under the ~0.92
+    recorded) so only order-of-magnitude regressions trip."""
+    from benchmarks.bench_checkpoint import async_overlap
+
+    base = json.loads((DATA / "bench_async_baseline.json").read_text())
+    t0 = time.perf_counter()
+    rows = async_overlap(ranks=(base["ranks"],),
+                         elems_per_rank=base["elems_per_rank"])
+    wall = time.perf_counter() - t0
+    assert wall < max(20.0 * base["seconds"], 2.0), \
+        f"async overlap smoke took {wall:.2f}s vs baseline {base['seconds']}s"
+    frac = rows[0]["overlap_frac"]
+    assert frac >= base["min_overlap_frac"], \
+        f"overlap_frac {frac} under floor {base['min_overlap_frac']}"
+
+
+# ------------------------------------------- real process death (os._exit)
+import os as _os
+import subprocess as _subprocess
+import sys as _sys
+
+_REPO = pathlib.Path(__file__).resolve().parents[1]
+
+_KILL_SCRIPT = r"""
+import sys
+
+import numpy as np
+
+from helpers.faultstore import FaultStore
+from repro.core.async_io import AsyncCheckpointer
+from repro.core.chunk_layout import ArraySpec, StateLayout
+from repro.core.comm import Comm
+from repro.core.tensor_ckpt import (
+    TensorCheckpoint, balanced_chunk_partition, shards_from_arrays,
+)
+
+root, kill_after = sys.argv[1], sys.argv[2]
+kill_after = None if kill_after == "none" else int(kill_after)
+layout = StateLayout((ArraySpec("w", (20, 8), "float64", (5, 8)),
+                      ArraySpec("mu", (20, 8), "float64", (5, 8))))
+
+
+def state(seed):
+    rng = np.random.default_rng(seed)
+    return {"w": rng.normal(size=(20, 8)), "mu": rng.normal(size=(20, 8))}
+
+
+fs = FaultStore(root, "w", kill_after_ops=kill_after, kill_mode="exit")
+ck = TensorCheckpoint(fs)
+ck.save_layout(layout)
+ac = AsyncCheckpointer(ck, Comm(2))
+for s in (0, 1, 2):
+    ac.submit(shards_from_arrays(layout, state(s),
+                                 balanced_chunk_partition(layout, 2)), step=s)
+ac.wait()
+print("OPS", fs.ops_seen)
+"""
+
+
+def test_real_process_kill_recovery(tmp_path):
+    """Not simulated: the child REALLY dies (os._exit inside the writer
+    thread) mid-checkpoint; a fresh process recovers the last committed
+    step bit-exact on a different rank count."""
+    script = tmp_path / "kill_child.py"
+    script.write_text(_KILL_SCRIPT)
+    env = dict(_os.environ)
+    env["PYTHONPATH"] = _os.pathsep.join(
+        [str(_REPO / "src"), str(_REPO / "tests")])
+
+    def child(root, arg):
+        return _subprocess.run(
+            [_sys.executable, str(script), str(root), arg],
+            capture_output=True, text=True, timeout=120, env=env)
+
+    probe = child(tmp_path / "probe", "none")
+    assert probe.returncode == 0, probe.stdout + probe.stderr
+    total = int(probe.stdout.split("OPS")[1])
+    assert total > 10
+    crash = child(tmp_path / "crash", str(total * 2 // 3))
+    assert crash.returncode == 17, crash.stdout + crash.stderr
+
+    store = DatasetStore(str(tmp_path / "crash"), "r")
+    ck = TensorCheckpoint(store)
+    steps = ck.steps()
+    assert steps == list(range(len(steps))) and len(steps) < 3
+    if steps:
+        last = steps[-1]
+        _check(ck, last, _state(last), M=3)
+        assert ck.verify_step(Comm(3), last)
+    store.close()

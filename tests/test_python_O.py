@@ -102,6 +102,66 @@ raises(lambda: fck.load_mesh("m", Comm(2), exact_distribution=True),
 raises(lambda: FunctionSpace(plexes[0], Element("P", 1, "interval")),
        "element/mesh dimension mismatch")
 
+# ---- async round-trip + crash-mid-write recovery (PR 7) -------------------
+# the commit protocol must survive assert-stripping: validation on the
+# recovery path is ValueError-based, never assert-based
+from helpers.faultstore import FaultStore, SimulatedCrash
+from repro.core.async_io import AsyncCheckpointer
+
+astore = DatasetStore(tmp + "/async", "w")
+ack = TensorCheckpoint(astore)
+ack.save_layout(layout)
+ac = AsyncCheckpointer(ack, Comm(3))
+state1 = {"w": np.random.default_rng(1).normal(size=(20, 12))}
+ac.submit(per_rank, step=0)
+ac.submit(shards_from_arrays(layout, state1,
+                             balanced_chunk_partition(layout, 3)), step=1)
+ac.wait()
+check(ack.steps() == [0, 1], "async steps committed")
+out = ack.load_state(plan, Comm(2), step=1)
+got = np.concatenate([np.concatenate([b.reshape(-1) for b in slot["w"]])
+                      for slot in out])
+check(np.array_equal(got, state1["w"].reshape(-1)),
+      "async round-trip bitwise equality")
+
+
+def crash_seq(root, kill_after):
+    fs = FaultStore(root, "w", kill_after_ops=kill_after)
+    fck2 = TensorCheckpoint(fs)
+    ops0 = None
+    try:
+        fck2.save_layout(layout)
+        ac2 = AsyncCheckpointer(fck2, Comm(3))
+        ac2.submit(per_rank, step=0)
+        ac2.wait()
+        ops0 = fs.ops_seen
+        ac2.submit(shards_from_arrays(layout, state1,
+                                      balanced_chunk_partition(layout, 3)),
+                   step=1)
+        ac2.wait()
+    except (SimulatedCrash, RuntimeError):
+        pass
+    fs.close()
+    return ops0, fs.ops_seen
+
+
+ops_after_step0, total_ops = crash_seq(tmp + "/probe", None)
+check(total_ops > ops_after_step0 > 0, "fault probe counted ops")
+# kill mid-way through step 1's writes
+crash_seq(tmp + "/crash", ops_after_step0 + (total_ops - ops_after_step0) // 2)
+rstore = DatasetStore(tmp + "/crash", "r")
+rck = TensorCheckpoint(rstore)
+check(rck.steps() == [0], "torn step invisible after crash")
+check(rck.latest_step() == 0, "latest_step is the restart point")
+out = rck.load_state(plan, Comm(2), step=0)
+got = np.concatenate([np.concatenate([b.reshape(-1) for b in slot["w"]])
+                      for slot in out])
+check(np.array_equal(got, arrays["w"].reshape(-1)),
+      "last committed step bit-exact after crash")
+check(rck.verify_step(Comm(2), 0), "crc verify after crash")
+raises(lambda: rck.load_state(plan, Comm(2), step=1),
+       "loading the torn step")
+
 print("OK")
 """
 
@@ -110,7 +170,9 @@ def test_roundtrips_and_validation_survive_dash_O(tmp_path):
     script = tmp_path / "smoke_O.py"
     script.write_text(_SCRIPT)
     env = dict(os.environ)
-    env["PYTHONPATH"] = str(_REPO / "src")
+    # tests dir on the path for helpers.faultstore (the fault injector)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [str(_REPO / "src"), str(_REPO / "tests")])
     proc = subprocess.run(
         [sys.executable, "-O", str(script), str(tmp_path)],
         capture_output=True, text=True, timeout=300, env=env)
