@@ -192,6 +192,59 @@ def timeseries_append(elems_per_rank: int = 1 << 16,
             "later_steps_s": round(float(np.mean(times[1:])), 4)}
 
 
+def series_append(elems_per_rank: int = 1 << 16, steps: int = 8) -> dict:
+    """Append-only step series: per-step append wall time + dedup ratio.
+
+    Two arrays per step — one constant ("mesh-like", content-hash dedups to
+    a single stored extent aliased by every step's manifest) and one mutated
+    (fresh extent per step).  ``dedup_ratio`` is logical payload bytes over
+    bytes actually written; it approaches 2.0 as the series grows because
+    half the per-step payload never hits disk again after step 0."""
+    nranks = 4
+    total = nranks * elems_per_rank
+    layout = StateLayout((ArraySpec("mesh", (total,), "float64",
+                                    (elems_per_rank,)),
+                          ArraySpec("vec", (total,), "float64",
+                                    (elems_per_rank,))))
+    rng = np.random.default_rng(0)
+    const = rng.normal(size=total)
+    ownership = balanced_chunk_partition(layout, nranks)
+    comm = Comm(nranks)
+    tmp = tempfile.mkdtemp(prefix="series_")
+    store = DatasetStore(tmp, "w")
+    ck = TensorCheckpoint(store)
+    ck.save_layout(layout)
+    base_bytes = store.stats.bytes_written
+    times = []
+    for s in range(steps):
+        arrays = {"mesh": const, "vec": rng.normal(size=total)}
+        per_rank = shards_from_arrays(layout, arrays, ownership)
+        t0 = time.perf_counter()
+        store.begin_step(s)
+        ck.save_state(per_rank, comm, s)
+        store.commit_step()
+        times.append(time.perf_counter() - t0)
+    committed = store.steps()
+    actual = store.stats.bytes_written - base_bytes
+    payload = 2 * total * 8                  # both arrays, one step
+    logical = steps * payload                # ... every step
+    gib_step = payload / 2 ** 30
+    later = float(np.mean(times[1:])) if steps > 1 else times[0]
+    store.close()
+    shutil.rmtree(tmp)
+    if committed != list(range(steps)):
+        raise ValueError(f"series_append: committed prefix {committed} "
+                         f"!= expected {list(range(steps))}")
+    return {"ranks": nranks,
+            "steps": steps,
+            "payload_MiB_per_step": round(2 * total * 8 / 2 ** 20, 2),
+            "first_step_s": round(times[0], 4),
+            "later_steps_s": round(later, 4),
+            "append_GiB_per_s": round(gib_step / max(later, 1e-9), 2),
+            "written_MiB": round(actual / 2 ** 20, 2),
+            "dedup_ratio": round(logical / actual, 3)}
+
+
 def rank_scaling_roundtrip(ranks=(2, 4, 8, 16, 32, 64, 128, 256, 512, 1024,
                                   2048, 4096, 8192),
                            elems_per_rank: int = 1 << 12) -> list[dict]:

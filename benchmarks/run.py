@@ -68,6 +68,11 @@ def main(argv=None):
     print("\n== §2.2.7: time-series appends (section saved once) ==")
     print(json.dumps(bc.timeseries_append(elems_per_rank=scale // 2),
                      indent=1))
+    # series stream: manifest-committed appends with content-hash dedup
+    series_row = bc.series_append(elems_per_rank=scale // 2,
+                                  steps=4 if args.quick else 8)
+    print("\n== Series stream: append throughput + dedup ratio ==")
+    print(json.dumps(series_row, indent=1))
     _print_table("Beyond-paper: in-memory elastic reshard",
                  bc.reshard_bench(elems=scale * 32))
 
@@ -94,6 +99,7 @@ def main(argv=None):
         "fem_rank_sweep": fem_rank_rows,
         "tensor_rank_scaling": tensor_rank_rows,
         "async_overlap": async_rows,
+        "series_append": series_row,
     }
     out_path = _REPO_ROOT / ("BENCH_loadscale_quick.json" if args.quick
                              else "BENCH_loadscale.json")

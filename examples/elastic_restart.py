@@ -7,9 +7,10 @@ checkpoints steps 10 and 20; a second run on the same mesh dies
 mid-checkpoint of step 30 (a fault-injected store kills the async writer
 after a handful of write ops — before the commit marker lands); a third
 run re-loads onto mesh (2, 4) — different device count per axis, different
-parameter partitions — and restarts from the last COMMITTED step (20): the
-torn step-30 write is invisible, exactly the recovery contract documented
-in ``core/async_io.py``.
+parameter partitions — and restarts from committed series step 20 by
+explicit ``restore_from(20)``: the torn step-30 write never entered the
+step manifest, exactly the recovery contract documented in
+``core/async_io.py``.
 
 Run:  PYTHONPATH=src python examples/elastic_restart.py
 (relaunches itself with XLA_FLAGS for 8 simulated host devices)
@@ -25,7 +26,7 @@ CKPT = "/tmp/ex_elastic_ckpt"
 
 
 def phase(mesh_shape, steps, expect_start, store_factory=None,
-          expect_crash=False):
+          expect_crash=False, from_step=None):
     import jax
 
     from repro.configs import get_smoke_config
@@ -53,7 +54,13 @@ def phase(mesh_shape, steps, expect_start, store_factory=None,
     tr = Trainer(step, data, tcfg,
                  init_state_fn=lambda: init_train_state(
                      api, opt, jax.random.key(0)))
-    state, start = tr.restore_latest()
+    if from_step is None:
+        state, start = tr.restore_latest()
+    else:
+        # restart-from-step-k: name the committed series step explicitly
+        # (a torn or unknown step raises ValueError with the committed
+        # prefix — the stream's manifest is the source of truth)
+        state, start = tr.restore_from(from_step)
     assert start == expect_start, (start, expect_start)
     print(f"mesh {mesh_shape}: restored step {start}; param sharding "
           f"example: "
@@ -96,8 +103,8 @@ def main():
           store_factory=lambda root, mode: FaultStore(
               root, mode, kill_after_ops=4),
           expect_crash=True)
-    print("== phase 3: mesh (2, 4) — M side (elastic restart) ==")
-    phase((2, 4), steps=40, expect_start=20)
+    print("== phase 3: mesh (2, 4) — M side (restart from step 20) ==")
+    phase((2, 4), steps=40, expect_start=20, from_step=20)
     print("elastic N-to-M restart after an injected crash OK")
 
 

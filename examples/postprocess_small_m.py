@@ -1,11 +1,14 @@
 """The paper's headline use case: save big, post-process small.
 
-A training run on an 8-device (4, 2) mesh checkpoints its state; a
-"workstation" (M = 1 device, different process) later loads ONLY the
-arrays it needs — the embedding table and the final norm — without
-touching the rest of the multi-GiB state and without any knowledge of
-the save-time distribution (paper §1: "post-process the result on a
-local workstation using a much smaller number of processes").
+A training run on an 8-device (4, 2) mesh checkpoints a step SERIES; a
+"workstation" (M = 1 device, different process) later sweeps every
+committed step, loading ONLY the arrays it needs — the embedding table
+and the final norm — without touching the rest of the multi-GiB state
+and without any knowledge of the save-time distribution (paper §1:
+"post-process the result on a local workstation using a much smaller
+number of processes").  The sweep is ``core/resharder.sweep_steps``:
+one region plan built once, per-step I/O only the step's own
+(non-deduped) extents.
 
 Run:  PYTHONPATH=src python examples/postprocess_small_m.py
 """
@@ -52,36 +55,35 @@ def train_phase():
 
 
 def postprocess_phase():
-    """The M = 1 'workstation': selective load, no mesh, no model."""
+    """The M = 1 'workstation': a selective sweep over every committed
+    step of the stream — no mesh, no model."""
     import numpy as np
 
-    from repro.core.chunk_layout import Box
     from repro.core.comm import Comm
+    from repro.core.resharder import sweep_steps
     from repro.core.store import DatasetStore
     from repro.core.tensor_ckpt import TensorCheckpoint
 
     ck = TensorCheckpoint(DatasetStore(CKPT, "r"))
     layout = ck.layout()
-    step = ck.steps()[-1]
     wanted = ["params/embed", "params/final_norm"]
     plan = [{name: [layout.spec(name).full_box] for name in wanted}]
-    out = ck.load_state(plan, Comm(1), step)[0]
-
-    embed = out["params/embed"][0]
-    norm = out["params/final_norm"][0]
     total_arrays = len(layout.names)
-    print(f"[M side] loaded {len(wanted)}/{total_arrays} arrays from "
-          f"step {step} on 1 process:")
-    print(f"  embed {embed.shape} {embed.dtype}, "
-          f"|embed| = {float(np.abs(embed.astype(np.float32)).mean()):.4f}")
-    print(f"  final_norm {norm.shape}, "
-          f"mean = {float(norm.astype(np.float32).mean()):.4f}")
-    # nearest-neighbour demo over the loaded embeddings
+    print(f"[M side] sweeping committed steps {ck.steps()} on 1 process, "
+          f"{len(wanted)}/{total_arrays} arrays each:")
+    embed = None
+    for step, out in sweep_steps(ck, plan, Comm(1), arrays=wanted):
+        embed = out[0]["params/embed"][0]
+        norm = out[0]["params/final_norm"][0]
+        print(f"  step {step:>3}: "
+              f"|embed| = {float(np.abs(embed.astype(np.float32)).mean()):.4f}, "
+              f"final_norm mean = {float(norm.astype(np.float32).mean()):.4f}")
+    # nearest-neighbour demo over the last step's embeddings
     e = embed.astype(np.float32)
     e = e / (np.linalg.norm(e, axis=1, keepdims=True) + 1e-6)
     sims = e[:8] @ e.T
     np.fill_diagonal(sims[:, :8], -1)
-    print(f"  nearest neighbours of tokens 0..7: "
+    print(f"  nearest neighbours of tokens 0..7 (step {ck.steps()[-1]}): "
           f"{sims.argmax(1).tolist()}")
 
 

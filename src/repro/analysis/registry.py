@@ -29,6 +29,7 @@ HOT_PATH_REGISTRY: dict[str, tuple[str, ...]] = {
     "benchmarks/bench_checkpoint.py": (
         "rank_scaling_roundtrip",
         "timeseries_append",
+        "series_append",
         "weak_scaling_save",
         "weak_scaling_load",
         "async_overlap",

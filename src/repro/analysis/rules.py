@@ -28,11 +28,16 @@ CKPT005  no call to the dense list-of-lists ``Comm.alltoallv`` outside the
          ``ALLTOALLV_SHIMS`` allowlist (applies file-wide, not just hot
          paths — the dense shim is never acceptable in engine code).
 CKPT006  no ``DatasetStore`` data access (``read_rows``/``write_rows``
-         families, ``read_plan``/``write_plan``) lexically inside a loop
-         whose iterations address the *same* dataset — that breaks the
-         one-coalesced-plan-per-dataset-per-phase contract.  A loop over
-         datasets (the dataset-name argument mentions the loop variable) is
-         allowed.
+         families, ``read_plan``/``write_plan``, and the series staging ops
+         ``staged_write``/``stage_dataset``/``stage_carry``) lexically
+         inside a loop whose iterations address the *same* dataset — that
+         breaks the one-coalesced-plan-per-dataset-per-phase contract.  A
+         loop over datasets is allowed: the dataset-name argument mentions
+         the loop variable, either directly or through a name *derived*
+         from it by straight-line assignment inside the loop body (e.g.
+         iterating committed series steps and resolving each step's
+         physical name first).  Fixed-dataset ops inside such a loop still
+         flag.
 """
 
 from __future__ import annotations
@@ -94,10 +99,12 @@ _ID_CALLS = frozenset({"rank_radix", "_rank_radix"})
 
 UINT64, RANK, ID, SMALL, UNKNOWN = "uint64", "rank", "id", "small", "unknown"
 
-#: DatasetStore data-plane methods covered by CKPT006.
+#: DatasetStore data-plane methods covered by CKPT006 (the series staging
+#: ops take the dataset name first, exactly like the plan calls).
 STORE_OPS = frozenset({
     "read_rows", "read_rows_at", "read_plan",
     "write_rows", "write_rows_at", "write_plan",
+    "staged_write", "stage_dataset", "stage_carry",
 })
 
 
@@ -394,6 +401,17 @@ def _check_ckpt006(fn: FunctionInfo, path: str,
         if isinstance(node, ast.While):
             ctx.stack.append(set())
             pushed = 1
+        # taint straight-line derivations of the loop targets: a name
+        # assigned from an expression mentioning a target (or an already-
+        # tainted name) varies per iteration too — `phys = f"{series}/
+        # s{k}/{name}"` inside `for k in steps` exempts ops on `phys`
+        if isinstance(node, (ast.Assign, ast.AnnAssign, ast.AugAssign)) \
+                and ctx.in_loop and getattr(node, "value", None) is not None \
+                and set(_names_in(node.value)) & ctx.targets():
+            tgts = node.targets if isinstance(node, ast.Assign) \
+                else [node.target]
+            for tgt in tgts:
+                ctx.stack[-1].update(_names_in(tgt))
         if isinstance(node, ast.Call) and \
                 isinstance(node.func, ast.Attribute) and \
                 node.func.attr in STORE_OPS and ctx.in_loop:

@@ -48,7 +48,19 @@ count**, and a torn (uncommitted) step is never visible:
   the golden-format fixtures are unchanged.)  Once a store is managed
   through :class:`AsyncCheckpointer`, route every save through it: a
   synchronous ``save_function`` on the side would write datasets without a
-  commit entry and be treated as torn.
+  commit entry and be treated as torn;
+* **series steps**: when a step's saves are bracketed by ``begin_step`` /
+  ``commit_step``, every queued mutation stages into the store's open
+  series step — data extents land on disk as written (content-hash
+  dedup-aliased against earlier steps), but the step's manifest entry, its
+  commit-log entries and ALL attr writes are deferred into
+  ``DatasetStore.commit_step``'s single atomic ``os.replace``.  The
+  manifest entry IS the commit marker: the marker-written-LAST contract
+  collapses to one flush.  A crash — or a failed writer job, which makes
+  the writer skip every queued job *including the commit* — anywhere
+  before that flush leaves orphan extents but no manifest entry, no attrs
+  and no log entries, so ``steps()`` reports the exact committed prefix
+  and loading the torn step raises ``ValueError``.
 
 Mesh topology (cones, global numbers, ownership) is assumed immutable while
 a save is in flight — only coordinates, labels and function values are
@@ -73,12 +85,15 @@ import numpy as np
 
 from repro.analysis import hot_path
 from repro.core.comm import Comm
-from repro.core.store import DatasetStore
+from repro.core.store import COMMIT_LOG_KEY, DEFAULT_SERIES, DatasetStore
 from repro.core.tensor_ckpt import ArrayShard, PerRankState, TensorCheckpoint
 
-#: Store attr holding the append-only list of commit entries written by the
-#: async writer (one dict per committed job; the write is atomic).
-COMMIT_LOG_KEY = "async/commit_log"
+# COMMIT_LOG_KEY — the attr holding the append-only list of commit entries
+# written by the async writer — is owned by this module but defined in
+# ``core.store`` (re-exported here) so ``StepView`` can mask it without a
+# circular import.
+__all__ = ["COMMIT_LOG_KEY", "AsyncCheckpointer", "StagingArena",
+           "ArenaStats", "pack_flat"]
 
 
 # ============================================================= staging arena
@@ -264,6 +279,7 @@ class AsyncCheckpointer:
         self.arena = StagingArena(staging_budget_bytes)
         self.completed_steps: list[int] = []
         self.job_log: list[dict] = []    # {"label", "t0", "t1", "seconds"}
+        self._series_label = "?"         # last begin_step, for job labels
         # test hook: raised inside the writer thread to simulate a crash
         self.fail_on_step: int | None = None
         self._queue: queue.Queue[_Job] = queue.Queue()
@@ -360,6 +376,26 @@ class AsyncCheckpointer:
             commit={"kind": "func", "mesh": mesh, "fname": fname,
                     "step": time_index}))
 
+    def begin_step(self, step: int, series: str = DEFAULT_SERIES) -> None:
+        """Open series step ``step`` (ordered on the writer thread): every
+        save queued until ``commit_step`` stages into the step."""
+        self._raise_pending()
+        self._series_label = f"s{int(step)}"
+
+        def run(step=int(step)):
+            self.store.begin_step(step, series)
+
+        self._enqueue(_Job(run, None, f"begin/{self._series_label}"))
+
+    def commit_step(self) -> None:
+        """Commit the open series step — the job's ONLY write is the single
+        atomic flush that makes the step visible.  If any queued save of the
+        step failed, the writer skips this job too and the step stays
+        invisible (torn), exactly like a crash."""
+        self._raise_pending()
+        self._enqueue(_Job(self.store.commit_step, None,
+                           f"commit/{self._series_label}"))
+
     def wait(self) -> None:
         """Drain every submitted job; re-raise the first writer failure."""
         self._queue.join()
@@ -414,7 +450,9 @@ class AsyncCheckpointer:
 def _append_commit(store: DatasetStore, entry: dict) -> None:
     """Append one entry to the commit log; the single ``set_attrs`` is the
     atomic commit point (``store.json`` replaced via ``os.replace``)."""
-    log = (store.get_attrs(COMMIT_LOG_KEY)
+    # copy before appending: inside a series step the append must stage (see
+    # DatasetStore.set_attrs), never mutate the committed list in place
+    log = (list(store.get_attrs(COMMIT_LOG_KEY))
            if store.has_attrs(COMMIT_LOG_KEY) else [])
     log.append(entry)
     store.set_attrs(COMMIT_LOG_KEY, log)

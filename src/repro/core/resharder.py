@@ -103,3 +103,40 @@ def reshard(layout: StateLayout, source: PerRankState,
             if regs:
                 slot[name] = bufs
     return out
+
+
+# ===================================================== stream-backed restarts
+@hot_path
+def restart_from_step(ckpt, step: int, plan: list[dict[str, list[Box]]],
+                      comm_dst: Comm) -> list[dict[str, list[np.ndarray]]]:
+    """Restart-from-step-k off disk: one committed step of a checkpoint
+    stream loaded onto an arbitrary M-rank region plan.
+
+    ``ckpt`` is a :class:`~repro.core.tensor_ckpt.TensorCheckpoint` over a
+    (possibly series) store; the step resolves through the series manifest
+    when one exists, so M need not equal the saved N and a torn step raises
+    ``ValueError`` naming the committed prefix.
+    """
+    return ckpt.load_state(plan, comm_dst, int(step))
+
+
+@hot_path
+def sweep_steps(ckpt, plan: list[dict[str, list[Box]]], comm_dst: Comm,
+                steps: list[int] | None = None,
+                arrays: list[str] | None = None):
+    """Post-processing sweep: iterate committed steps of a stream on M ranks.
+
+    Yields ``(step, per_rank_values)`` for every step in ``steps`` (default:
+    all committed steps, ascending).  ``arrays`` restricts the plan to a
+    subset of array names — the selective-load path for cheap analysis on a
+    small M.  The plan is built once and reused across the whole sweep;
+    per-step I/O is then only the step's own (non-deduped) extents.
+    """
+    if steps is None:
+        steps = ckpt.steps()
+    if arrays is not None:
+        keep = frozenset(arrays)
+        plan = [{n: boxes for n, boxes in p.items() if n in keep}
+                for p in plan]
+    for s in steps:
+        yield int(s), ckpt.load_state(plan, comm_dst, int(s))

@@ -39,11 +39,37 @@ and issue one plan call instead of a ``for r in range(R)`` loop, which keeps
 the call count per dataset independent of the rank count.  Byte totals are
 unchanged (plans write/read exactly the requested rows), so dataset bytes on
 disk are identical to the per-rank-loop path.
+
+Timestep series
+---------------
+A store can also hold an **append-only series** of checkpoint steps (the
+sapphire ``DumbCheckpoint``/``set_timestep`` idiom).  The series lives in one
+JSON attr (:data:`SERIES_KEY`) holding, per series, a *manifest*:
+
+  * ``steps``  — ``{step: {logical_name: physical_dataset}}``: O(1) lookup of
+    any committed step's datasets;
+  * ``hashes`` — ``{content_hash: physical_dataset}``: the dedup index.  A
+    dataset whose bytes are unchanged between steps is stored once and merely
+    *aliased* in later steps' manifests (zero bytes written).
+
+``begin_step`` opens a step; every ``staged_write``/``stage_dataset`` then
+lands under a step-scoped physical name (or aliases an existing extent on a
+hash hit) and every ``set_attrs`` is *deferred*; ``commit_step`` merges the
+step's manifest entry, its staged attrs, and its hash-index additions into
+``store.json`` with ONE atomic replace — the manifest entry IS the commit
+marker.  A crash before ``commit_step`` leaves orphan extents on disk but no
+manifest entry, so ``steps()`` never shows a torn step and ``step_datasets``
+raises ``ValueError`` for it.  A store with no series attr is the degenerate
+one-step layout: nothing about the legacy single-snapshot byte format
+changes.  :class:`StepView` is the read side: a proxy that resolves logical
+names through one committed step's manifest so the load engines work
+unmodified on any step of a stream.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import json
 import os
 import time
@@ -52,6 +78,35 @@ from typing import Any
 import numpy as np
 
 from repro.analysis import hot_path
+
+#: attr key of the per-series step manifests (absent on legacy stores)
+SERIES_KEY = "series/manifest"
+#: attr key of the async writer's commit log (owned by ``core/async_io``;
+#: defined here so :class:`StepView` can mask it without a circular import)
+COMMIT_LOG_KEY = "async/commit_log"
+#: series name used when callers don't pick one
+DEFAULT_SERIES = "series"
+
+
+def content_hash(arrays, starts=None) -> str:
+    """Content fingerprint of one dataset's segments for step-level dedup.
+
+    Identical (placement, dtype, shape, bytes) ⇒ identical hash, so a dataset
+    unchanged between steps aliases the stored extent instead of being
+    rewritten.  ``starts`` (when given) orders the segments canonically and
+    is folded into the digest — same bytes at different row offsets are a
+    different dataset.
+    """
+    pairs = list(zip(starts, arrays)) if starts is not None \
+        else list(enumerate(arrays))
+    pairs.sort(key=lambda p: int(p[0]))
+    h = hashlib.blake2b(digest_size=16)
+    for start, a in pairs:
+        a = np.ascontiguousarray(a)
+        h.update(f"{int(start)}:{a.dtype}:{a.shape};".encode())
+        if a.size:
+            h.update(a.reshape(-1).view(np.uint8))
+    return h.hexdigest()
 
 
 def np_dtype(name) -> np.dtype:
@@ -88,6 +143,7 @@ class DatasetStore:
         self.buffer_rows = buffer_rows
         self.stats = IOStats()
         self._read_fds: dict[str, Any] = {}   # dataset -> cached read handle
+        self._pending: dict | None = None     # open (uncommitted) series step
         if mode == "w":
             os.makedirs(root, exist_ok=True)
             self._meta = {"datasets": {}, "attrs": {}}
@@ -137,13 +193,24 @@ class DatasetStore:
     def set_attrs(self, key: str, value: Any) -> None:
         if self.mode not in ("w", "a"):
             raise ValueError(f"set_attrs({key!r}) on read-only store")
+        if self._pending is not None:
+            # inside a series step, attr writes are staged: they reach disk
+            # only in commit_step's single atomic flush, so a torn step
+            # leaves no attr traces (this is what folds the async commit log
+            # into the manifest commit)
+            self._pending["attrs"][key] = value
+            return
         self._meta["attrs"][key] = value
         self._flush_meta()
 
     def get_attrs(self, key: str) -> Any:
+        if self._pending is not None and key in self._pending["attrs"]:
+            return self._pending["attrs"][key]
         return self._meta["attrs"][key]
 
     def has_attrs(self, key: str) -> bool:
+        if self._pending is not None and key in self._pending["attrs"]:
+            return True
         return key in self._meta["attrs"]
 
     def datasets(self) -> list[str]:
@@ -151,6 +218,157 @@ class DatasetStore:
 
     def has_dataset(self, name: str) -> bool:
         return name in self._meta["datasets"]
+
+    # ------------------------------------------------------ timestep series
+    def _manifest(self, series: str) -> dict:
+        return self._meta["attrs"].get(SERIES_KEY, {}).get(
+            series, {"steps": {}, "hashes": {}})
+
+    def _require_pending(self) -> dict:
+        if self._pending is None:
+            raise ValueError("no series step is open (call begin_step first)")
+        return self._pending
+
+    @property
+    def pending_step(self) -> tuple[str, int] | None:
+        """The open (series, step) pair, or ``None`` outside a step."""
+        if self._pending is None:
+            return None
+        return (self._pending["series"], self._pending["step"])
+
+    @hot_path
+    def begin_step(self, step: int, series: str = DEFAULT_SERIES) -> None:
+        """Open series step ``step``; writes nothing to disk by itself.
+
+        Series are append-only: ``step`` must exceed every committed step of
+        ``series``, and only one step may be open per store at a time.
+        """
+        if self.mode not in ("w", "a"):
+            raise ValueError(f"begin_step({step}) on read-only store")
+        if self._pending is not None:
+            raise ValueError(
+                f"begin_step({step}): step {self._pending['step']} of series "
+                f"{self._pending['series']!r} is still open")
+        committed = self.steps(series)
+        step = int(step)
+        if committed and step <= committed[-1]:
+            raise ValueError(
+                f"begin_step({step}): series {series!r} is append-only and "
+                f"already committed step {committed[-1]}")
+        self._pending = {"series": series, "step": step, "datasets": {},
+                         "new_hashes": {}, "attrs": {}}
+
+    @hot_path
+    def stage_dataset(self, name: str, h: str, rows: int,
+                      row_shape: tuple[int, ...] = (),
+                      dtype="float64") -> str | None:
+        """Stage dataset ``name`` (content hash ``h``) in the open step.
+
+        On a hash hit the existing extent is aliased in the step manifest and
+        ``None`` is returned — zero bytes written, the dedup fast path.  On a
+        miss a fresh step-scoped physical dataset is created and its name
+        returned for the caller's ``write_plan``.
+        """
+        p = self._require_pending()
+        phys = self._manifest(p["series"])["hashes"].get(h) \
+            or p["new_hashes"].get(h)
+        if phys is not None:
+            p["datasets"][name] = phys
+            return None
+        phys = f"{p['series']}/s{p['step']}/{name}"
+        self.create(phys, rows, row_shape, dtype)
+        p["datasets"][name] = phys
+        p["new_hashes"][h] = phys
+        return phys
+
+    @hot_path
+    def staged_write(self, name: str, rows: int, row_shape, dtype,
+                     starts, arrays) -> None:
+        """Create + one batched write of a whole dataset, series-aware.
+
+        Outside a step this is exactly ``create`` + ``write_plan``.  Inside a
+        step the dataset is staged through the manifest with content-hash
+        dedup: an unchanged dataset aliases the stored extent and the write
+        is skipped entirely.
+        """
+        if self._pending is None:
+            self.create(name, rows, row_shape, dtype)
+            self.write_plan(name, starts, arrays)
+            return
+        phys = self.stage_dataset(name, content_hash(arrays, starts),
+                                  rows, row_shape, dtype)
+        if phys is not None:
+            self.write_plan(phys, starts, arrays)
+
+    @hot_path
+    def stage_carry(self, name: str) -> None:
+        """Alias ``name`` in the open step to the physical extent it mapped
+        to in the latest committed step that has it (caller asserts the
+        content is unchanged — the engines use this when their own dedup,
+        e.g. the tensor epoch fingerprint, already proved it)."""
+        p = self._require_pending()
+        man = self._manifest(p["series"])
+        for s in sorted((int(k) for k in man["steps"]), reverse=True):
+            phys = man["steps"][str(s)].get(name)
+            if phys is not None:
+                p["datasets"][name] = phys
+                return
+        raise ValueError(
+            f"stage_carry({name!r}): no committed step of series "
+            f"{p['series']!r} maps it")
+
+    @hot_path
+    def commit_step(self) -> None:
+        """Commit the open step with ONE atomic ``store.json`` replace.
+
+        The manifest entry, the staged attrs, and the hash-index additions
+        all land in that single flush — the manifest entry IS the commit
+        marker (the marker-written-LAST contract of ``core/async_io``), so a
+        crash anywhere before this call leaves the step invisible.
+        """
+        p = self._require_pending()
+        series = self._meta["attrs"].setdefault(SERIES_KEY, {})
+        man = series.setdefault(p["series"], {"steps": {}, "hashes": {}})
+        man["steps"][str(p["step"])] = p["datasets"]
+        man["hashes"].update(p["new_hashes"])
+        self._meta["attrs"].update(p["attrs"])
+        # re-point: staged attrs must not resurrect a stale SERIES_KEY
+        self._meta["attrs"][SERIES_KEY] = series
+        self._pending = None
+        self._flush_meta()
+
+    def abort_step(self) -> None:
+        """Drop the open step.  Extents it created stay on disk as orphans
+        (exactly like a crash) but no manifest entry ever appears."""
+        self._require_pending()
+        self._pending = None
+
+    def steps(self, series: str = DEFAULT_SERIES) -> list[int]:
+        """Committed steps of ``series``, ascending ([] for no such series)."""
+        return sorted(int(s) for s in self._manifest(series)["steps"])
+
+    def step_datasets(self, step: int,
+                      series: str = DEFAULT_SERIES) -> dict[str, str]:
+        """O(1) logical→physical dataset mapping of one committed step.
+
+        Torn or unknown steps raise ``ValueError`` naming the committed
+        prefix — the load-side half of the crash-consistency contract.
+        """
+        man = self._manifest(series)
+        entry = man["steps"].get(str(int(step)))
+        if entry is None:
+            raise ValueError(
+                f"step {step} of series {series!r} is not committed "
+                f"(committed steps: {self.steps(series)})")
+        return dict(entry)
+
+    def has_step(self, step: int, series: str = DEFAULT_SERIES) -> bool:
+        return str(int(step)) in self._manifest(series)["steps"]
+
+    def step_view(self, step: int,
+                  series: str = DEFAULT_SERIES) -> "StepView":
+        """Read-side view of one committed step (see :class:`StepView`)."""
+        return StepView(self, step, series)
 
     # ------------------------------------------------------------- datasets
     def _path(self, name: str) -> str:
@@ -426,3 +644,76 @@ class DatasetStore:
             ).reshape((b - a, *info["row_shape"]))
         self.stats.read_seconds += time.perf_counter() - t0
         return out
+
+
+class StepView:
+    """Read-only view of one committed series step.
+
+    Resolves *logical* dataset names through the step's manifest entry to the
+    physical extents (which may be shared with other steps via dedup) and
+    delegates every read to the parent store — same read-handle cache, same
+    :class:`IOStats` — so the FE and tensor load engines work on any step of
+    a stream without modification.  Names outside the manifest fall through
+    untranslated (mixed stores).  The async commit log is masked: a step view
+    exists only for a committed step, whose integrity the manifest already
+    guarantees, so the per-entry log gating of the legacy layout must not
+    second-guess it.
+    """
+
+    mode = "r"
+
+    def __init__(self, store: DatasetStore, step: int,
+                 series: str = DEFAULT_SERIES):
+        self._store = store
+        self.series = series
+        self.step = int(step)
+        self._map = store.step_datasets(step, series)
+
+    @property
+    def stats(self) -> IOStats:
+        return self._store.stats
+
+    def _phys(self, name: str) -> str:
+        return self._map.get(name, name)
+
+    # --- metadata -------------------------------------------------------
+    def datasets(self) -> list[str]:
+        return sorted(self._map)
+
+    def has_dataset(self, name: str) -> bool:
+        return name in self._map or self._store.has_dataset(name)
+
+    def get_attrs(self, key: str) -> Any:
+        if key == COMMIT_LOG_KEY:
+            raise KeyError(key)
+        return self._store.get_attrs(key)
+
+    def has_attrs(self, key: str) -> bool:
+        if key == COMMIT_LOG_KEY:
+            return False
+        return self._store.has_attrs(key)
+
+    def rows(self, name: str) -> int:
+        return self._store.rows(self._phys(name))
+
+    def dtype(self, name: str) -> np.dtype:
+        return self._store.dtype(self._phys(name))
+
+    def row_shape(self, name: str) -> tuple[int, ...]:
+        return self._store.row_shape(self._phys(name))
+
+    # --- reads ----------------------------------------------------------
+    @hot_path
+    def read_rows(self, name: str, start: int, count: int) -> np.ndarray:
+        return self._store.read_rows(self._phys(name), start, count)
+
+    @hot_path
+    def read_plan(self, name: str, starts, counts) -> list[np.ndarray]:
+        return self._store.read_plan(self._phys(name), starts, counts)
+
+    @hot_path
+    def read_rows_at(self, name: str, row_idx: np.ndarray) -> np.ndarray:
+        return self._store.read_rows_at(self._phys(name), row_idx)
+
+    def close(self) -> None:
+        pass  # read handles belong to the parent store

@@ -160,6 +160,16 @@ class TensorCheckpoint:
         committed = self.steps()
         return committed[-1] if committed else None
 
+    def _read_store(self, step: int):
+        """Store view for reads of ``step``: a step committed to the series
+        manifest resolves through its :class:`StepView` (dedup-aliased
+        extents and all); legacy single-snapshot stores read plainly."""
+        st = self.store
+        has = getattr(st, "has_step", None)
+        if has is not None and has(step):
+            return st.step_view(step)
+        return st
+
     def _committed_epochs(self, meta: dict, step: int) -> dict:
         """The per-array epoch map of a *committed* step; a torn or unknown
         step raises ``ValueError`` (never a bare KeyError) so recovery code
@@ -181,6 +191,11 @@ class TensorCheckpoint:
             raise ValueError(
                 f"save_state: {len(per_rank)} rank states for a "
                 f"{N}-rank communicator")
+        pend = getattr(self.store, "pending_step", None)
+        if pend is not None and pend[1] != int(step):
+            raise ValueError(
+                f"save_state(step={step}) inside open series step {pend[1]} "
+                f"— the series step and the checkpoint step must agree")
         for spec in layout.arrays:
             self._save_array(spec, per_rank, comm, step, meta)
         # atomic commit: the step becomes visible only with this write
@@ -195,7 +210,8 @@ class TensorCheckpoint:
         fp = _ownership_fingerprint(per_rank, name)
         epochs = meta["epochs"].setdefault(
             name, {"current": -1, "fingerprints": {}})
-        if epochs["fingerprints"].get(fp) is None:
+        new_epoch = epochs["fingerprints"].get(fp) is None
+        if new_epoch:
             # new ownership epoch: write the section once (§2.2.7)
             epoch = epochs["current"] + 1
             epochs["fingerprints"][fp] = epoch
@@ -206,10 +222,17 @@ class TensorCheckpoint:
         sec = meta[f"section/{name}/e{epoch}"]
         d_base, e_base = sec["d_base"], sec["e_base"]
 
-        vec = f"{name}/e{epoch}/s{step}/vec"
-        crc = f"{name}/e{epoch}/s{step}/crc"
-        st.create(vec, spec.size, dtype=spec.dtype)
-        st.create(crc, sec["Eo"], dtype="int64")
+        key = f"{name}/e{epoch}"
+        if not new_epoch and st.pending_step is not None:
+            # the epoch fingerprint already proved the section unchanged:
+            # alias its extents into this step's manifest (legacy extents
+            # predating the series resolve through the plain-name fallback)
+            for part in ("G", "DOF", "OFF"):
+                if not st.has_dataset(f"{key}/{part}"):
+                    st.stage_carry(f"{key}/{part}")
+
+        vec = f"{key}/s{step}/vec"
+        crc = f"{key}/s{step}/crc"
         # chunk-major: one block / one crc per owned chunk across ALL ranks
         # (blocks come out of per-rank dicts — the input format — but no
         # per-rank numpy pass runs; the write is one plan per dataset, with
@@ -221,8 +244,10 @@ class TensorCheckpoint:
                     else np.empty(0, dtype=np_dtype(spec.dtype)))
         crc_flat = np.fromiter((zlib.crc32(b.tobytes()) for b in blocks),
                                dtype=_INT, count=len(blocks))
-        st.write_plan(vec, d_base, split_segments(vec_flat, sec["d_cnt"]))
-        st.write_plan(crc, e_base, split_segments(crc_flat, sec["e_cnt"]))
+        st.staged_write(vec, spec.size, (), spec.dtype, d_base,
+                        split_segments(vec_flat, sec["d_cnt"]))
+        st.staged_write(crc, sec["Eo"], (), "int64", e_base,
+                        split_segments(crc_flat, sec["e_cnt"]))
 
     @hot_path
     def _write_section(self, spec: ArraySpec, per_rank: PerRankState,
@@ -250,12 +275,11 @@ class TensorCheckpoint:
                 "once — replicas are ghosts)")
         off_flat = (np.cumsum(sizes_flat) - sizes_flat).astype(_INT)
         key = f"{name}/e{epoch}"
-        st.create(f"{key}/G", Eo, dtype="int64")
-        st.create(f"{key}/DOF", Eo, dtype="int64")
-        st.create(f"{key}/OFF", Eo, dtype="int64")
-        st.write_plan(f"{key}/G", e_base, ords)
-        st.write_plan(f"{key}/DOF", e_base, split_segments(sizes_flat, e_cnt))
-        st.write_plan(f"{key}/OFF", e_base, split_segments(off_flat, e_cnt))
+        st.staged_write(f"{key}/G", Eo, (), "int64", e_base, ords)
+        st.staged_write(f"{key}/DOF", Eo, (), "int64", e_base,
+                        split_segments(sizes_flat, e_cnt))
+        st.staged_write(f"{key}/OFF", Eo, (), "int64", e_base,
+                        split_segments(off_flat, e_cnt))
         meta[f"section/{name}/e{epoch}"] = {
             "Eo": Eo, "D": spec.size, "nranks": N,
             "e_base": e_base, "d_base": d_base,
@@ -278,12 +302,14 @@ class TensorCheckpoint:
                 f"load_state: plan covers {len(plan)} ranks on a "
                 f"{M}-rank communicator")
         out: list[dict[str, list[np.ndarray]]] = [dict() for _ in range(M)]
+        st = self._read_store(step)
         for spec in layout.arrays:
             regions = [p.get(spec.name, []) for p in plan]
             if not any(regions):
                 continue
             vals = self._load_array(spec, regions, comm,
-                                    int(step_epochs[spec.name]), step, meta)
+                                    int(step_epochs[spec.name]), step, meta,
+                                    st)
             for slot, regs, v in zip(out, regions, vals):
                 if regs:
                     slot[spec.name] = v
@@ -291,9 +317,9 @@ class TensorCheckpoint:
 
     @hot_path
     def _load_array(self, spec: ArraySpec, regions: list[list[Box]],
-                    comm: Comm, epoch: int, step: int, meta: dict
+                    comm: Comm, epoch: int, step: int, meta: dict, st
                     ) -> list[list[np.ndarray]]:
-        st, M, name = self.store, comm.nranks, spec.name
+        M, name = comm.nranks, spec.name
         grid = spec.grid
         sec = meta[f"section/{name}/e{epoch}"]
         Eo, D = sec["Eo"], sec["D"]
@@ -373,22 +399,23 @@ class TensorCheckpoint:
         meta = self.store.get_attrs("meta")
         step_epochs = self._committed_epochs(meta, step)
         M = comm.nranks
+        st = self._read_store(step)
         ok = True
         for spec in layout.arrays:
             epoch = int(step_epochs[spec.name])
             Eo = meta[f"section/{spec.name}/e{epoch}"]["Eo"]
             ea, en = partition_segments(Eo, M)
-            dof = np.concatenate(self.store.read_plan(
+            dof = np.concatenate(st.read_plan(
                 f"{spec.name}/e{epoch}/DOF", ea, en)).astype(_INT)
-            off = np.concatenate(self.store.read_plan(
+            off = np.concatenate(st.read_plan(
                 f"{spec.name}/e{epoch}/OFF", ea, en)).astype(_INT)
-            crc = np.concatenate(self.store.read_plan(
+            crc = np.concatenate(st.read_plan(
                 f"{spec.name}/e{epoch}/s{step}/crc", ea, en)).astype(_INT)
             # one coalesced plan over all chunk ranges: peak memory is
             # ~2x the dataset (run buffer + per-chunk copies) — the same
             # envelope as the load path, traded for R-independent read_calls
-            vals = self.store.read_plan(f"{spec.name}/e{epoch}/s{step}/vec",
-                                        off.tolist(), dof.tolist())
+            vals = st.read_plan(f"{spec.name}/e{epoch}/s{step}/vec",
+                                off.tolist(), dof.tolist())
             got = np.fromiter(
                 (zlib.crc32(np.ascontiguousarray(v).tobytes())
                  for v in vals), dtype=_INT, count=len(vals))

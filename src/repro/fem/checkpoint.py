@@ -80,7 +80,7 @@ from repro.core.star_forest import (
     partition_segments,
     partition_starts,
 )
-from repro.core.store import DatasetStore
+from repro.core.store import DEFAULT_SERIES, DatasetStore
 from repro.fem.element import Element
 from repro.fem.function import Function
 from repro.fem.plex import (
@@ -342,6 +342,15 @@ class FEMCheckpoint:
         return sorted(int(d[len(prefix):]) for d in self.store.datasets()
                       if d.startswith(prefix) and d[len(prefix):].isdigit())
 
+    def at_step(self, step: int,
+                series: str = DEFAULT_SERIES) -> "FEMCheckpoint":
+        """Checkpoint view of one committed series step — the
+        restart-from-step-k entry point.  ``load_mesh``/``load_function`` on
+        the returned checkpoint resolve every dataset through that step's
+        manifest (raising ``ValueError`` for torn/uncommitted steps), so a
+        stream saved on N ranks replays any step on M ranks."""
+        return FEMCheckpoint(self.store.step_view(step, series))
+
     # ------------------------------------------------------------- save mesh
     @hot_path
     def save_mesh(self, name: str, plexes: list[LocalPlex], comm: Comm,
@@ -381,11 +390,6 @@ class FEMCheckpoint:
         bases = comm.exscan_sum(chunk_totals)
         total_cones = bases[-1] + chunk_totals[-1] if N else 0
 
-        st.create(f"{name}/topology/dims", E, dtype="int64")
-        st.create(f"{name}/topology/cone_sizes", E, dtype="int64")
-        st.create(f"{name}/topology/cone_offsets", E + 1, dtype="int64")
-        st.create(f"{name}/topology/cones", total_cones, dtype="int64")
-        st.create(f"{name}/topology/entity_owner", E, dtype="int64")
         chunk_starts = [int(s) for s in starts[:N]]
         # the routed ids must tile [0, E) exactly (one owner per global
         # number) — checked flat over the concatenation, loud under -O
@@ -399,16 +403,21 @@ class FEMCheckpoint:
         offs_rows = split_segments(
             (np.cumsum(sizes_cat) - sizes_cat).astype(_INT),
             [len(s) for s in chunk_sizes])
-        # one coalesced plan per dataset — every rank's segment in one pass
-        st.write_plan(f"{name}/topology/dims", chunk_starts,
-                      [pay_c[r]["dims"] for r in range(N)])
-        st.write_plan(f"{name}/topology/cone_sizes", chunk_starts, chunk_sizes)
-        st.write_plan(f"{name}/topology/cone_offsets", chunk_starts + [E],
-                      offs_rows + [np.array([total_cones], dtype=_INT)])
-        st.write_plan(f"{name}/topology/entity_owner", chunk_starts,
-                      [pay_c[r]["owner"] for r in range(N)])
-        st.write_plan(f"{name}/topology/cones", bases,
-                      [pay_k[r]["cones"] for r in range(N)])
+        # one coalesced plan per dataset — every rank's segment in one pass.
+        # staged_write = create + write_plan outside a series step; inside
+        # one, the topology dedups against earlier steps (mesh rarely
+        # changes: hash hit ⇒ alias, zero bytes)
+        st.staged_write(f"{name}/topology/dims", E, (), "int64", chunk_starts,
+                        [pay_c[r]["dims"] for r in range(N)])
+        st.staged_write(f"{name}/topology/cone_sizes", E, (), "int64",
+                        chunk_starts, chunk_sizes)
+        st.staged_write(f"{name}/topology/cone_offsets", E + 1, (), "int64",
+                        chunk_starts + [E],
+                        offs_rows + [np.array([total_cones], dtype=_INT)])
+        st.staged_write(f"{name}/topology/entity_owner", E, (), "int64",
+                        chunk_starts, [pay_c[r]["owner"] for r in range(N)])
+        st.staged_write(f"{name}/topology/cones", total_cones, (), "int64",
+                        bases, [pay_k[r]["cones"] for r in range(N)])
 
         # ---- labels (DMLabelsView): one global-indexed row per label -------
         labels = labels or {}
@@ -416,9 +425,8 @@ class FEMCheckpoint:
             vals = [per_rank[r][plexes[r].owned].astype(_INT) for r in range(N)]
             ids_l, pay_l = _route_rows(comm, E, owned_ids,
                                        [{"v": vals[r]} for r in range(N)])
-            st.create(f"{name}/labels/{lname}", E, dtype="int64")
-            st.write_plan(f"{name}/labels/{lname}", chunk_starts,
-                          [pay_l[r]["v"] for r in range(N)])
+            st.staged_write(f"{name}/labels/{lname}", E, (), "int64",
+                            chunk_starts, [pay_l[r]["v"] for r in range(N)])
 
         st.set_attrs(f"{name}/meta", {
             "E": E, "dim": dim, "gdim": gdim, "nranks_saved": N,
@@ -462,18 +470,17 @@ class FEMCheckpoint:
         Eo = e_base[-1] + e_cnt[-1]
         D = d_base[-1] + d_cnt[-1]
 
-        if not st.has_dataset(f"{key}/G"):
-            st.create(f"{key}/G", Eo, dtype="int64")
-            st.create(f"{key}/DOF", Eo, dtype="int64")
-            st.create(f"{key}/OFF", Eo, dtype="int64")
+        # inside a series step the section must be (re-)staged every step so
+        # the step manifest aliases it — the hash dedup makes that free
+        if st.pending_step is not None or not st.has_dataset(f"{key}/G"):
             dof_rows = [sp.loc_dof[s] for sp, s in zip(spaces, sel)]
             off_rows = [
                 (d_base[r] + np.concatenate([[0], np.cumsum(dof_rows[r])])
                  [:len(dof_rows[r])]).astype(_INT) for r in range(N)]
-            st.write_plan(f"{key}/G", e_base,
-                          [sp.plex.loc_g[s] for sp, s in zip(spaces, sel)])
-            st.write_plan(f"{key}/DOF", e_base, dof_rows)
-            st.write_plan(f"{key}/OFF", e_base, off_rows)
+            st.staged_write(f"{key}/G", Eo, (), "int64", e_base,
+                            [sp.plex.loc_g[s] for sp, s in zip(spaces, sel)])
+            st.staged_write(f"{key}/DOF", Eo, (), "int64", e_base, dof_rows)
+            st.staged_write(f"{key}/OFF", Eo, (), "int64", e_base, off_rows)
             el = spaces[0].element
             st.set_attrs(f"{key}/meta", {
                 "D": D, "Eo": Eo, "family": el.family, "degree": el.degree,
@@ -481,12 +488,15 @@ class FEMCheckpoint:
             })
 
         # --- global DoF vector: one contiguous write per rank (§2.2.3) ------
+        if st.pending_step is not None and time_index is not None:
+            raise ValueError(
+                "save_function: inside a series step the store manifest "
+                "carries the step index; pass time_index=None")
         suffix = "" if time_index is None else f"_t{time_index}"
         vec_name = f"{mesh}/func/{fname}/vec{suffix}"
-        st.create(vec_name, D, dtype="float64")
-        st.write_plan(vec_name, d_base,
-                      [f.values[ragged_arange(sp.loc_off[s], sp.loc_dof[s])]
-                       for f, sp, s in zip(funcs, spaces, sel)])
+        st.staged_write(vec_name, D, (), "float64", d_base,
+                        [f.values[ragged_arange(sp.loc_off[s], sp.loc_dof[s])]
+                         for f, sp, s in zip(funcs, spaces, sel)])
         st.set_attrs(f"{mesh}/func/{fname}/meta", {"section": key})
 
     # ------------------------------------------------------------- load mesh

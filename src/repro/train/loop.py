@@ -80,29 +80,48 @@ class Trainer:
         if not steps:
             state = self.init_state_fn()
             return state, 0
-        last = steps[-1]
+        return self.restore_from(steps[-1])
+
+    def restore_from(self, step: int) -> tuple[dict, int]:
+        """Restart-from-step-k: load committed step ``step`` of the
+        checkpoint stream onto the CURRENT mesh/sharding.  A torn or unknown
+        step raises ``ValueError`` naming the committed prefix.  The stream
+        is append-only, so a run resumed from an earlier step can only save
+        steps beyond the last committed one."""
+        step = int(step)
         ck = self._open_ckpt("a")
+        if step not in ck.steps():
+            raise ValueError(
+                f"restore_from({step}): step is not committed "
+                f"(committed steps: {ck.steps()})")
         target = {k: jax.ShapeDtypeStruct(s.shape, s.dtype,
                                           sharding=self.step.state_shardings[k])
                   for k, s in self.step.abstract_state.items()}
-        state = load_jax(ck, target, last)
-        return state, last
+        state = load_jax(ck, target, step)
+        return state, step
 
     def _save(self, state: dict, step_idx: int) -> None:
         """Synchronous host snapshot; the store write is double-buffered
-        on a daemon thread when cfg.async_ckpt (the commit marker lands
-        last, so a crash mid-write falls back to the previous step)."""
+        on a daemon thread when cfg.async_ckpt.  Each save is one series
+        step bracketed by ``begin_step``/``commit_step``: the manifest
+        entry is the commit marker, so a crash mid-write falls back to the
+        previous committed step, and unchanged arrays dedup against the
+        stream (stored once, aliased in the manifest)."""
         ck = self._open_ckpt("a" if self._ckpt_exists() else "w")
         if not ck.store.has_attrs("layout"):
             ck.save_layout(layout_from_jax(state),
                            extra={"pipeline": self.data.state(step_idx)})
         if not self.cfg.async_ckpt:
+            ck.store.begin_step(step_idx)
             save_jax(ck, state, step_idx)
+            ck.store.commit_step()
             return
         if self._async is None or self._async.ckpt.store.root != ck.store.root:
             self._async = AsyncCheckpointer(ck, self.comm)
         per_rank = snapshot_jax(ck.layout(), state)
+        self._async.begin_step(step_idx)
         self._async.submit(per_rank, step_idx)
+        self._async.commit_step()
 
     def wait_for_writes(self) -> None:
         if self._async is not None:

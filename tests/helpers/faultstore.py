@@ -33,7 +33,7 @@ class SimulatedCrash(BaseException):
 
 class FaultStore(DatasetStore):
     mutating_ops = ("create", "write_rows", "write_plan", "write_rows_at",
-                    "set_attrs")
+                    "set_attrs", "commit_step")
 
     def __init__(self, root: str, mode: str = "w", *,
                  kill_after_ops: int | None = None, tear: bool = False,
@@ -76,6 +76,13 @@ class FaultStore(DatasetStore):
         if self._fatal():
             self._die()
         super().set_attrs(key, value)
+
+    def commit_step(self):
+        # the series commit is ONE internal atomic flush: dying here means
+        # the manifest entry never lands and the whole step stays invisible
+        if self._fatal():
+            self._die()
+        super().commit_step()
 
     def write_rows(self, name, start, data):
         if self._fatal():

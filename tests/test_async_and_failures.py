@@ -542,6 +542,86 @@ def test_fem_crash_point_grid(tmp_path_factory, case):
         _assert_fem_recoverable(root, n, m)
 
 
+# ------------------------------------- series crash-point grid (streams)
+def _run_series_seq(root, n, kill_after, tear):
+    """Layout + a 3-step SERIES (begin_step / submit / commit_step per
+    step) through the async pipeline over a FaultStore.  All store
+    mutations — including the manifest commit — run on the writer thread,
+    so the op counter covers the whole commit protocol."""
+    store = FaultStore(str(root), "w", kill_after_ops=kill_after, tear=tear)
+    ck = TensorCheckpoint(store)
+    ac = None
+    crashed = False
+    try:
+        ck.save_layout(LAYOUT)
+        ac = AsyncCheckpointer(ck, Comm(n))
+        for s in (0, 1, 2):
+            ac.begin_step(s)
+            ac.submit(_shards(_state(s), n), step=s)
+            ac.commit_step()
+        ac.wait()
+    except (SimulatedCrash, RuntimeError):
+        crashed = True
+    if ac is not None:
+        _drain(ac)
+    store.close()
+    return crashed, store.ops_seen
+
+
+def _assert_series_recoverable(root, m, states, nsteps=3):
+    """Reopen as a fresh process would: the manifest must list the EXACT
+    committed prefix, the last committed step must load bit-exact on M
+    ranks, and the first torn step must raise ValueError everywhere."""
+    store = DatasetStore(str(root), "r")
+    try:
+        booted = store.has_attrs("meta") and store.has_attrs("layout")
+        committed = store.steps()
+        assert committed == list(range(len(committed))), \
+            f"manifest lists {committed}: not the exact committed prefix"
+        if booted:
+            ck = TensorCheckpoint(store)
+            # commit log and manifest agree on what exists
+            assert ck.steps() == committed
+            if committed:
+                last = committed[-1]
+                _check(ck, last, states[last], M=m)
+                assert ck.verify_step(Comm(m), last)
+            if len(committed) < nsteps:
+                plan = [{s.name: canonical_regions(s.shape, m)[r]
+                         for s in LAYOUT.arrays} for r in range(m)]
+                with pytest.raises(ValueError, match="not committed"):
+                    ck.load_state(plan, Comm(m), step=len(committed))
+                with pytest.raises(ValueError, match="not committed"):
+                    store.step_datasets(len(committed))
+        else:
+            assert committed == []
+    finally:
+        store.close()
+
+
+SERIES_CRASH_GRID = [(n, m, tear) for n in (2, 3) for m in (1, 4)
+                     for tear in (False, True)]
+
+
+@settings(max_examples=len(SERIES_CRASH_GRID), deadline=None)
+@given(case=st.sampled_from(SERIES_CRASH_GRID))
+def test_series_crash_point_grid(tmp_path_factory, case):
+    """Crash after EVERY mutating store op (including the manifest commit
+    itself) across a 3-step series: ``steps()`` always reports the exact
+    committed prefix, the last committed step loads bit-exact on a
+    different rank count, and torn steps raise ValueError on load."""
+    n, m, tear = case
+    states = {s: _state(s) for s in (0, 1, 2)}
+    base = tmp_path_factory.mktemp("crash_s")
+    crashed, total = _run_series_seq(base / "probe", n, None, tear)
+    assert not crashed and total > 10
+    for k in range(total):
+        root = base / f"k{k}"
+        crashed, _ = _run_series_seq(root, n, k, tear)
+        assert crashed
+        _assert_series_recoverable(root, m, states)
+
+
 # -------------------------------------------------- readinto (satellite 2)
 def _read_rows_frombuffer(store, name, start, count):
     """The pre-PR-7 read path, kept as the equivalence oracle."""

@@ -254,6 +254,51 @@ def test_ckpt006_flags_op_under_while():
     assert _rules(_lint(bad)) == ["CKPT006"]
 
 
+def test_ckpt006_step_loop_with_derived_name_is_allowed():
+    """A loop over series steps addresses a different dataset each
+    iteration even when the name is computed in a separate assignment —
+    the derived name is tainted by the loop target."""
+    ok = """
+        @hot_path
+        def f(st, series, steps, starts, rows):
+            for k in steps:
+                phys = f"{series}/s{k}/vec"
+                st.write_plan(phys, starts, rows)
+                alias = phys + "/crc"
+                st.stage_carry(alias)
+    """
+    assert _lint(ok) == []
+
+
+def test_ckpt006_fixed_dataset_op_inside_step_loop_still_flags():
+    bad = """
+        @hot_path
+        def f(st, steps, starts, rows):
+            for k in steps:
+                phys = f"series/s{k}/vec"
+                st.write_plan(phys, starts, rows)
+                st.write_rows("fixed/ds", 0, rows)
+    """
+    assert _rules(_lint(bad)) == ["CKPT006"]
+
+
+def test_ckpt006_covers_series_staging_ops():
+    bad = """
+        @hot_path
+        def f(st, h, starts, rows):
+            for a, b in zip(starts, rows):
+                st.staged_write("ds", 8, (), "float64", [a], [b])
+    """
+    ok = """
+        @hot_path
+        def f(st, names, h, starts, rows):
+            for name in names:
+                st.staged_write(name, 8, (), "float64", starts, rows)
+    """
+    assert _rules(_lint(bad)) == ["CKPT006"]
+    assert _lint(ok) == []
+
+
 # ================================================ hot-path selection mechanics
 def test_registry_marks_functions_hot_by_path_suffix():
     bad = """

@@ -79,3 +79,81 @@ def test_fe_roundtrip_store_calls_are_rank_independent(tmp_path, R):
         f"read_calls {reads} at R={R} (M={M_LOAD}): expected "
         f"{EXPECTED_READ_CALLS} — a per-rank store loop has crept into a "
         f"load phase (or a phase/dataset was added; update deliberately)")
+
+
+# ------------------------------------------------ series per-step counts
+# A series step re-stages every dataset so its manifest aliases them, but
+# content-hash dedup turns unchanged datasets into zero store calls: step 0
+# pays the full save (same 13 writes as a plain snapshot — staging adds no
+# calls), every later step is exactly ONE write_plan (the mutated vec).
+# Loads split the same way: the mesh is loaded once from any step's view
+# (the 28 reads of the round-trip above), then each step costs only the
+# function reads (meta + section spans + vec) — no per-step re-reads of
+# deduped topology.  All constants are R-independent and S-linear.
+SERIES_STEPS = 3
+EXPECTED_STEP0_WRITE_CALLS = EXPECTED_WRITE_CALLS       # full save
+EXPECTED_LATER_STEP_WRITE_CALLS = 1                     # mutated vec only
+EXPECTED_MESH_READ_CALLS = 28
+EXPECTED_PER_STEP_READ_CALLS = 4
+assert EXPECTED_MESH_READ_CALLS + EXPECTED_PER_STEP_READ_CALLS \
+    == EXPECTED_READ_CALLS
+
+
+def _series_field(k):
+    def f(pts):
+        return np.sin(3 * pts[:, 0] + k) * (2 + np.cos(5 * pts[:, 1]))
+    return f
+
+
+def _series_counts(tmp, R):
+    mesh = tri_mesh(10, 10)
+    plexes, _, _ = distribute(mesh, R)
+    comm = Comm(R)
+    store = DatasetStore(str(tmp), "w")
+    ck = FEMCheckpoint(store)
+    writes = []
+    for k in range(SERIES_STEPS):
+        w0 = store.stats.write_calls
+        store.begin_step(k)
+        ck.save_mesh("m", plexes, comm)
+        spaces = [FunctionSpace(lp, Element("P", 2, "triangle"))
+                  for lp in plexes]
+        ck.save_function("m", "f",
+                         [interpolate(sp, _series_field(k)) for sp in spaces],
+                         comm)
+        store.commit_step()
+        writes.append(store.stats.write_calls - w0)
+
+    comm_l = Comm(M_LOAD)
+    r0 = store.stats.read_calls
+    loaded = ck.at_step(0).load_mesh("m", comm_l, partition="random", seed=1)
+    mesh_reads = store.stats.read_calls - r0
+    reads = []
+    from repro.fem import node_points
+    for k in range(SERIES_STEPS):
+        r0 = store.stats.read_calls
+        lsp, lfn = ck.at_step(k).load_function(loaded, "f", comm_l)
+        reads.append(store.stats.read_calls - r0)
+        for sp, f in zip(lsp, lfn):
+            np.testing.assert_allclose(f.values,
+                                       _series_field(k)(node_points(sp)))
+    store.close()
+    return writes, mesh_reads, reads
+
+
+@pytest.mark.parametrize("R", (4, 16))
+def test_series_per_step_store_calls_are_rank_independent(tmp_path, R):
+    writes, mesh_reads, reads = _series_counts(tmp_path, R)
+    assert writes[0] == EXPECTED_STEP0_WRITE_CALLS, (
+        f"step-0 write_calls {writes[0]} at R={R}: expected "
+        f"{EXPECTED_STEP0_WRITE_CALLS} — staging must not add store calls")
+    assert writes[1:] == [EXPECTED_LATER_STEP_WRITE_CALLS] * \
+        (SERIES_STEPS - 1), (
+        f"per-step write_calls {writes[1:]} at R={R}: expected "
+        f"{EXPECTED_LATER_STEP_WRITE_CALLS} per step — an unchanged dataset "
+        f"is being rewritten instead of deduped against the series")
+    assert mesh_reads == EXPECTED_MESH_READ_CALLS
+    assert reads == [EXPECTED_PER_STEP_READ_CALLS] * SERIES_STEPS, (
+        f"per-step read_calls {reads} at R={R} (M={M_LOAD}): expected "
+        f"{EXPECTED_PER_STEP_READ_CALLS} per step — a step view is "
+        f"re-reading deduped datasets")

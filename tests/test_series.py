@@ -1,0 +1,354 @@
+"""Timestep-series checkpoint streams: manifest commits, content-hash
+dedup, and restart-from-step-k on M != N.
+
+The store's series layer turns the one-snapshot-per-name layout into an
+append-only step series: ``begin_step``/``commit_step`` bracket a step,
+every dataset write inside is staged through the manifest with content-hash
+dedup (an unchanged dataset is stored once and aliased), and the manifest
+entry written by ``commit_step``'s single atomic flush IS the commit
+marker.  These tests pin the contract at three levels: raw store ops, the
+FE engine over the N-to-M grid, and the full 10-step acceptance scenario
+(mesh unchanged, function mutated, bit-exact restart from any committed k).
+"""
+
+import json
+import pathlib
+import time
+
+import numpy as np
+import pytest
+from helpers.hypothesis_shim import given, settings, strategies as st
+
+from repro.core.chunk_layout import ArraySpec, StateLayout
+from repro.core.comm import Comm
+from repro.core.resharder import restart_from_step, sweep_steps
+from repro.core.store import DatasetStore, content_hash
+from repro.core.tensor_ckpt import (
+    TensorCheckpoint, balanced_chunk_partition, shards_from_arrays,
+)
+from repro.distrib.sharding import canonical_regions
+from repro.fem import (
+    Element, FEMCheckpoint, FunctionSpace, distribute, interpolate,
+    node_points, tri_mesh,
+)
+
+DATA = pathlib.Path(__file__).parent / "data"
+
+
+# ============================================================ store series
+def test_store_series_dedup_and_alias(tmp_path):
+    """Byte-identical dataset between steps: stored ONCE (write bytes flat),
+    aliased in the later step's manifest; a mutated dataset gets a fresh
+    step-scoped extent."""
+    store = DatasetStore(str(tmp_path), "w")
+    rng = np.random.default_rng(0)
+    a, b = rng.normal(size=8), rng.normal(size=8)
+    store.begin_step(0)
+    store.staged_write("a", 8, (), "float64", [0], [a])
+    store.staged_write("b", 8, (), "float64", [0], [b])
+    store.commit_step()
+    assert store.steps() == [0]
+    w0 = store.stats.bytes_written
+    store.begin_step(1)
+    store.staged_write("a", 8, (), "float64", [0], [a])        # identical
+    store.staged_write("b", 8, (), "float64", [0], [b + 1.0])  # mutated
+    store.commit_step()
+    assert store.stats.bytes_written - w0 == b.nbytes, \
+        "unchanged dataset must dedup to zero new bytes"
+    m0, m1 = store.step_datasets(0), store.step_datasets(1)
+    assert m1["a"] == m0["a"], "unchanged dataset aliases the stored extent"
+    assert m1["b"] != m0["b"], "mutated dataset needs a fresh extent"
+    np.testing.assert_array_equal(store.step_view(0).read_rows("a", 0, 8), a)
+    np.testing.assert_array_equal(store.step_view(1).read_rows("a", 0, 8), a)
+    np.testing.assert_array_equal(store.step_view(0).read_rows("b", 0, 8), b)
+    np.testing.assert_array_equal(store.step_view(1).read_rows("b", 0, 8),
+                                  b + 1.0)
+    store.close()
+
+
+def test_store_series_survives_reopen(tmp_path):
+    store = DatasetStore(str(tmp_path), "w")
+    x = np.arange(6.0)
+    store.begin_step(3)
+    store.staged_write("x", 6, (), "float64", [0], [x])
+    store.commit_step()
+    store.close()
+    re = DatasetStore(str(tmp_path), "r")
+    assert re.steps() == [3]
+    np.testing.assert_array_equal(re.step_view(3).read_rows("x", 0, 6), x)
+    # the hash index survives too: an append after reopen still dedups
+    re.close()
+    wa = DatasetStore(str(tmp_path), "a")
+    w0 = wa.stats.bytes_written
+    wa.begin_step(4)
+    wa.staged_write("x", 6, (), "float64", [0], [x])
+    wa.commit_step()
+    assert wa.stats.bytes_written == w0
+    assert wa.step_datasets(4)["x"] == wa.step_datasets(3)["x"]
+    wa.close()
+
+
+def test_store_series_torn_step_invisible_and_append_only(tmp_path):
+    store = DatasetStore(str(tmp_path), "w")
+    store.begin_step(0)
+    store.staged_write("x", 4, (), "float64", [0], [np.arange(4.0)])
+    store.commit_step()
+    store.begin_step(1)
+    store.staged_write("x", 4, (), "float64", [0], [np.arange(4.0) + 9])
+    store.close()                      # "crash": commit_step never runs
+    re = DatasetStore(str(tmp_path), "r")
+    assert re.steps() == [0], "torn step must be invisible"
+    with pytest.raises(ValueError, match="not committed"):
+        re.step_datasets(1)
+    with pytest.raises(ValueError, match="not committed"):
+        re.step_view(1)
+    with pytest.raises(ValueError, match="read-only"):
+        re.begin_step(2)
+    re.close()
+    wa = DatasetStore(str(tmp_path), "a")
+    with pytest.raises(ValueError, match="append-only"):
+        wa.begin_step(0)               # committed steps are immutable
+    wa.begin_step(1)                   # re-appending the torn step is fine:
+    wa.staged_write("x", 4, (), "float64", [0], [np.arange(4.0) - 1])
+    wa.commit_step()                   # orphan extents are just overwritten
+    assert wa.steps() == [0, 1]
+    np.testing.assert_array_equal(wa.step_view(1).read_rows("x", 0, 4),
+                                  np.arange(4.0) - 1)
+    wa.close()
+
+
+def test_store_series_one_open_step_and_stage_carry(tmp_path):
+    store = DatasetStore(str(tmp_path), "w")
+    store.begin_step(0)
+    with pytest.raises(ValueError, match="still open"):
+        store.begin_step(1)
+    with pytest.raises(ValueError, match="no committed step"):
+        store.stage_carry("never/seen")
+    store.staged_write("y", 2, (), "float64", [0], [np.ones(2)])
+    store.commit_step()
+    with pytest.raises(ValueError, match="no series step is open"):
+        store.commit_step()
+    store.begin_step(1)
+    store.stage_carry("y")             # engine-asserted unchanged: alias
+    store.commit_step()
+    assert store.step_datasets(1)["y"] == store.step_datasets(0)["y"]
+    store.close()
+
+
+def test_content_hash_is_start_order_invariant():
+    a, b = np.arange(4.0), np.arange(4.0) + 10
+    h1 = content_hash([a, b], [0, 4])
+    h2 = content_hash([b, a], [4, 0])
+    assert h1 == h2
+    assert h1 != content_hash([a, b], [4, 0])
+
+
+# ===================================================== tensor series + M!=N
+_T_LAYOUT = StateLayout((
+    ArraySpec("mesh", (24, 4), "float64", (6, 4)),
+    ArraySpec("u", (24, 4), "float64", (6, 4)),
+))
+
+
+def _t_arrays(step, const):
+    rng = np.random.default_rng(100 + step)
+    return {"mesh": const, "u": rng.normal(size=(24, 4))}
+
+
+def _t_plan(m):
+    return [{s.name: canonical_regions(s.shape, m)[r]
+             for s in _T_LAYOUT.arrays} for r in range(m)]
+
+
+def _t_series(root, n, nsteps):
+    store = DatasetStore(str(root), "w")
+    ck = TensorCheckpoint(store)
+    ck.save_layout(_T_LAYOUT)
+    const = np.random.default_rng(7).normal(size=(24, 4))
+    own = balanced_chunk_partition(_T_LAYOUT, n)
+    states = []
+    for s in range(nsteps):
+        arrays = _t_arrays(s, const)
+        store.begin_step(s)
+        ck.save_state(shards_from_arrays(_T_LAYOUT, arrays, own), Comm(n), s)
+        store.commit_step()
+        states.append(arrays)
+    return store, ck, states
+
+
+def test_tensor_series_restart_and_sweep(tmp_path):
+    """restart_from_step / sweep_steps: a stream saved on N=3 replays any
+    committed step on M in {1, 2, 4}, bit-exact, with the constant array
+    stored once across the whole series."""
+    store, ck, states = _t_series(tmp_path, 3, 5)
+    # the constant array's logical vec name is step-qualified, but the
+    # content hash dedups it to ONE physical extent across the whole series
+    aliased = {store.step_datasets(s)[f"mesh/e0/s{s}/vec"] for s in range(5)}
+    assert len(aliased) == 1, "unchanged tensor array must alias one extent"
+    fresh = {store.step_datasets(s)[f"u/e0/s{s}/vec"] for s in range(5)}
+    assert len(fresh) == 5, "mutated tensor array needs a fresh extent/step"
+    for m in (1, 2, 4):
+        for k in (0, 2, 4):
+            out = restart_from_step(ck, k, _t_plan(m), Comm(m))
+            got = np.concatenate([a.reshape(-1, 4) for r in range(m)
+                                  for a in out[r]["u"]])
+            np.testing.assert_array_equal(got, states[k]["u"])
+    # selective post-processing sweep on small M: only "u" is loaded
+    seen = []
+    for s, out in sweep_steps(ck, _t_plan(2), Comm(2), arrays=["u"]):
+        assert all("mesh" not in r for r in out)
+        got = np.concatenate([a.reshape(-1, 4) for r in range(2)
+                              for a in out[r]["u"]])
+        np.testing.assert_array_equal(got, states[s]["u"])
+        seen.append(s)
+    assert seen == [0, 1, 2, 3, 4]
+    store.close()
+
+
+def test_tensor_series_step_mismatch_raises(tmp_path):
+    store = DatasetStore(str(tmp_path), "w")
+    ck = TensorCheckpoint(store)
+    ck.save_layout(_T_LAYOUT)
+    own = balanced_chunk_partition(_T_LAYOUT, 2)
+    shards = shards_from_arrays(_T_LAYOUT, _t_arrays(0, np.zeros((24, 4))),
+                                own)
+    store.begin_step(0)
+    with pytest.raises(ValueError, match="must agree"):
+        ck.save_state(shards, Comm(2), 5)
+    store.abort_step()
+    store.close()
+
+
+# ================================================= FE dedup grid (N-to-M)
+_F_GRID = [(n, m, part) for n in (2, 3) for m in (1, 4)
+           for part in ("contiguous", "random")]
+
+
+def _f_field(k):
+    def f(pts):
+        return np.sin(3 * pts[:, 0] + k) * (2 + np.cos(5 * pts[:, 1]))
+    return f
+
+
+@settings(max_examples=len(_F_GRID), deadline=None)
+@given(case=st.sampled_from(_F_GRID))
+def test_fem_series_dedup_grid(tmp_path_factory, case):
+    """3-step FE series on N: step 1 repeats step 0's function bit-for-bit
+    (must dedup to ZERO new bytes), step 2 mutates it (exactly one fresh vec
+    extent).  Every step round-trips bit-exact on M != N."""
+    n, m, part = case
+    mesh = tri_mesh(3, 2, seed=41)
+    plexes, _, _ = distribute(mesh, n, method=part, seed=n + 10 * m)
+    comm = Comm(n)
+    tmp = tmp_path_factory.mktemp("series_fem")
+    store = DatasetStore(str(tmp), "w")
+    ck = FEMCheckpoint(store)
+    fields = [_f_field(0), _f_field(0), _f_field(2)]
+    deltas = []
+    for k, fn in enumerate(fields):
+        b0 = store.stats.bytes_written
+        store.begin_step(k)
+        ck.save_mesh("m", plexes, comm)
+        spaces = [FunctionSpace(lp, Element("P", 2, "triangle"))
+                  for lp in plexes]
+        ck.save_function("m", "f", [interpolate(sp, fn) for sp in spaces],
+                         comm)
+        store.commit_step()
+        deltas.append(store.stats.bytes_written - b0)
+    key = ck._section_key("m", spaces[0])
+    D = store.get_attrs(f"{key}/meta")["D"]
+    assert deltas[1] == 0, "identical step must write zero bytes"
+    assert deltas[2] == D * 8, "mutated step writes exactly one fresh vec"
+    assert store.step_datasets(0)["m/func/f/vec"] == \
+        store.step_datasets(1)["m/func/f/vec"]
+    assert store.step_datasets(2)["m/func/f/vec"] != \
+        store.step_datasets(0)["m/func/f/vec"]
+
+    comm_m = Comm(m)
+    loaded = ck.at_step(2).load_mesh("m", comm_m, partition=part,
+                                     seed=m + 100 * n)
+    assert loaded.E == mesh.num_entities
+    for k, fn in enumerate(fields):
+        lsp, lfn = ck.at_step(k).load_function(loaded, "f", comm_m)
+        for sp, f in zip(lsp, lfn):
+            # bit-exact: identical IEEE values, not merely close
+            np.testing.assert_array_equal(f.values,
+                                          np.asarray(fn(node_points(sp))))
+    store.close()
+
+
+# ============================================= 10-step acceptance scenario
+def test_fem_ten_step_series_acceptance(tmp_path):
+    """The PR's acceptance scenario: a 10-step series saved on N=3 (mesh
+    unchanged, function mutated each step) restarts bit-exact from any
+    committed step k on M in {1, 2, 4}, stores the mesh topology exactly
+    once (per-step write bytes after step 0 are one vec), and a torn step
+    11 is invisible."""
+    N, S = 3, 10
+    mesh = tri_mesh(8, 8)
+    plexes, _, _ = distribute(mesh, N)
+    comm = Comm(N)
+    store = DatasetStore(str(tmp_path), "w")
+    ck = FEMCheckpoint(store)
+    deltas = []
+    for k in range(S):
+        b0 = store.stats.bytes_written
+        store.begin_step(k)
+        ck.save_mesh("m", plexes, comm)
+        spaces = [FunctionSpace(lp, Element("P", 2, "triangle"))
+                  for lp in plexes]
+        ck.save_function("m", "f",
+                         [interpolate(sp, _f_field(k)) for sp in spaces],
+                         comm)
+        store.commit_step()
+        deltas.append(store.stats.bytes_written - b0)
+    assert store.steps() == list(range(S))
+    key = ck._section_key("m", spaces[0])
+    D = store.get_attrs(f"{key}/meta")["D"]
+    assert all(d == D * 8 for d in deltas[1:]), (
+        f"per-step bytes {deltas[1:]} != one vec ({D * 8}): topology/"
+        f"section/coordinates must dedup to a single stored extent")
+    # every step's manifest aliases the SAME topology extents (stored once)
+    topo = [d for d in store.step_datasets(0) if "/topology/" in d]
+    assert topo
+    for name in topo:
+        assert len({store.step_datasets(k)[name] for k in range(S)}) == 1
+
+    for m in (1, 2, 4):
+        comm_m = Comm(m)
+        loaded = ck.at_step(S - 1).load_mesh("m", comm_m, partition="random",
+                                             seed=m)
+        for k in (0, 4, 9):
+            lsp, lfn = ck.at_step(k).load_function(loaded, "f", comm_m)
+            for sp, f in zip(lsp, lfn):
+                np.testing.assert_array_equal(
+                    f.values, np.asarray(_f_field(k)(node_points(sp))))
+
+    # torn step: staged but never committed -> invisible, load raises
+    store.begin_step(S)
+    ck.save_function("m", "f",
+                     [interpolate(sp, _f_field(S)) for sp in spaces], comm)
+    assert store.steps() == list(range(S))
+    with pytest.raises(ValueError, match="not committed"):
+        ck.at_step(S)
+    store.abort_step()
+    store.close()
+
+
+# ------------------------------------------- timed series smoke (fast tier)
+def test_series_append_smoke():
+    """Fast-tier guard on the series bench: wall time within 20x the
+    recorded baseline and the dedup ratio above its floor — only
+    order-of-magnitude regressions (e.g. dedup silently disabled, per-step
+    rewrites of constant data) trip it."""
+    from benchmarks.bench_checkpoint import series_append
+
+    base = json.loads((DATA / "bench_series_baseline.json").read_text())
+    t0 = time.perf_counter()
+    row = series_append(elems_per_rank=base["elems_per_rank"],
+                        steps=base["steps"])
+    wall = time.perf_counter() - t0
+    assert wall < max(20.0 * base["seconds"], 2.0), \
+        f"series append smoke took {wall:.2f}s vs baseline {base['seconds']}s"
+    assert row["dedup_ratio"] >= base["min_dedup_ratio"], \
+        f"dedup_ratio {row['dedup_ratio']} under {base['min_dedup_ratio']}"
