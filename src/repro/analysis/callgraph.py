@@ -1,0 +1,511 @@
+"""Whole-program call graph for ``ckptlint``.
+
+PR 6's checker was per-function: only code *lexically* inside an
+``@hot_path`` function (or a registry entry) was linted, so a helper
+factored out of a hot function silently escaped every rule.  This module
+closes that hole:
+
+* :class:`ProgramIndex` parses every linted file into one index — modules,
+  imports, classes (with ``self.<attr>`` type inference from ``__init__``
+  assignments and parameter annotations), functions — and resolves call
+  sites to indexed functions by name, import alias, ``self`` dispatch,
+  typed-attribute dispatch (``self.store.write_plan`` →
+  ``DatasetStore.write_plan``) and, conservatively, by globally-unique
+  method name;
+* :func:`propagate_hot` walks the graph from the lexically-hot roots and
+  returns, for every transitively-reachable function, the root it is
+  reachable from and the call chain — the rules then lint those helpers
+  too, reporting the hot root in the finding;
+* :class:`ScaleOracle` makes CKPT004's uint64 scale lattice
+  *interprocedural*: per-function summaries map parameter scales in to a
+  return scale out, so ``radix = my_radix_helper(...)`` is id-scale at the
+  call site and a neutrally-named helper parameter fed id-scale arguments
+  is id-scale inside the helper.
+
+Resolution is deliberately static and conservative: an unresolved call
+adds no edge (never a spurious finding), and the unique-method-name
+fallback is suppressed for common container/ndarray method names.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+
+from repro.analysis.rules import (
+    ID,
+    RANK,
+    SMALL,
+    UINT64,
+    UNKNOWN,
+    _ScaleEnv,
+    scan_scales,
+)
+
+FuncKey = tuple[str, str]          # (repo-relative path, qualname)
+
+#: method names too generic for the unique-name fallback — they belong to
+#: builtins / numpy / stdlib objects far more often than to indexed classes.
+_COMMON_METHODS = frozenset({
+    "append", "extend", "insert", "pop", "remove", "clear", "update", "add",
+    "get", "put", "items", "keys", "values", "setdefault", "copy", "sort",
+    "join", "split", "strip", "close", "open", "read", "write", "seek",
+    "flush", "reshape", "astype", "view", "mean", "sum", "max", "min",
+    "tobytes", "item", "tolist", "wait", "notify", "notify_all", "acquire",
+    "release", "start", "run", "encode", "decode", "format", "count",
+    "index", "replace", "startswith", "endswith",
+})
+
+
+# ------------------------------------------------------------------ indexing
+@dataclasses.dataclass
+class FuncEntry:
+    key: FuncKey
+    node: ast.AST                    # FunctionDef | AsyncFunctionDef
+    params: list[str]
+    class_name: str | None           # innermost enclosing class, if a method
+
+
+@dataclasses.dataclass
+class ClassEntry:
+    path: str
+    name: str
+    methods: dict[str, FuncKey]
+    attr_types: dict[str, str]       # self.<attr> -> class name
+
+
+@dataclasses.dataclass
+class ModuleEntry:
+    path: str
+    dotted: str
+    import_alias: dict[str, str]     # local alias -> dotted module
+    from_imports: dict[str, tuple[str, str]]   # local name -> (module, attr)
+    functions: dict[str, FuncKey]    # top-level name -> key
+    classes: dict[str, ClassEntry]
+
+
+def module_name(path: str) -> str:
+    """Dotted module name of a repo-relative POSIX path."""
+    p = path[:-3] if path.endswith(".py") else path
+    if p.endswith("/__init__"):
+        p = p[: -len("/__init__")]
+    parts = [s for s in p.split("/") if s]
+    if parts and parts[0] == "src":
+        parts = parts[1:]
+    return ".".join(parts)
+
+
+def _param_names(node: ast.AST) -> list[str]:
+    a = node.args
+    names = [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return names
+
+
+def _annotation_class(ann: ast.AST | None) -> str | None:
+    if isinstance(ann, ast.Name):
+        return ann.id
+    if isinstance(ann, ast.Attribute):
+        return ann.attr
+    if isinstance(ann, ast.Constant) and isinstance(ann.value, str):
+        return ann.value.split(".")[-1].strip("\"' ")
+    return None
+
+
+class ProgramIndex:
+    """Modules, classes and functions of the linted tree + resolved edges."""
+
+    def __init__(self) -> None:
+        self.modules: dict[str, ModuleEntry] = {}        # path -> entry
+        self.by_dotted: dict[str, ModuleEntry] = {}
+        self.functions: dict[FuncKey, FuncEntry] = {}
+        self.classes: list[ClassEntry] = []
+        # method name -> unique FuncKey, or None when ambiguous
+        self._method_by_name: dict[str, FuncKey | None] = {}
+        self._edges: dict[FuncKey, list[FuncKey]] | None = None
+
+    # -------------------------------------------------------------- building
+    def add_file(self, tree: ast.Module, path: str) -> None:
+        mod = ModuleEntry(path, module_name(path), {}, {}, {}, {})
+        self.modules[path] = mod
+        self.by_dotted[mod.dotted] = mod
+
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    mod.import_alias[alias.asname or
+                                     alias.name.split(".")[0]] = alias.name
+            elif isinstance(node, ast.ImportFrom):
+                base = node.module or ""
+                if node.level:                    # relative: resolve in-pkg
+                    pkg = mod.dotted.split(".")
+                    pkg = pkg[: len(pkg) - node.level + 1] \
+                        if path.endswith("__init__.py") \
+                        else pkg[: len(pkg) - node.level]
+                    base = ".".join(pkg + ([base] if base else []))
+                for alias in node.names:
+                    mod.from_imports[alias.asname or alias.name] = \
+                        (base, alias.name)
+
+        def visit(node: ast.AST, prefix: str, cls: ClassEntry | None) -> None:
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    qual = prefix + child.name
+                    key = (path, qual)
+                    entry = FuncEntry(key, child, _param_names(child),
+                                      cls.name if cls else None)
+                    self.functions[key] = entry
+                    if cls is not None and "." not in qual[len(cls.name) + 1:]:
+                        cls.methods[child.name] = key
+                    elif cls is None and prefix == "":
+                        mod.functions[child.name] = key
+                    visit(child, qual + ".", cls)
+                elif isinstance(child, ast.ClassDef):
+                    centry = ClassEntry(path, child.name, {}, {})
+                    mod.classes[child.name] = centry
+                    self.classes.append(centry)
+                    visit(child, prefix + child.name + ".", centry)
+                else:
+                    visit(child, prefix, cls)
+
+        visit(tree, "", None)
+        for centry in mod.classes.values():
+            self._infer_attr_types(mod, centry)
+
+    def _infer_attr_types(self, mod: ModuleEntry, cls: ClassEntry) -> None:
+        """``self.a = ClassName(...)`` / annotated-param assignments in any
+        method give ``self.a`` a static class for attribute dispatch."""
+        for mname, key in cls.methods.items():
+            fn = self.functions[key]
+            ann = {}
+            for p in (fn.node.args.posonlyargs + fn.node.args.args
+                      + fn.node.args.kwonlyargs):
+                got = _annotation_class(p.annotation)
+                if got:
+                    ann[p.arg] = got
+            for node in ast.walk(fn.node):
+                if not isinstance(node, ast.Assign):
+                    continue
+                for tgt in node.targets:
+                    if not (isinstance(tgt, ast.Attribute)
+                            and isinstance(tgt.value, ast.Name)
+                            and tgt.value.id == "self"):
+                        continue
+                    val = node.value
+                    tname = None
+                    if isinstance(val, ast.Call):
+                        f = val.func
+                        tname = f.id if isinstance(f, ast.Name) else (
+                            f.attr if isinstance(f, ast.Attribute) else None)
+                    elif isinstance(val, ast.Name):
+                        tname = ann.get(val.id)
+                    if tname and self._class_named(tname) is not None:
+                        cls.attr_types.setdefault(tgt.attr, tname)
+
+    def _class_named(self, name: str) -> ClassEntry | None:
+        hits = [c for c in self.classes if c.name == name]
+        return hits[0] if len(hits) == 1 else None
+
+    def finalize(self) -> None:
+        for cls in self.classes:
+            for mname, key in cls.methods.items():
+                if mname in self._method_by_name:
+                    self._method_by_name[mname] = None       # ambiguous
+                else:
+                    self._method_by_name[mname] = key
+
+    # ------------------------------------------------------------ resolution
+    def _lookup_dotted(self, dotted: str, attr: str) -> FuncKey | None:
+        m = self.by_dotted.get(dotted)
+        if m is None:
+            return None
+        if attr in m.functions:
+            return m.functions[attr]
+        if attr in m.classes:
+            return self._ctor_key(m.classes[attr])
+        if attr in m.from_imports:                  # re-export (one hop)
+            base, name = m.from_imports[attr]
+            mm = self.by_dotted.get(base)
+            if mm is not None and attr == name:
+                if name in mm.functions:
+                    return mm.functions[name]
+                if name in mm.classes:
+                    return self._ctor_key(mm.classes[name])
+        return None
+
+    def _ctor_key(self, cls: ClassEntry) -> FuncKey | None:
+        for name in ("__init__", "__post_init__"):
+            if name in cls.methods:
+                return cls.methods[name]
+        return None
+
+    def resolve_call(self, call: ast.Call, caller: FuncKey) -> list[FuncKey]:
+        """Indexed functions a call site may dispatch to ([] = unresolved)."""
+        path = caller[0]
+        mod = self.modules.get(path)
+        if mod is None:
+            return []
+        fentry = self.functions.get(caller)
+        cls = None
+        if fentry is not None and fentry.class_name is not None:
+            cls = mod.classes.get(fentry.class_name) \
+                or self._class_named(fentry.class_name)
+        f = call.func
+
+        if isinstance(f, ast.Name):
+            name = f.id
+            if name in mod.functions:
+                return [mod.functions[name]]
+            if name in mod.classes:
+                return self._ctor_targets(mod.classes[name])
+            if name in mod.from_imports:
+                base, attr = mod.from_imports[name]
+                got = self._lookup_dotted(base, attr)
+                if got is not None:
+                    entry = self.functions.get(got)
+                    if entry is not None and entry.node.name in (
+                            "__init__", "__post_init__"):
+                        owner = self._class_named(entry.class_name or "")
+                        if owner is not None:
+                            return self._ctor_targets(owner)
+                    return [got]
+            return []
+
+        if not isinstance(f, ast.Attribute):
+            return []
+        attr, recv = f.attr, f.value
+
+        # self.m(...) and self.a.m(...)
+        if isinstance(recv, ast.Name) and recv.id == "self" and cls:
+            if attr in cls.methods:
+                return [cls.methods[attr]]
+        recv_cls = self._receiver_class(recv, mod, cls, fentry)
+        if recv_cls is not None and attr in recv_cls.methods:
+            return [recv_cls.methods[attr]]
+
+        # module-alias call: np.f / repro.core.comm.f / imported-module attr
+        if isinstance(recv, ast.Name):
+            dotted = mod.import_alias.get(recv.id)
+            if dotted is None and recv.id in mod.from_imports:
+                base, name = mod.from_imports[recv.id]
+                if self.by_dotted.get(f"{base}.{name}") is not None:
+                    dotted = f"{base}.{name}"
+            if dotted is not None:
+                got = self._lookup_dotted(dotted, attr)
+                return [got] if got is not None else []
+
+        # unique-method-name fallback (never for common container methods)
+        if attr not in _COMMON_METHODS:
+            got = self._method_by_name.get(attr)
+            if got is not None:
+                return [got]
+        return []
+
+    def _ctor_targets(self, cls: ClassEntry) -> list[FuncKey]:
+        return [cls.methods[n] for n in ("__init__", "__post_init__")
+                if n in cls.methods]
+
+    def _receiver_class(self, recv: ast.AST, mod: ModuleEntry,
+                        cls: ClassEntry | None,
+                        fentry: FuncEntry | None) -> ClassEntry | None:
+        """Static class of a call receiver: ``self.<typed attr>``, an
+        annotated parameter, or a local constructed from an indexed class."""
+        if isinstance(recv, ast.Attribute) and \
+                isinstance(recv.value, ast.Name) and \
+                recv.value.id == "self" and cls is not None:
+            tname = cls.attr_types.get(recv.attr)
+            if tname:
+                return self._class_named(tname)
+        if isinstance(recv, ast.Name) and fentry is not None:
+            for p in (fentry.node.args.posonlyargs + fentry.node.args.args
+                      + fentry.node.args.kwonlyargs):
+                if p.arg == recv.id:
+                    tname = _annotation_class(p.annotation)
+                    if tname:
+                        return self._class_named(tname)
+        return None
+
+    # ----------------------------------------------------------------- edges
+    def edges(self) -> dict[FuncKey, list[FuncKey]]:
+        """caller -> callees (deduplicated, resolution-order stable)."""
+        if self._edges is not None:
+            return self._edges
+        out: dict[FuncKey, list[FuncKey]] = {}
+        for key, entry in self.functions.items():
+            seen: list[FuncKey] = []
+            for node in ast.walk(entry.node):
+                if isinstance(node, ast.Call):
+                    for tgt in self.resolve_call(node, key):
+                        if tgt != key and tgt not in seen:
+                            seen.append(tgt)
+            out[key] = seen
+        self._edges = out
+        return out
+
+
+def build_index(parsed: list[tuple[ast.Module, str]]) -> ProgramIndex:
+    index = ProgramIndex()
+    for tree, path in parsed:
+        index.add_file(tree, path)
+    index.finalize()
+    return index
+
+
+# ------------------------------------------------------------ hot reachability
+@dataclasses.dataclass
+class ReachInfo:
+    root: FuncKey                    # the lexically-hot function it came from
+    chain: tuple[str, ...]           # qualnames, root first
+
+    @property
+    def via(self) -> str:
+        return " -> ".join(self.chain)
+
+
+def propagate_hot(index: ProgramIndex,
+                  roots: list[FuncKey]) -> dict[FuncKey, ReachInfo]:
+    """BFS the call graph from the hot roots.
+
+    Returns reach info for every function reachable from a root, *excluding*
+    the roots themselves (they are linted lexically).  Shortest chain wins;
+    ties resolve to the first root in ``roots`` order — deterministic output
+    for stable baselines.
+    """
+    edges = index.edges()
+    reached: dict[FuncKey, ReachInfo] = {}
+    frontier: list[tuple[FuncKey, FuncKey, tuple[str, ...]]] = [
+        (r, r, (r[1],)) for r in roots]
+    root_set = set(roots)
+    while frontier:
+        nxt: list[tuple[FuncKey, FuncKey, tuple[str, ...]]] = []
+        for key, root, chain in frontier:
+            for callee in edges.get(key, ()):
+                if callee in root_set or callee in reached:
+                    continue
+                info = ReachInfo(root, chain + (callee[1],))
+                reached[callee] = info
+                nxt.append((callee, root, info.chain))
+        frontier = nxt
+    return reached
+
+
+# --------------------------------------------------- interprocedural CKPT004
+class ScaleOracle:
+    """Per-function scale summaries + hot-propagated parameter scales.
+
+    ``summaries[key]`` is the scale of the function's return value given its
+    own parameter-name heuristics; ``param_seeds[key][param]`` joins the
+    scales of arguments passed at reachable call sites.  Both feed
+    :class:`repro.analysis.rules._ScaleEnv` so CKPT004 sees through calls.
+    """
+
+    #: join order: the most dangerous incoming scale wins; UINT64 only
+    #: survives when nothing wider was ever passed.
+    _ORDER = (ID, RANK, SMALL, UINT64)
+
+    def __init__(self, index: ProgramIndex) -> None:
+        self.index = index
+        self.summaries: dict[FuncKey, str] = {}
+        self.param_seeds: dict[FuncKey, dict[str, str]] = {}
+
+    @classmethod
+    def join(cls, a: str, b: str) -> str:
+        if a == b:
+            return a
+        for want in cls._ORDER:
+            if want in (a, b):
+                return want
+        return UNKNOWN
+
+    # ---- rules.py hooks -------------------------------------------------
+    def call_scale(self, call: ast.Call, caller: FuncKey) -> str:
+        scales = [self.summaries.get(t, UNKNOWN)
+                  for t in self.index.resolve_call(call, caller)]
+        out = UNKNOWN
+        for s in scales:
+            out = s if out is UNKNOWN else self.join(out, s)
+        return out
+
+    def seeds_for(self, key: FuncKey) -> dict[str, str]:
+        return self.param_seeds.get(key, {})
+
+    def env_for(self, key: FuncKey) -> _ScaleEnv:
+        env = _ScaleEnv(
+            call_hook=lambda call, _k=key: self.call_scale(call, _k))
+        env.env.update(self.seeds_for(key))
+        return env
+
+    # ---- fixpoint -------------------------------------------------------
+    def _return_scale(self, key: FuncKey) -> str:
+        entry = self.index.functions[key]
+        env = self.env_for(key)
+        out = UNKNOWN
+
+        def on_return(node: ast.AST, env: _ScaleEnv) -> None:
+            nonlocal out
+            if isinstance(node, ast.Return) and node.value is not None:
+                s = env.scale(node.value)
+                out = s if out is UNKNOWN else self.join(out, s)
+
+        scan_scales(entry.node, env, on_stmt=on_return)
+        return out
+
+    def _collect_arg_seeds(self, key: FuncKey,
+                           seeds: dict[FuncKey, dict[str, str]]) -> None:
+        entry = self.index.functions[key]
+        env = self.env_for(key)
+
+        def on_call(call: ast.Call, env: _ScaleEnv) -> None:
+            for tgt in self.index.resolve_call(call, key):
+                centry = self.index.functions.get(tgt)
+                if centry is None:
+                    continue
+                params = centry.params
+                shift = 1 if centry.class_name is not None and \
+                    params[:1] == ["self"] else 0
+                tgt_seeds = seeds.setdefault(tgt, {})
+                for i, arg in enumerate(call.args):
+                    j = i + shift
+                    if j >= len(params) or isinstance(arg, ast.Starred):
+                        break
+                    s = env.scale(arg)
+                    if s is not UNKNOWN:
+                        tgt_seeds[params[j]] = self.join(
+                            tgt_seeds.get(params[j], s), s)
+                for kw in call.keywords:
+                    if kw.arg and kw.arg in params:
+                        s = env.scale(kw.value)
+                        if s is not UNKNOWN:
+                            tgt_seeds[kw.arg] = self.join(
+                                tgt_seeds.get(kw.arg, s), s)
+
+        scan_scales(entry.node, env, on_call=on_call)
+
+    def compute(self, checked: list[FuncKey], rounds: int = 3) -> None:
+        """Fixpoint over return summaries, then hot-path parameter seeds.
+
+        ``checked`` lists every function the rules will lint (hot roots +
+        reachable helpers): only their call sites contribute parameter
+        seeds, so a cold caller passing wild arguments cannot poison a hot
+        helper's lattice.
+        """
+        for _ in range(rounds):
+            changed = False
+            for key in self.index.functions:
+                got = self._return_scale(key)
+                if got != self.summaries.get(key, UNKNOWN):
+                    self.summaries[key] = got
+                    changed = True
+            if not changed:
+                break
+        for _ in range(rounds):
+            seeds: dict[FuncKey, dict[str, str]] = {}
+            for key in checked:
+                if key in self.index.functions:
+                    self._collect_arg_seeds(key, seeds)
+            if seeds == self.param_seeds:
+                break
+            self.param_seeds = seeds

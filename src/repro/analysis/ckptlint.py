@@ -1,4 +1,4 @@
-"""``ckptlint`` — rule engine, suppression/baseline handling, and CLI.
+"""``ckptlint`` — whole-program rule engine, suppressions/baseline, CLI.
 
 Run over the engine tree::
 
@@ -7,12 +7,25 @@ Run over the engine tree::
 Exit status 0 means every rule passed (after per-line suppressions and the
 committed baseline); 1 means unsuppressed findings were printed.
 
+Whole-program analysis (PR 9)
+    All linted files are parsed into one :class:`~repro.analysis.callgraph.
+    ProgramIndex`.  Hot-path *reachability* is propagated over the call
+    graph: a helper transitively called from a hot root is checked by the
+    hot-path rules too, its findings carrying the root call chain
+    (``... (hot via root -> helper)``).  Reachability stops at the
+    ``src/repro`` boundary — benchmark-local helpers remain governed by the
+    explicit registry (listing only the timed functions of a bench file is
+    a deliberate choice the call graph must not override).  CKPT004's scale
+    lattice is interprocedural: per-function return summaries and
+    hot-call-site argument scales flow through the same graph.
+
 Hot-path selection
     A function is linted as a hot path when it (a) carries the
     ``@hot_path`` decorator (detected syntactically, so decorate by that
     name), (b) is listed in ``repro.analysis.registry.HOT_PATH_REGISTRY``,
-    or (c) is lexically nested inside a hot function.  CKPT005 applies to
-    whole files regardless of hotness.
+    (c) is lexically nested inside a hot function, or (d) is reachable
+    from any of those through the call graph.  CKPT005 and the protocol /
+    lock rules (CKPT007–009) apply file-wide regardless of hotness.
 
 Suppressions
     Append ``# ckptlint: disable=CKPT004`` (comma-separate several rule
@@ -22,32 +35,52 @@ Suppressions
 Baseline
     ``baseline.json`` (next to this module) holds line-number-free keys
     ``path::rule::qualname`` for grandfathered findings.  It is kept
-    near-empty on purpose: fix findings instead of baselining them.
+    *empty* on purpose: fix findings instead of baselining them (a tier-1
+    test fails if the file becomes non-empty).
 """
 
 from __future__ import annotations
 
 import argparse
 import ast
+import dataclasses
 import json
 import re
 import sys
+import time
 from pathlib import Path
 
 from repro.analysis import registry as _registry
+from repro.analysis.callgraph import (
+    FuncKey,
+    ProgramIndex,
+    ReachInfo,
+    ScaleOracle,
+    build_index,
+    propagate_hot,
+)
+from repro.analysis.locks import check_locks
+from repro.analysis.locks import RULE_DOCS as _LOCK_DOCS
+from repro.analysis.protocol import check_protocol
+from repro.analysis.protocol import RULE_DOCS as _PROTO_DOCS
 from repro.analysis.rules import (
     ALL_RULES,
     Finding,
     FunctionInfo,
     HOT_RULES,
+    RULE_DOCS as _RULE_DOCS,
     _check_ckpt005,
 )
+
+#: rule id -> doc paragraph, aggregated across the rule modules; the CLI's
+#: ``--explain`` prints these and ROADMAP embeds the same text.
+RULE_DOCS: dict[str, str] = {**_RULE_DOCS, **_PROTO_DOCS, **_LOCK_DOCS}
 
 _SUPPRESS_RE = re.compile(r"#\s*ckptlint:\s*disable=([A-Z0-9_, ]+)")
 _DEFAULT_BASELINE = Path(__file__).with_name("baseline.json")
 
 
-# ----------------------------------------------------------- per-file engine
+# ----------------------------------------------------------- per-file collect
 def _has_hot_decorator(node: ast.AST) -> bool:
     for dec in getattr(node, "decorator_list", []):
         target = dec.func if isinstance(dec, ast.Call) else dec
@@ -103,43 +136,142 @@ def _suppressions(source: str) -> dict[int, set[str]]:
     return out
 
 
+# ---------------------------------------------------------------- the engine
+class _ProgramCtx:
+    """Whole-program context handed to the per-function rule checkers."""
+
+    def __init__(self, oracle: ScaleOracle) -> None:
+        self.oracle = oracle
+
+    def scale_env(self, path: str, qualname: str):
+        return self.oracle.env_for((path, qualname))
+
+
+@dataclasses.dataclass
+class ProgramInfo:
+    """Side-channel result of :func:`lint_program` (``--graph``/tests)."""
+    index: ProgramIndex
+    roots: list[FuncKey]
+    reach: dict[FuncKey, ReachInfo]
+    files: int = 0
+
+
+def _reach_in_scope(key: FuncKey) -> bool:
+    """Reachability closes the escape hatch in the *engine* tree only;
+    benchmark-local helpers stay governed by the explicit registry."""
+    return "src/repro/" in key[0] or key[0].startswith("repro/")
+
+
+def lint_program(sources: list[tuple[str, str]], *,
+                 registry: dict[str, tuple[str, ...]] | None = None,
+                 shims: frozenset[tuple[str, str]] | None = None,
+                 baseline: frozenset[str] = frozenset(),
+                 ) -> tuple[list[Finding], ProgramInfo]:
+    """Lint ``(source_text, repo_relative_path)`` pairs as ONE program.
+
+    Lexically-hot functions are checked exactly as in the per-function
+    engine; functions reachable from them through the call graph are then
+    checked too, their findings tagged with the root call chain.  The
+    file-wide passes (CKPT005, protocol CKPT007/008, locks CKPT009) run on
+    every file.  Returns the (suppression/baseline-filtered, sorted)
+    findings plus the program info used by ``--graph``.
+    """
+    registry = _registry.HOT_PATH_REGISTRY if registry is None else registry
+    shims = _registry.ALLTOALLV_SHIMS if shims is None else shims
+
+    per_file: dict[str, tuple[ast.Module, str, list[FunctionInfo],
+                              dict[int, str]]] = {}
+    parsed: list[tuple[ast.Module, str]] = []
+    for source, path in sources:
+        tree = ast.parse(source, filename=path)
+        funcs, owner = _collect(tree, path, registry)
+        per_file[path] = (tree, source, funcs, owner)
+        parsed.append((tree, path))
+
+    index = build_index(parsed)
+
+    # lexical hot roots: hot functions not nested inside a hot function
+    # (the parent's subtree walk already covers nested defs)
+    roots: list[FuncKey] = []
+    for path, (_tree, _src, funcs, owner) in per_file.items():
+        hot_quals = {f.qualname for f in funcs if f.hot}
+        for fn in funcs:
+            if fn.hot and owner.get(id(fn.node)) not in hot_quals:
+                roots.append((path, fn.qualname))
+
+    reach = {k: v for k, v in propagate_hot(index, roots).items()
+             if _reach_in_scope(k)}
+    checked: list[FuncKey] = roots + sorted(reach)
+    oracle = ScaleOracle(index)
+    oracle.compute(checked)
+    ctx = _ProgramCtx(oracle)
+
+    findings: list[Finding] = []
+    root_set = set(roots)
+    for path, (tree, source, funcs, owner) in per_file.items():
+        by_qual = {f.qualname: f for f in funcs}
+        file_checked = {q for (p, q) in checked if p == path}
+
+        def covered_by_ancestor(fn: FunctionInfo) -> bool:
+            # an enclosing checked function's subtree walk already covers us
+            qual = owner.get(id(fn.node))
+            while qual not in (None, "<module>"):
+                if qual in file_checked:
+                    return True
+                parent = by_qual.get(qual)
+                qual = owner.get(id(parent.node)) if parent else None
+            return False
+
+        file_findings: list[Finding] = []
+        for fn in funcs:
+            key = (path, fn.qualname)
+            if key in root_set and not covered_by_ancestor(fn):
+                for check in HOT_RULES.values():
+                    check(fn, path, file_findings, ctx)
+        for fn in funcs:
+            key = (path, fn.qualname)
+            info = reach.get(key)
+            if info is None or covered_by_ancestor(fn):
+                continue
+            hot_found: list[Finding] = []
+            for check in HOT_RULES.values():
+                check(fn, path, hot_found, ctx)
+            file_findings.extend(
+                dataclasses.replace(f, via=info.via) for f in hot_found)
+
+        def qualname_of(node: ast.AST) -> str:
+            return owner.get(id(node), "<module>")
+
+        # CKPT005 is file-wide; attribute findings to the *nearest*
+        # enclosing function for stable baseline keys
+        for sub in ast.walk(tree):
+            for child in ast.iter_child_nodes(sub):
+                owner.setdefault(id(child), owner.get(id(sub), "<module>"))
+        _check_ckpt005(tree, path, qualname_of, shims, file_findings)
+        check_protocol(funcs, path, file_findings)
+        check_locks(tree, path, funcs, index, file_findings)
+
+        sup = _suppressions(source)
+        findings.extend(f for f in file_findings
+                        if f.rule not in sup.get(f.line, ())
+                        and f.key not in baseline)
+
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    info = ProgramInfo(index, roots, reach, files=len(per_file))
+    return findings, info
+
+
 def lint_source(source: str, path: str, *,
                 registry: dict[str, tuple[str, ...]] | None = None,
                 shims: frozenset[tuple[str, str]] | None = None,
                 baseline: frozenset[str] = frozenset(),
                 ) -> list[Finding]:
-    """Lint one file's source text; ``path`` is its repo-relative POSIX
-    path (rule gating and registry matching key off it)."""
-    registry = _registry.HOT_PATH_REGISTRY if registry is None else registry
-    shims = _registry.ALLTOALLV_SHIMS if shims is None else shims
-    tree = ast.parse(source, filename=path)
-    funcs, owner = _collect(tree, path, registry)
-
-    findings: list[Finding] = []
-    # hot roots only: a hot function nested in a hot function is already
-    # covered by its parent's subtree walk
-    hot_quals = {f.qualname for f in funcs if f.hot}
-    for fn in funcs:
-        if fn.hot and owner.get(id(fn.node)) not in hot_quals:
-            for check in HOT_RULES.values():
-                check(fn, path, findings)
-
-    def qualname_of(node: ast.AST) -> str:
-        return owner.get(id(node), "<module>")
-
-    # CKPT005 is file-wide; attribute findings to the *nearest* enclosing
-    # function for stable baseline keys
-    for sub in ast.walk(tree):
-        for child in ast.iter_child_nodes(sub):
-            owner.setdefault(id(child), owner.get(id(sub), "<module>"))
-    _check_ckpt005(tree, path, qualname_of, shims, findings)
-
-    sup = _suppressions(source)
-    kept = [f for f in findings
-            if f.rule not in sup.get(f.line, ())
-            and f.key not in baseline]
-    kept.sort(key=lambda f: (f.path, f.line, f.rule))
-    return kept
+    """Lint one file's source text as a single-file program; ``path`` is
+    its repo-relative POSIX path (rule gating and registry matching key
+    off it)."""
+    findings, _ = lint_program([(source, path)], registry=registry,
+                               shims=shims, baseline=baseline)
+    return findings
 
 
 # ------------------------------------------------------------------ tree run
@@ -166,32 +298,94 @@ def load_baseline(path: Path | None) -> frozenset[str]:
     return frozenset(data)
 
 
+def gather_sources(paths: list[str | Path],
+                   root: str | Path | None = None
+                   ) -> list[tuple[str, str]]:
+    """``(source_text, repo_relative_path)`` for every .py under paths."""
+    root = Path.cwd() if root is None else Path(root)
+    out: list[tuple[str, str]] = []
+    for f in iter_py_files([Path(root, p) for p in paths]):
+        try:
+            rel = f.resolve().relative_to(root.resolve()).as_posix()
+        except ValueError:
+            rel = f.as_posix()
+        out.append((f.read_text(), rel))
+    return out
+
+
 def lint_paths(paths: list[str | Path], *, root: str | Path | None = None,
                baseline: frozenset[str] = frozenset(),
                registry: dict[str, tuple[str, ...]] | None = None,
                shims: frozenset[tuple[str, str]] | None = None,
                ) -> list[Finding]:
-    root = Path.cwd() if root is None else Path(root)
-    resolved = [Path(root, p) for p in paths]
-    findings: list[Finding] = []
-    for f in iter_py_files(resolved):
-        try:
-            rel = f.resolve().relative_to(root.resolve()).as_posix()
-        except ValueError:
-            rel = f.as_posix()
-        findings.extend(lint_source(
-            f.read_text(), rel, registry=registry, shims=shims,
-            baseline=baseline))
-    findings.sort(key=lambda x: (x.path, x.line, x.rule))
+    findings, _ = lint_program(gather_sources(paths, root),
+                               registry=registry, shims=shims,
+                               baseline=baseline)
     return findings
+
+
+# -------------------------------------------------------------------- output
+def findings_to_json(findings: list[Finding], *, files: int,
+                     elapsed_seconds: float) -> dict:
+    """The ``--json`` payload (round-tripped by the test suite)."""
+    return {
+        "tool": "ckptlint",
+        "rules": list(ALL_RULES),
+        "files": files,
+        "elapsed_seconds": elapsed_seconds,
+        "clean": not findings,
+        "findings": [f.as_dict() for f in findings],
+    }
+
+
+def findings_to_sarif(findings: list[Finding]) -> dict:
+    """Minimal SARIF 2.1.0 log for editor/CI integration."""
+    return {
+        "version": "2.1.0",
+        "$schema": ("https://raw.githubusercontent.com/oasis-tcs/"
+                    "sarif-spec/master/Schemata/sarif-schema-2.1.0.json"),
+        "runs": [{
+            "tool": {"driver": {
+                "name": "ckptlint",
+                "rules": [{"id": r,
+                           "shortDescription": {"text": RULE_DOCS[r]}}
+                          for r in ALL_RULES],
+            }},
+            "results": [{
+                "ruleId": f.rule,
+                "level": "error",
+                "message": {"text": f.message
+                            + (f" (hot via {f.via})" if f.via else "")},
+                "locations": [{"physicalLocation": {
+                    "artifactLocation": {"uri": f.path},
+                    "region": {"startLine": f.line},
+                }}],
+            } for f in findings],
+        }],
+    }
+
+
+def _print_graph(info: ProgramInfo, out) -> None:
+    edges = info.index.edges()
+    print("# call graph (caller -> callee)", file=out)
+    for key in sorted(edges):
+        for tgt in edges[key]:
+            print(f"{key[0]}::{key[1]} -> {tgt[0]}::{tgt[1]}", file=out)
+    print("# hot roots", file=out)
+    for key in sorted(info.roots):
+        print(f"{key[0]}::{key[1]}", file=out)
+    print("# hot-reachable (via chain)", file=out)
+    for key in sorted(info.reach):
+        print(f"{key[0]}::{key[1]}  via {info.reach[key].via}", file=out)
 
 
 # ----------------------------------------------------------------------- CLI
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis.ckptlint",
-        description="Enforce the rank-flat checkpoint engine's hot-path "
-                    "invariants (rules %s)." % ", ".join(ALL_RULES))
+        description="Enforce the rank-flat checkpoint engine's invariants "
+                    "(rules %s) with whole-program hot-path reachability."
+                    % ", ".join(ALL_RULES))
     ap.add_argument("paths", nargs="*", default=["src", "benchmarks"],
                     help="files or directories to lint "
                          "(default: src benchmarks)")
@@ -201,16 +395,45 @@ def main(argv: list[str] | None = None) -> int:
                     help="JSON baseline of grandfathered findings")
     ap.add_argument("--no-baseline", action="store_true",
                     help="ignore the baseline file")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="machine-readable JSON findings on stdout")
+    ap.add_argument("--sarif", action="store_true",
+                    help="SARIF 2.1.0 log on stdout")
+    ap.add_argument("--graph", action="store_true",
+                    help="dump the call graph, hot roots and reachability")
+    ap.add_argument("--explain", metavar="CKPTnnn",
+                    help="print one rule's documentation and exit")
     args = ap.parse_args(argv)
+
+    if args.explain:
+        rule = args.explain.upper()
+        if rule not in RULE_DOCS:
+            print(f"ckptlint: unknown rule {args.explain!r} "
+                  f"(known: {', '.join(ALL_RULES)})", file=sys.stderr)
+            return 2
+        print(f"{rule}: {RULE_DOCS[rule]}")
+        return 0
 
     baseline = frozenset() if args.no_baseline \
         else load_baseline(args.baseline)
-    findings = lint_paths(args.paths, root=args.root, baseline=baseline)
-    for f in findings:
-        print(f)
-    nfiles = len(iter_py_files([Path(args.root, p) for p in args.paths]))
+    t0 = time.perf_counter()
+    sources = gather_sources(args.paths, args.root)
+    findings, info = lint_program(sources, baseline=baseline)
+    elapsed = time.perf_counter() - t0
+
+    if args.graph:
+        _print_graph(info, sys.stdout)
+    if args.as_json:
+        print(json.dumps(findings_to_json(
+            findings, files=info.files, elapsed_seconds=elapsed), indent=2))
+    elif args.sarif:
+        print(json.dumps(findings_to_sarif(findings), indent=2))
+    else:
+        for f in findings:
+            print(f)
     status = "clean" if not findings else f"{len(findings)} finding(s)"
-    print(f"ckptlint: {status} across {nfiles} file(s)", file=sys.stderr)
+    print(f"ckptlint: {status} across {info.files} file(s) "
+          f"in {elapsed:.2f}s", file=sys.stderr)
     return 1 if findings else 0
 
 

@@ -1,0 +1,265 @@
+"""Async lock-discipline rule (CKPT009).
+
+``core/async_io.py`` is the one truly concurrent module: a daemon writer
+thread (spawned as ``threading.Thread(target=self._writer_loop)``) mutates
+object state that the caller-side API reads.  This pass is a static race
+detector specialised to that shape:
+
+1. **thread roots** are discovered lexically: every
+   ``threading.Thread(target=self.<m>)`` / ``Thread(target=self.<m>)``
+   argument names a writer-side root method;
+2. the **writer-side set** is the call-graph closure of those roots
+   restricted to the analysed file (e.g. ``_writer_loop`` →
+   ``_append_commit`` → ``StagingArena.release``);
+3. a ``(class, attr)`` pair is **shared** when some writer-side function
+   *writes* it (assignment, augmented assignment, or a mutating method call
+   such as ``.append``/``.pop``) and it is either accessed by a caller-side
+   method of the same class or has a public (non-underscore) name — public
+   attrs are the module's observable surface (``job_log``,
+   ``completed_steps``) and are read from the caller thread even when no
+   in-file method does;
+4. every access (read or write, either side) to a shared attr must sit
+   inside a ``with self._lock`` / ``with self._cond`` block, except in
+   ``__init__``/``__del__`` (single-threaded by construction).
+
+Lock attributes themselves (name contains ``lock``/``cond``) and attrs
+holding intrinsically thread-safe stdlib objects (``queue.Queue``,
+``threading.*`` — detected from their ``__init__`` construction) are never
+treated as shared data.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.callgraph import FuncKey, ProgramIndex
+from repro.analysis.rules import Finding, FunctionInfo
+
+#: method names that mutate their receiver in place
+_MUTATOR_METHODS = frozenset({
+    "append", "extend", "insert", "pop", "popleft", "remove", "clear",
+    "update", "add", "setdefault", "sort", "reverse", "discard",
+})
+#: constructor names whose instances are internally synchronized
+_THREADSAFE_CTORS = frozenset({
+    "Queue", "LifoQueue", "PriorityQueue", "SimpleQueue",
+    "Lock", "RLock", "Condition", "Semaphore", "BoundedSemaphore",
+    "Event", "Barrier",
+})
+
+
+def _is_lock_name(attr: str) -> bool:
+    base = attr.strip("_").lower()
+    return "lock" in base or "cond" in base
+
+
+def _self_attr(node: ast.AST) -> str | None:
+    """``self.<attr>`` (possibly through subscripts/chained attrs) -> attr."""
+    while isinstance(node, ast.Subscript):
+        node = node.value
+    if isinstance(node, ast.Attribute) and \
+            isinstance(node.value, ast.Name) and node.value.id == "self":
+        return node.attr
+    return None
+
+
+def _base_self_attr(node: ast.AST) -> str | None:
+    """Innermost ``self.<attr>`` of a chained target (``self.stats.n`` ->
+    ``stats``): a write through the chain mutates the shared object."""
+    while isinstance(node, (ast.Subscript, ast.Attribute)):
+        got = _self_attr(node)
+        if got is not None:
+            return got
+        node = node.value
+    return None
+
+
+class _Access:
+    __slots__ = ("attr", "line", "write", "locked")
+
+    def __init__(self, attr: str, line: int, write: bool, locked: bool):
+        self.attr, self.line = attr, line
+        self.write, self.locked = write, locked
+
+
+def _collect_accesses(fn_node: ast.AST) -> list[_Access]:
+    """Every ``self.<attr>`` touch in one function (nested defs excluded),
+    tagged write/read and whether a ``with self.<lock>`` encloses it."""
+    out: list[_Access] = []
+
+    def walk(node: ast.AST, locked: bool) -> None:
+        if isinstance(node, (ast.With, ast.AsyncWith)):
+            inner = locked
+            for item in node.items:
+                attr = _self_attr(item.context_expr)
+                call_recv = None
+                if isinstance(item.context_expr, ast.Call):
+                    call_recv = _self_attr(item.context_expr.func)
+                if (attr and _is_lock_name(attr)) or \
+                        (call_recv and _is_lock_name(call_recv)):
+                    inner = True
+                walk(item.context_expr, locked)
+            for child in node.body:
+                walk(child, inner)
+            return
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return                          # closures analysed separately
+        if isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+            targets = node.targets if isinstance(node, ast.Assign) \
+                else [node.target]
+            for tgt in targets:
+                attr = _base_self_attr(tgt)
+                if attr is not None:
+                    out.append(_Access(attr, tgt.lineno, True, locked))
+        if isinstance(node, ast.Call) and \
+                isinstance(node.func, ast.Attribute) and \
+                node.func.attr in _MUTATOR_METHODS:
+            attr = _base_self_attr(node.func.value)
+            if attr is not None:
+                out.append(_Access(attr, node.lineno, True, locked))
+        if isinstance(node, ast.Attribute) and \
+                isinstance(node.ctx, ast.Load):
+            attr = _self_attr(node)
+            if attr is not None:
+                out.append(_Access(attr, node.lineno, False, locked))
+        for child in ast.iter_child_nodes(node):
+            walk(child, locked)
+
+    for child in ast.iter_child_nodes(fn_node):
+        walk(child, False)
+    # a mutator call records both the write and the receiver's Load —
+    # collapse to one access per (attr, line), the write winning
+    best: dict[tuple[str, int], _Access] = {}
+    for acc in out:
+        cur = best.get((acc.attr, acc.line))
+        if cur is None or (acc.write and not cur.write):
+            best[(acc.attr, acc.line)] = acc
+    return [best[k] for k in sorted(best)]
+
+
+def _thread_roots(tree: ast.Module) -> set[str]:
+    """Method names passed as ``Thread(target=self.<m>)`` anywhere in file."""
+    roots: set[str] = set()
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        f = node.func
+        ctor = f.id if isinstance(f, ast.Name) else (
+            f.attr if isinstance(f, ast.Attribute) else "")
+        if ctor != "Thread":
+            continue
+        for kw in node.keywords:
+            if kw.arg == "target":
+                attr = _self_attr(kw.value)
+                if attr is not None:
+                    roots.add(attr)
+    return roots
+
+
+def _threadsafe_attrs(tree: ast.Module) -> set[str]:
+    """Attrs assigned a thread-safe stdlib object anywhere in the file."""
+    safe: set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            f = node.value.func
+            ctor = f.id if isinstance(f, ast.Name) else (
+                f.attr if isinstance(f, ast.Attribute) else "")
+            if ctor in _THREADSAFE_CTORS:
+                for tgt in node.targets:
+                    attr = _self_attr(tgt)
+                    if attr is not None:
+                        safe.add(attr)
+    return safe
+
+
+def check_locks(tree: ast.Module, path: str, funcs: list[FunctionInfo],
+                index: ProgramIndex, findings: list[Finding]) -> None:
+    """Run CKPT009 over one file (no-op unless it spawns threads)."""
+    roots = _thread_roots(tree)
+    if not roots:
+        return
+    safe_attrs = _threadsafe_attrs(tree)
+
+    # writer-side closure over the same-file call graph
+    edges = index.edges()
+    writer: set[FuncKey] = set()
+    frontier = [k for k in index.functions
+                if k[0] == path and k[1].split(".")[-1] in roots]
+    while frontier:
+        key = frontier.pop()
+        if key in writer:
+            continue
+        writer.add(key)
+        frontier.extend(t for t in edges.get(key, ()) if t[0] == path)
+
+    accesses: dict[str, list[_Access]] = {}     # qualname -> accesses
+    for fn in funcs:
+        accesses[fn.qualname] = _collect_accesses(fn.node)
+
+    def class_of(qualname: str) -> str | None:
+        entry = index.functions.get((path, qualname))
+        return entry.class_name if entry is not None else None
+
+    # (class, attr) written by writer-side code
+    writer_written: set[tuple[str, str]] = set()
+    for key in writer:
+        cls = class_of(key[1])
+        if cls is None:
+            continue
+        for acc in accesses.get(key[1], ()):
+            if acc.write:
+                writer_written.add((cls, acc.attr))
+
+    # (class, attr) touched by caller-side methods of the same class
+    caller_accessed: set[tuple[str, str]] = set()
+    for fn in funcs:
+        key = (path, fn.qualname)
+        if key in writer:
+            continue
+        name = fn.qualname.split(".")[-1]
+        if name in ("__init__", "__del__"):
+            continue
+        cls = class_of(fn.qualname)
+        if cls is None:
+            continue
+        for acc in accesses[fn.qualname]:
+            caller_accessed.add((cls, acc.attr))
+
+    shared = {
+        (cls, attr) for cls, attr in writer_written
+        if not _is_lock_name(attr) and attr not in safe_attrs
+        and ((cls, attr) in caller_accessed or not attr.startswith("_"))
+    }
+    if not shared:
+        return
+
+    for fn in funcs:
+        key = (path, fn.qualname)
+        name = fn.qualname.split(".")[-1]
+        if name in ("__init__", "__del__"):
+            continue
+        cls = class_of(fn.qualname)
+        if cls is None:
+            continue
+        side = "writer-thread" if key in writer else "caller-side"
+        for acc in accesses[fn.qualname]:
+            if (cls, acc.attr) in shared and not acc.locked:
+                kind = "write to" if acc.write else "read of"
+                findings.append(Finding(
+                    path, acc.line, "CKPT009", fn.qualname,
+                    f"unlocked {side} {kind} `self.{acc.attr}` — the attr "
+                    f"is mutated on the writer thread and observed from "
+                    f"the caller side, so every touch must hold "
+                    f"self._lock/self._cond"))
+
+
+RULE_DOCS = {
+    "CKPT009": (
+        "async lock discipline: in any module that spawns a thread "
+        "(Thread(target=self.m)), attributes written by writer-thread code "
+        "(the call-graph closure of the thread roots) and visible caller-"
+        "side — accessed by a public method or bearing a public name — "
+        "must only be read or written inside `with self._lock`/`self._cond` "
+        "blocks; __init__/__del__ are exempt (single-threaded), and "
+        "queue.Queue/threading.* attrs are intrinsically safe."),
+}

@@ -21,8 +21,12 @@ def hot_path(fn):
     """Mark ``fn`` as a checkpoint-engine hot path (zero runtime cost).
 
     The decorator returns ``fn`` unchanged apart from a marker attribute;
-    there is no wrapper, so call overhead, tracebacks, pickling and
-    ``inspect`` signatures are untouched.
+    there is no wrapper (stronger than ``functools.wraps``, which copies
+    metadata onto a new callable), so ``__name__``/``__qualname__``/
+    ``__doc__``/``__module__``, call overhead, tracebacks, pickling and
+    ``inspect`` signatures are untouched — the whole-program call graph and
+    ``--explain`` reporting rely on those surviving verbatim (pinned by
+    ``tests/test_ckptlint.py``).
     """
     try:
         setattr(fn, HOT_PATH_ATTR, True)

@@ -1,0 +1,303 @@
+"""Commit-protocol typestate rules (CKPT007, CKPT008).
+
+PR 7/8 established two crash-consistency protocols in prose + runtime crash
+grids; these passes check them statically:
+
+CKPT007  series-step typestate.  In any function that *opens* a series step
+         (calls ``<recv>.begin_step``), an abstract CLOSED/OPEN state is
+         tracked per receiver through the function's control flow:
+
+         * every ``stage_dataset``/``staged_write``/``stage_carry`` on that
+           receiver must be dominated by ``begin_step`` (no staging into a
+           closed store);
+         * every path to a ``return`` / fall-off-the-end exit must be
+           post-dominated by ``commit_step``/``abort_step`` (no leaking an
+           open step — the caller would see phantom staged state);
+         * while the step is open, no *plain* mutation
+           (``create``/``write_rows``/``write_rows_at``/``write_plan``/
+           ``set_attrs``) on that receiver: unstaged writes bypass the
+           manifest commit and stay visible even if the step is torn.
+
+         ``raise`` paths are exempt by design: an exception is the
+         simulated crash, and a crash legitimately leaves a torn step
+         (orphan extents, no manifest entry).  Functions that stage into a
+         step opened by their *caller* (the engine save paths) are not in
+         scope — the store's ``_require_pending`` enforces that half at
+         runtime.
+
+CKPT008  commit-marker-last.  In writer-job code, the append to the
+         ``async/commit_log`` attr (a call to ``_append_commit`` or a
+         ``set_attrs`` whose key is ``COMMIT_LOG_KEY`` / the literal
+         ``"async/commit_log"``) must be the lexically LAST store mutation
+         of the enclosing function — any later ``save_*``/``write_*``/
+         ``create``/``set_attrs``/staging call would be invisible to
+         recovery yet present on disk, silently widening the committed
+         state past the marker.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.rules import Finding, FunctionInfo
+
+#: ops that stage into the open step (must be dominated by begin_step)
+STAGING_OPS = frozenset({"stage_dataset", "staged_write", "stage_carry"})
+#: plain mutations that bypass staging (banned while a step is open)
+PLAIN_MUTATIONS = frozenset({
+    "create", "write_rows", "write_rows_at", "write_plan", "set_attrs",
+})
+#: every store-mutating method CKPT008 orders against the commit append
+STORE_MUTATIONS = (STAGING_OPS | PLAIN_MUTATIONS
+                   | {"begin_step", "commit_step", "abort_step",
+                      "save_state", "save_mesh", "save_function",
+                      "save_layout"})
+
+CLOSED, OPEN = "closed", "open"
+
+
+def _recv_key(node: ast.AST) -> str | None:
+    """Stable textual key of a call receiver (``self.store``, ``st``, ...)."""
+    try:
+        return ast.unparse(node)
+    except Exception:          # pragma: no cover — unparse is total on 3.10
+        return None
+
+
+def _method_call(node: ast.AST) -> tuple[str, str] | None:
+    """(receiver_key, method) for an ``<recv>.<method>(...)`` call."""
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute):
+        recv = _recv_key(node.func.value)
+        if recv is not None:
+            return recv, node.func.attr
+    return None
+
+
+def _calls_in_stmt(stmt: ast.AST):
+    """Method calls under one node, excluding nested function bodies.
+
+    For compound statements the caller must pass the *control expression*
+    (``If.test``, ``For.iter``, ``withitem.context_expr``) — passing the
+    whole statement would fold the branch bodies into one state."""
+    out = []
+
+    def walk(node: ast.AST) -> None:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return
+        got = _method_call(node)
+        if got is not None:
+            out.append((node, got[0], got[1]))
+        for child in ast.iter_child_nodes(node):
+            walk(child)
+
+    for child in ast.iter_child_nodes(stmt):
+        if not isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            walk(child)
+    got = _method_call(stmt)
+    if got is not None:
+        out.append((stmt, got[0], got[1]))
+    return out
+
+
+# ==================================================================== CKPT007
+class _StepState:
+    """Abstract per-receiver step state: a set of possible CLOSED/OPEN."""
+
+    def __init__(self, receivers) -> None:
+        self.state: dict[str, set[str]] = {r: {CLOSED} for r in receivers}
+        self.reachable = True
+
+    def copy(self) -> "_StepState":
+        out = _StepState(())
+        out.state = {r: set(s) for r, s in self.state.items()}
+        out.reachable = self.reachable
+        return out
+
+    def merge(self, other: "_StepState") -> None:
+        if not other.reachable:
+            return
+        if not self.reachable:
+            self.state = {r: set(s) for r, s in other.state.items()}
+            self.reachable = True
+            return
+        for r in self.state:
+            self.state[r] |= other.state[r]
+
+
+def _check_ckpt007(fn: FunctionInfo, path: str,
+                   findings: list[Finding]) -> None:
+    body: list[ast.stmt] = list(getattr(fn.node, "body", []))
+
+    # receivers this function opens a step on; others are caller-managed
+    openers: set[str] = set()
+    for stmt in body:
+        for _node, recv, meth in _calls_in_stmt(stmt):
+            if meth == "begin_step":
+                openers.add(recv)
+    if not openers:
+        return
+
+    def exit_check(st: _StepState, line: int) -> None:
+        for recv in sorted(openers):
+            if OPEN in st.state[recv]:
+                findings.append(Finding(
+                    path, line, "CKPT007", fn.qualname,
+                    f"begin_step on `{recv}` is not post-dominated by "
+                    f"commit_step/abort_step on this exit path — an open "
+                    f"step leaks phantom staged state to the caller"))
+                st.state[recv] = {CLOSED}      # report once per receiver/exit
+
+    def apply_calls(stmt: ast.stmt, st: _StepState) -> None:
+        for node, recv, meth in _calls_in_stmt(stmt):
+            if recv not in openers:
+                continue
+            s = st.state[recv]
+            if meth == "begin_step":
+                st.state[recv] = {OPEN}
+            elif meth in ("commit_step", "abort_step"):
+                st.state[recv] = {CLOSED}
+            elif meth in STAGING_OPS and CLOSED in s:
+                findings.append(Finding(
+                    path, node.lineno, "CKPT007", fn.qualname,
+                    f".{meth} on `{recv}` is not dominated by begin_step — "
+                    f"staging into a closed store raises at runtime; open "
+                    f"the step first"))
+                st.state[recv] = {OPEN}        # report once per site
+            elif meth in PLAIN_MUTATIONS and OPEN in s:
+                findings.append(Finding(
+                    path, node.lineno, "CKPT007", fn.qualname,
+                    f"plain .{meth} on `{recv}` between begin_step and "
+                    f"commit_step bypasses the staged manifest commit — "
+                    f"use staged_write/stage_dataset (attrs stage via the "
+                    f"open step) so a torn step leaves no trace"))
+
+    def walk_block(stmts: list[ast.stmt], st: _StepState) -> _StepState:
+        for stmt in stmts:
+            if not st.reachable:
+                return st
+            if isinstance(stmt, ast.Return):
+                apply_calls(stmt, st)
+                exit_check(st, stmt.lineno)
+                st.reachable = False
+            elif isinstance(stmt, (ast.Raise, ast.Continue, ast.Break)):
+                # raise == simulated crash: torn step allowed by contract;
+                # break/continue: joined conservatively at the loop merge
+                apply_calls(stmt, st)
+                st.reachable = False
+            elif isinstance(stmt, ast.If):
+                apply_calls(stmt.test, st)
+                then_st = walk_block(stmt.body, st.copy())
+                else_st = walk_block(stmt.orelse, st.copy())
+                then_st.merge(else_st)
+                st.state, st.reachable = then_st.state, then_st.reachable
+            elif isinstance(stmt, (ast.For, ast.AsyncFor, ast.While)):
+                apply_calls(stmt.iter if isinstance(stmt, (ast.For,
+                            ast.AsyncFor)) else stmt.test, st)
+                once = walk_block(stmt.body, st.copy())
+                once.merge(st)                 # 0 iterations
+                twice = walk_block(stmt.body, once.copy())
+                twice.merge(once)              # fixpoint for a 2-state lattice
+                twice = walk_block(stmt.orelse, twice)
+                st.state, st.reachable = twice.state, twice.reachable
+            elif isinstance(stmt, (ast.Try, getattr(ast, "TryStar", ast.Try))):
+                tried = walk_block(stmt.body, st.copy())
+                merged = tried.copy()
+                merged.merge(st)               # handlers see partial progress
+                for h in stmt.handlers:
+                    h_st = walk_block(h.body, merged.copy())
+                    tried.merge(h_st)
+                tried = walk_block(stmt.orelse, tried)
+                tried = walk_block(stmt.finalbody, tried)
+                st.state, st.reachable = tried.state, tried.reachable
+            elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+                for item in stmt.items:
+                    apply_calls(item.context_expr, st)
+                inner = walk_block(stmt.body, st)
+                st.state, st.reachable = inner.state, inner.reachable
+            elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                   ast.ClassDef)):
+                continue                       # separate analysis units
+            else:
+                apply_calls(stmt, st)
+        return st
+
+    final = walk_block(body, _StepState(openers))
+    if final.reachable:
+        end_line = body[-1].lineno if body else fn.node.lineno
+        exit_check(final, end_line)
+
+
+# ==================================================================== CKPT008
+def _is_commit_append(node: ast.Call) -> bool:
+    f = node.func
+    if isinstance(f, ast.Name) and f.id == "_append_commit":
+        return True
+    if isinstance(f, ast.Attribute) and f.attr == "_append_commit":
+        return True
+    if isinstance(f, ast.Attribute) and f.attr == "set_attrs" and node.args:
+        key = node.args[0]
+        if isinstance(key, ast.Name) and key.id == "COMMIT_LOG_KEY":
+            return True
+        if isinstance(key, ast.Constant) and key.value == "async/commit_log":
+            return True
+    return False
+
+
+def _check_ckpt008(fn: FunctionInfo, path: str,
+                   findings: list[Finding]) -> None:
+    appends: list[ast.Call] = []
+    mutations: list[tuple[ast.AST, str]] = []
+
+    def walk(node: ast.AST) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue                       # separate analysis units
+            if isinstance(child, ast.Call):
+                if _is_commit_append(child):
+                    appends.append(child)
+                else:
+                    got = _method_call(child)
+                    if got is not None and got[1] in STORE_MUTATIONS:
+                        mutations.append((child, got[1]))
+            walk(child)
+
+    walk(fn.node)
+    if not appends:
+        return
+    last_append = max(a.lineno for a in appends)
+    for node, meth in mutations:
+        if node.lineno > last_append:
+            findings.append(Finding(
+                path, node.lineno, "CKPT008", fn.qualname,
+                f"store mutation .{meth} after the async/commit_log append "
+                f"— the commit-marker entry must be the job's LAST store "
+                f"write or recovery sees a committed marker for "
+                f"partially-written state"))
+
+
+def check_protocol(funcs: list[FunctionInfo], path: str,
+                   findings: list[Finding]) -> None:
+    """Run CKPT007 + CKPT008 over every function of one file (file-wide,
+    like CKPT005: the commit protocol binds cold orchestration code too)."""
+    for fn in funcs:
+        _check_ckpt007(fn, path, findings)
+        _check_ckpt008(fn, path, findings)
+
+
+RULE_DOCS = {
+    "CKPT007": (
+        "series-step typestate: in any function that opens a series step "
+        "(calls begin_step), every stage_dataset/staged_write/stage_carry "
+        "on that receiver must be dominated by begin_step, every return "
+        "path must be post-dominated by commit_step/abort_step, and no "
+        "plain create/write_rows/write_rows_at/write_plan/set_attrs may "
+        "touch the receiver while the step is open (unstaged writes bypass "
+        "the atomic manifest commit). raise paths are exempt: an exception "
+        "is the simulated crash and legitimately leaves a torn step."),
+    "CKPT008": (
+        "commit-marker-last: the async/commit_log append (_append_commit "
+        "or set_attrs(COMMIT_LOG_KEY, ...)) must be the lexically last "
+        "store mutation of its function — a later save/write/create/"
+        "set_attrs would put bytes on disk that the already-visible commit "
+        "entry vouches for, breaking the PR 7 recovery contract."),
+}

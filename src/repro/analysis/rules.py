@@ -51,9 +51,10 @@ from collections.abc import Iterator
 class Finding:
     path: str          # repo-relative POSIX path
     line: int
-    rule: str          # "CKPT001" .. "CKPT006"
+    rule: str          # "CKPT001" .. "CKPT009"
     qualname: str      # enclosing function qualname, or "<module>"
     message: str
+    via: str = ""      # hot-root call chain for reachability findings
 
     @property
     def key(self) -> str:
@@ -61,8 +62,14 @@ class Finding:
         return f"{self.path}::{self.rule}::{self.qualname}"
 
     def __str__(self) -> str:
+        tail = f" (hot via {self.via})" if self.via else ""
         return (f"{self.path}:{self.line}: {self.rule} "
-                f"[{self.qualname}] {self.message}")
+                f"[{self.qualname}] {self.message}{tail}")
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["key"] = self.key
+        return d
 
 
 # --------------------------------------------------------------- name scales
@@ -151,10 +158,16 @@ def _is_uint64_ref(node: ast.AST) -> bool:
 
 class _ScaleEnv:
     """Operand-scale inference with dataflow over straight-line assignments
-    inside one function body (CKPT004)."""
+    inside one function body (CKPT004).
 
-    def __init__(self) -> None:
+    ``call_hook`` (optional) resolves the scale of a call expression the
+    local heuristics don't know — the whole-program pass plugs in
+    per-function return summaries here, making the lattice interprocedural.
+    """
+
+    def __init__(self, call_hook=None) -> None:
         self.env: dict[str, str] = {}
+        self.call_hook = call_hook
 
     def assign(self, target: ast.AST, value_scale: str) -> None:
         if isinstance(target, ast.Name):
@@ -198,6 +211,8 @@ class _ScaleEnv:
                     if want in scales:
                         return want
                 return UNKNOWN
+            if self.call_hook is not None:
+                return self.call_hook(node)
             return UNKNOWN
         if isinstance(node, ast.BinOp):
             left, right = self.scale(node.left), self.scale(node.right)
@@ -212,6 +227,46 @@ class _ScaleEnv:
                 return ID      # any product is as large as its widest factor
             return UNKNOWN
         return UNKNOWN
+
+
+def scan_scales(root: ast.AST, env: _ScaleEnv, *, on_stmt=None, on_call=None,
+                on_binop=None, skip_nested: bool = False) -> None:
+    """Statement-order scale dataflow shared by CKPT004 and the
+    whole-program :class:`repro.analysis.callgraph.ScaleOracle`.
+
+    Walks ``root`` recording assignments into ``env`` as encountered and
+    fires the hooks (each gets ``(node, env)``) at every statement / call /
+    binary op.  ``skip_nested`` stops at nested function definitions — the
+    summary passes analyse those as their own graph nodes, while the rule
+    pass keeps PR 6's behaviour of covering a hot function's whole subtree.
+    """
+
+    def walk(node: ast.AST) -> None:
+        if skip_nested and node is not root and \
+                isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return
+        if isinstance(node, ast.Assign):
+            val_scale = env.scale(node.value)
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Tuple) and \
+                        isinstance(node.value, ast.Tuple) and \
+                        len(tgt.elts) == len(node.value.elts):
+                    for t, v in zip(tgt.elts, node.value.elts):
+                        env.assign(t, env.scale(v))
+                else:
+                    env.assign(tgt, val_scale)
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            env.assign(node.target, env.scale(node.value))
+        if on_stmt is not None and isinstance(node, ast.stmt):
+            on_stmt(node, env)
+        if on_call is not None and isinstance(node, ast.Call):
+            on_call(node, env)
+        if on_binop is not None and isinstance(node, ast.BinOp):
+            on_binop(node, env)
+        for child in ast.iter_child_nodes(node):
+            walk(child)
+
+    walk(root)
 
 
 # ------------------------------------------------------------------- context
@@ -249,7 +304,7 @@ def _loop_targets(node: ast.AST) -> set[str]:
 
 # ----------------------------------------------------------------- the rules
 def _check_ckpt001(fn: FunctionInfo, path: str,
-                   findings: list[Finding]) -> None:
+                   findings: list[Finding], ctx=None) -> None:
     def rankish(expr: ast.AST) -> str | None:
         for name in _names_in(expr):
             if name in RANK_COUNT_NAMES:
@@ -289,7 +344,7 @@ def _check_ckpt001(fn: FunctionInfo, path: str,
 
 
 def _check_ckpt002(fn: FunctionInfo, path: str,
-                   findings: list[Finding]) -> None:
+                   findings: list[Finding], ctx=None) -> None:
     for node in ast.walk(fn.node):
         if isinstance(node, ast.Call) and \
                 isinstance(node.func, ast.Attribute) and \
@@ -304,7 +359,7 @@ def _check_ckpt002(fn: FunctionInfo, path: str,
 
 
 def _check_ckpt003(fn: FunctionInfo, path: str,
-                   findings: list[Finding]) -> None:
+                   findings: list[Finding], ctx=None) -> None:
     if not ("src/repro/core/" in path or "src/repro/fem/" in path):
         return
     for node in ast.walk(fn.node):
@@ -316,24 +371,11 @@ def _check_ckpt003(fn: FunctionInfo, path: str,
 
 
 def _check_ckpt004(fn: FunctionInfo, path: str,
-                   findings: list[Finding]) -> None:
-    env = _ScaleEnv()
+                   findings: list[Finding], ctx=None) -> None:
+    env = ctx.scale_env(path, fn.qualname) if ctx is not None else _ScaleEnv()
 
-    def walk(node: ast.AST) -> None:
-        # statement-order dataflow: record assignments as encountered
-        if isinstance(node, ast.Assign):
-            val_scale = env.scale(node.value)
-            for tgt in node.targets:
-                if isinstance(tgt, ast.Tuple) and \
-                        isinstance(node.value, ast.Tuple) and \
-                        len(tgt.elts) == len(node.value.elts):
-                    for t, v in zip(tgt.elts, node.value.elts):
-                        env.assign(t, env.scale(v))
-                else:
-                    env.assign(tgt, val_scale)
-        elif isinstance(node, ast.AnnAssign) and node.value is not None:
-            env.assign(node.target, env.scale(node.value))
-        if isinstance(node, ast.BinOp) and isinstance(node.op, ast.Mult):
+    def on_binop(node: ast.BinOp, env: _ScaleEnv) -> None:
+        if isinstance(node.op, ast.Mult):
             left, right = env.scale(node.left), env.scale(node.right)
             if left == ID and right == ID:
                 findings.append(Finding(
@@ -341,10 +383,8 @@ def _check_ckpt004(fn: FunctionInfo, path: str,
                     "product of two id-scale operands wraps int64 near "
                     "2**62 at paper scale — pack keys as rank*(E+1)+id "
                     "(rank_radix-guarded) or cast both via np.uint64"))
-        for child in ast.iter_child_nodes(node):
-            walk(child)
 
-    walk(fn.node)
+    scan_scales(fn.node, env, on_binop=on_binop)
 
 
 def _check_ckpt005(tree: ast.Module, path: str, qualname_of,
@@ -366,7 +406,7 @@ def _check_ckpt005(tree: ast.Module, path: str, qualname_of,
 
 
 def _check_ckpt006(fn: FunctionInfo, path: str,
-                   findings: list[Finding]) -> None:
+                   findings: list[Finding], ctx=None) -> None:
     ctx = _LoopCtx()
 
     def walk(node: ast.AST) -> None:
@@ -443,4 +483,44 @@ HOT_RULES = {
 }
 
 ALL_RULES = ("CKPT001", "CKPT002", "CKPT003", "CKPT004", "CKPT005",
-             "CKPT006")
+             "CKPT006", "CKPT007", "CKPT008", "CKPT009")
+
+#: one-paragraph rule docs; ``ckptlint --explain`` prints these and the
+#: ROADMAP "Static analysis" section embeds the same text (a test asserts
+#: they match, so checker and docs cannot drift).
+RULE_DOCS = {
+    "CKPT001": (
+        "no for/while loop over a rank/chunk index space (range(R), "
+        "range(nranks), range(num_chunks), enumerate(per_rank...)) on a "
+        "hot path — per-rank statement loops are the O(R) Python overhead "
+        "the rank-flat engine exists to avoid; comprehensions building "
+        "zero-copy views (split_segments) are the sanctioned idiom."),
+    "CKPT002": (
+        "no np.split/np.array_split on a hot path — quadratic Python list "
+        "handling of copies; use split_segments views off the flat "
+        "buffer."),
+    "CKPT003": (
+        "no assert in src/repro/{core,fem} hot paths — validation must "
+        "survive python -O, so raise ValueError/TypeError naming the "
+        "offending dataset/counts."),
+    "CKPT004": (
+        "no multiplication of two id-scale operands without an explicit "
+        "uint64 cast — (rank, id) keys pack as rank*(E+1)+id with one "
+        "rank-bounded factor because an id*id product wraps int64 near "
+        "2**62 at the paper's 8.2B-DoF scale; operand scale is inferred "
+        "from names with assignment dataflow, and the whole-program pass "
+        "makes it interprocedural (helper return scales and hot-call-site "
+        "argument scales flow through the call graph)."),
+    "CKPT005": (
+        "no call to the dense list-of-lists Comm.alltoallv outside the "
+        "ALLTOALLV_SHIMS allowlist (file-wide, not just hot paths) — the "
+        "dense shim is O(R^2) Python list handling; use alltoallv_packed / "
+        "neighbor_alltoallv."),
+    "CKPT006": (
+        "no DatasetStore data access (read_rows/write_rows families, "
+        "read_plan/write_plan, staged_write/stage_dataset/stage_carry) "
+        "inside a loop addressing the same dataset — one coalesced plan "
+        "per dataset per phase; loops whose dataset-name argument varies "
+        "with the loop variable (directly or via straight-line derivation) "
+        "are allowed."),
+}

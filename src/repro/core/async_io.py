@@ -161,10 +161,12 @@ class StagingArena:
 
     def buffer(self, slot: int) -> np.ndarray:
         """The slot's flat uint8 buffer, sized to the acquired snapshot."""
-        slab = self._slabs[slot]
-        if slab is None:
-            raise ValueError(f"StagingArena: slot {slot} was never acquired")
-        return slab[:self._used[slot]]
+        with self._cond:       # _used is reset by the writer-side release
+            slab = self._slabs[slot]
+            if slab is None:
+                raise ValueError(
+                    f"StagingArena: slot {slot} was never acquired")
+            return slab[:self._used[slot]]
 
     def release(self, slot: int) -> None:
         with self._cond:
@@ -383,7 +385,9 @@ class AsyncCheckpointer:
         self._series_label = f"s{int(step)}"
 
         def run(step=int(step)):
-            self.store.begin_step(step, series)
+            # the matching commit_step is its own queued writer job, so the
+            # open step intentionally outlives this job's function scope
+            self.store.begin_step(step, series)  # ckptlint: disable=CKPT007
 
         self._enqueue(_Job(run, None, f"begin/{self._series_label}"))
 
@@ -426,16 +430,20 @@ class AsyncCheckpointer:
             try:
                 # after a failure the simulated process is dead: skip any
                 # queued jobs so no later step can commit past the crash
-                if self._error is None:
+                with self._lock:
+                    failed = self._error is not None
+                if not failed:
                     t0 = time.perf_counter()
                     job.run()
                     if job.commit is not None:
                         _append_commit(self.store, job.commit)
                     t1 = time.perf_counter()
-                    self.job_log.append({"label": job.label, "t0": t0,
-                                         "t1": t1, "seconds": t1 - t0})
-                    if job.step is not None:
-                        self.completed_steps.append(job.step)
+                    with self._lock:
+                        self.job_log.append(
+                            {"label": job.label, "t0": t0,
+                             "t1": t1, "seconds": t1 - t0})
+                        if job.step is not None:
+                            self.completed_steps.append(job.step)
             except BaseException as e:   # noqa: BLE001 — surfaced on submit/wait
                 with self._lock:
                     if self._error is None:

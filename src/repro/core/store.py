@@ -394,7 +394,9 @@ class DatasetStore:
                 "dtype": str(np_dtype(dtype))}
         self._meta["datasets"][name] = info
         self._invalidate_reader(name)
-        nbytes = self._row_nbytes(info) * int(rows)
+        # both factors are Python ints (arbitrary precision — no int64
+        # wrap), only the *stored* offsets are numpy-typed
+        nbytes = self._row_nbytes(info) * int(rows)  # ckptlint: disable=CKPT004
         with open(self._path(name), "wb") as f:
             if nbytes:
                 f.truncate(nbytes)

@@ -126,12 +126,13 @@ def shards_from_arrays(layout: StateLayout, arrays: dict[str, np.ndarray],
 
 
 def _ownership_fingerprint(per_rank: PerRankState, name: str) -> str:
-    h = hashlib.sha256()
-    for r, st in enumerate(per_rank):
-        ords = st[name].ordinals if name in st else np.empty(0, _INT)
-        h.update(np.int64(r).tobytes())
-        h.update(ords.tobytes())
-    return h.hexdigest()[:16]
+    # one digest over the concatenated (rank, ordinals) byte stream — the
+    # same bytes the old per-rank update loop fed, so digests are unchanged
+    blobs = [np.int64(r).tobytes()
+             + (st[name].ordinals if name in st
+                else np.empty(0, _INT)).tobytes()
+             for r, st in enumerate(per_rank)]
+    return hashlib.sha256(b"".join(blobs)).hexdigest()[:16]
 
 
 # ================================================================== the file

@@ -149,12 +149,7 @@ def canonical_regions(shape: Sequence[int], nranks: int) -> list[list[Box]]:
         return [[] for _ in range(nranks)]
     lead = shape[0]
     starts = partition_starts(lead, nranks)
-    out = []
-    for m in range(nranks):
-        a, b = int(starts[m]), int(starts[m + 1])
-        if a == b:
-            out.append([])
-        else:
-            out.append([Box((a,) + (0,) * (len(shape) - 1),
-                            (b,) + tuple(shape[1:]))])
-    return out
+    return [[] if int(starts[m]) == int(starts[m + 1])
+            else [Box((int(starts[m]),) + (0,) * (len(shape) - 1),
+                      (int(starts[m + 1]),) + tuple(shape[1:]))]
+            for m in range(nranks)]

@@ -32,11 +32,18 @@ class Element:
     cell: str       # "interval" | "triangle"
 
     def __post_init__(self):
-        assert self.family in ("P", "DP")
-        assert self.cell in ("interval", "triangle")
-        assert 0 <= self.degree <= 8
-        if self.family == "P":
-            assert self.degree >= 1, "P0 is not continuous; use DP0"
+        if self.family not in ("P", "DP"):
+            raise ValueError(f"Element: unknown family {self.family!r} "
+                             f"(want 'P' or 'DP')")
+        if self.cell not in ("interval", "triangle"):
+            raise ValueError(f"Element: unknown cell {self.cell!r} "
+                             f"(want 'interval' or 'triangle')")
+        if not 0 <= self.degree <= 8:
+            raise ValueError(f"Element: degree {self.degree} out of the "
+                             f"supported range [0, 8]")
+        if self.family == "P" and self.degree < 1:
+            raise ValueError(f"Element: P{self.degree} is not continuous; "
+                             f"use DP{self.degree}")
 
     @property
     def dim(self) -> int:

@@ -27,7 +27,10 @@ class Function:
     values: np.ndarray               # [ndof_local] float64
 
     def __post_init__(self):
-        assert self.values.shape == (self.space.ndof_local,)
+        if self.values.shape != (self.space.ndof_local,):
+            raise ValueError(
+                f"Function: values shape {self.values.shape} does not "
+                f"match the space's ({self.space.ndof_local},) local DoFs")
 
     def entity_values(self, i_local: int) -> np.ndarray:
         off, n = self.space.loc_off[i_local], self.space.loc_dof[i_local]
@@ -74,5 +77,9 @@ def interpolate(space: FunctionSpace, fn) -> Function:
     vals = np.asarray(fn(pts), dtype=np.float64)
     if space.bs == 1 and vals.ndim == 1:
         vals = vals[:, None]
-    assert vals.shape == (pts.shape[0], space.bs)
+    if vals.shape != (pts.shape[0], space.bs):
+        raise ValueError(
+            f"interpolate: fn returned shape {vals.shape}, expected "
+            f"({pts.shape[0]}, {space.bs}) for {pts.shape[0]} node points "
+            f"at block size {space.bs}")
     return Function(space, vals.reshape(-1))

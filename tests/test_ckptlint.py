@@ -1,29 +1,41 @@
 """Gate + unit tests for the ``ckptlint`` static analyser.
 
-Two surfaces:
+Three surfaces:
 
   1. **the tier-1 gate**: the committed tree must lint clean over ``src``
      and ``benchmarks`` (with the committed baseline), and a violation
      seeded into a hot engine file must fail — proving the gate is live,
      not vacuously green;
-  2. **per-rule mechanics**: every rule CKPT001–CKPT006 has a violating
+  2. **per-rule mechanics**: every rule CKPT001–CKPT009 has a violating
      snippet and a compliant twin, plus the suppression / baseline /
-     hot-path-selection machinery (decorator, registry, nesting).
+     hot-path-selection machinery (decorator, registry, nesting);
+  3. **whole-program mechanics** (PR 9): call-graph hot-path
+     reachability (same-file, cross-file, method dispatch, benchmark
+     scoping), the interprocedural CKPT004 lattice, and the CLI's
+     ``--json``/``--sarif``/``--graph``/``--explain`` surfaces (the
+     latter pinned against ROADMAP so docs and checker cannot drift).
 
 Snippets are only *parsed* (``lint_source`` is pure AST analysis), so they
 may reference undefined names freely.
 """
 
+import json
 import pathlib
 import textwrap
+import time
 
 from repro.analysis.ckptlint import (
     _DEFAULT_BASELINE,
+    RULE_DOCS,
+    findings_to_json,
+    gather_sources,
     lint_paths,
+    lint_program,
     lint_source,
     load_baseline,
     main,
 )
+from repro.analysis.rules import ALL_RULES
 
 _REPO = pathlib.Path(__file__).resolve().parents[1]
 _CORE = "src/repro/core/fake.py"          # virtual path inside the gated tree
@@ -363,3 +375,471 @@ def test_baseline_filters_by_line_free_key():
     [finding] = _lint(bad)
     assert finding.key == f"{_CORE}::CKPT003::f"
     assert _lint(bad, baseline=frozenset({finding.key})) == []
+
+
+def test_committed_baseline_file_stays_empty():
+    """PR 9 drift check: grandfathering is banned — the committed baseline
+    must be the empty list (fix findings, don't baseline them)."""
+    assert _DEFAULT_BASELINE.exists()
+    assert json.loads(_DEFAULT_BASELINE.read_text()) == []
+
+
+# =============================================== hot-path reachability (PR 9)
+def test_reachable_helper_is_checked_and_reports_the_hot_root():
+    src = """
+        @hot_path
+        def root(per_rank, R):
+            return helper(per_rank, R)
+
+        def helper(per_rank, R):
+            for r in range(R):
+                use(per_rank[r])
+    """
+    [finding] = _lint(src)
+    assert finding.rule == "CKPT001"
+    assert finding.qualname == "helper"
+    assert finding.via == "root -> helper"
+    assert "hot via root -> helper" in str(finding)
+
+
+def test_reachability_follows_cross_file_imports():
+    a = textwrap.dedent("""
+        from repro.core.fakeb import helper
+
+        @hot_path
+        def root(per_rank, R):
+            return helper(per_rank, R)
+    """)
+    b = textwrap.dedent("""
+        def helper(per_rank, R):
+            for r in range(R):
+                use(per_rank[r])
+    """)
+    findings, info = lint_program([(a, "src/repro/core/fakea.py"),
+                                   (b, "src/repro/core/fakeb.py")])
+    [finding] = findings
+    assert finding.rule == "CKPT001"
+    assert finding.path == "src/repro/core/fakeb.py"
+    assert finding.via == "root -> helper"
+    assert ("src/repro/core/fakeb.py", "helper") in info.reach
+
+
+def test_reachability_resolves_self_method_dispatch():
+    src = """
+        class Engine:
+            @hot_path
+            def save(self, per_rank, R):
+                self._split(per_rank, R)
+
+            def _split(self, per_rank, R):
+                for r in range(R):
+                    use(per_rank[r])
+    """
+    [finding] = _lint(src)
+    assert finding.rule == "CKPT001"
+    assert finding.qualname == "Engine._split"
+    assert finding.via == "Engine.save -> Engine._split"
+
+
+def test_reachability_chains_through_intermediate_helpers():
+    src = """
+        @hot_path
+        def root(per_rank, R):
+            return mid(per_rank, R)
+
+        def mid(per_rank, R):
+            return leaf(per_rank, R)
+
+        def leaf(per_rank, R):
+            for r in range(R):
+                use(per_rank[r])
+    """
+    rules = {}
+    for f in _lint(src):
+        rules.setdefault(f.qualname, f)
+    assert rules["leaf"].via == "root -> mid -> leaf"
+
+
+def test_reachability_stops_at_the_benchmark_boundary():
+    """Listing only the timed functions of a bench file is a deliberate
+    registry choice: local setup helpers stay out of scope."""
+    src = """
+        def timed(per_rank, R):
+            return setup(per_rank, R)
+
+        def setup(per_rank, R):
+            for r in range(R):
+                use(per_rank[r])
+    """
+    reg = {"fake_bench.py": ("timed",)}
+    assert _lint(src, path="benchmarks/fake_bench.py", registry=reg) == []
+
+
+def test_unreached_cold_helper_stays_unchecked():
+    src = """
+        @hot_path
+        def root(x):
+            return x + 1
+
+        def cold(per_rank, R):
+            for r in range(R):
+                use(per_rank[r])
+    """
+    assert _lint(src) == []
+
+
+# ======================================== interprocedural CKPT004 (the oracle)
+def test_ckpt004_sees_id_scale_through_helper_returns():
+    bad = """
+        def _radix(E):
+            return E + 1
+
+        @hot_path
+        def pack(ids, E):
+            return ids * _radix(E)
+    """
+    findings = _lint(bad)
+    assert [f.rule for f in findings] == ["CKPT004"]
+    assert findings[0].qualname == "pack"
+
+
+def test_ckpt004_uint64_helper_return_launders_the_product():
+    ok = """
+        def _radix(E):
+            return np.uint64(E + 1)
+
+        @hot_path
+        def pack(ids, E):
+            return ids * _radix(E)
+    """
+    assert _lint(ok) == []
+
+
+def test_ckpt004_seeds_helper_params_from_hot_call_sites():
+    bad = """
+        @hot_path
+        def root(ids):
+            return _square(ids)
+
+        def _square(x):
+            return x * x
+    """
+    findings = _lint(bad)
+    assert [f.rule for f in findings] == ["CKPT004"]
+    assert findings[0].qualname == "_square"
+    assert findings[0].via == "root -> _square"
+
+
+def test_ckpt004_cold_call_sites_do_not_poison_the_lattice():
+    ok = """
+        def cold(ids):
+            return _square(ids)       # not hot, not reachable
+
+        def _square(x):
+            return x * x
+    """
+    assert _lint(ok) == []
+
+
+# ================================ CKPT007: series-step typestate (file-wide)
+def test_ckpt007_stage_without_commit_step_flags_once():
+    bad = """
+        def save(st, h):
+            st.begin_step(3)
+            st.staged_write("ds", 8, (), "float64", [0], [8])
+    """
+    [finding] = _lint(bad)
+    assert finding.rule == "CKPT007"
+    assert "post-dominated" in finding.message
+
+
+def test_ckpt007_stage_not_dominated_by_begin_step_flags():
+    bad = """
+        def save(st, h):
+            st.staged_write("ds", 8, (), "float64", [0], [8])
+            st.begin_step(3)
+            st.commit_step()
+    """
+    [finding] = _lint(bad)
+    assert finding.rule == "CKPT007"
+    assert "dominated by begin_step" in finding.message
+
+
+def test_ckpt007_plain_mutation_inside_open_step_flags():
+    bad = """
+        def save(st, starts, rows):
+            st.begin_step(3)
+            st.write_plan("ds", starts, rows)
+            st.commit_step()
+    """
+    [finding] = _lint(bad)
+    assert finding.rule == "CKPT007"
+    assert "bypasses" in finding.message
+
+
+def test_ckpt007_clean_bracketing_and_abort_paths_pass():
+    ok = """
+        def save(st, h, starts, rows):
+            st.begin_step(3)
+            st.staged_write("ds", 8, (), "float64", starts, rows)
+            if h:
+                st.abort_step()
+                return
+            st.commit_step()
+    """
+    assert _lint(ok) == []
+
+
+def test_ckpt007_raise_paths_are_the_simulated_crash():
+    ok = """
+        def save(st, bad):
+            st.begin_step(3)
+            if bad:
+                raise ValueError("boom")     # crash: torn step is allowed
+            st.commit_step()
+    """
+    assert _lint(ok) == []
+
+
+def test_ckpt007_step_loop_bracketing_is_clean():
+    ok = """
+        def series(st, steps, starts, rows):
+            for s in steps:
+                st.begin_step(s)
+                st.staged_write("ds", 8, (), "float64", starts, rows)
+                st.commit_step()
+    """
+    assert _lint(ok) == []
+
+
+def test_ckpt007_conditional_commit_leaks_on_the_other_path():
+    bad = """
+        def save(st, ok):
+            st.begin_step(3)
+            if ok:
+                st.commit_step()
+    """
+    [finding] = _lint(bad)
+    assert finding.rule == "CKPT007"
+
+
+def test_ckpt007_caller_managed_staging_is_out_of_scope():
+    ok = """
+        def save_into_open_step(st, h, starts, rows):
+            st.staged_write("ds", 8, (), "float64", starts, rows)
+    """
+    assert _lint(ok) == []
+
+
+# =============================== CKPT008: commit-marker-last (async contract)
+def test_ckpt008_store_mutation_after_commit_append_flags():
+    bad = """
+        def job(store, entry, starts, rows):
+            _append_commit(store, entry)
+            store.write_plan("ds", starts, rows)
+    """
+    [finding] = _lint(bad)
+    assert finding.rule == "CKPT008"
+    assert "LAST" in finding.message
+
+
+def test_ckpt008_commit_append_last_is_clean():
+    ok = """
+        def job(store, entry, starts, rows):
+            store.write_plan("ds", starts, rows)
+            _append_commit(store, entry)
+    """
+    assert _lint(ok) == []
+
+
+def test_ckpt008_detects_the_raw_set_attrs_spelling():
+    bad = """
+        def job(store, log):
+            store.set_attrs(COMMIT_LOG_KEY, log)
+            store.set_attrs("other", 1)
+    """
+    [finding] = _lint(bad)
+    assert finding.rule == "CKPT008"
+
+
+# ================================== CKPT009: async lock discipline (file-wide)
+_WRITER = """
+    import threading
+
+    class W:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self.log = []
+            self._thread = threading.Thread(target=self._loop)
+
+        def _loop(self):
+            {loop_body}
+
+        def read(self):
+            with self._lock:
+                return list(self.log)
+"""
+
+
+def test_ckpt009_unlocked_writer_thread_mutation_flags_once():
+    bad = _WRITER.format(loop_body="self.log.append(1)")
+    [finding] = _lint(bad)
+    assert finding.rule == "CKPT009"
+    assert finding.qualname == "W._loop"
+    assert "writer-thread" in finding.message
+
+
+def test_ckpt009_locked_access_on_both_sides_is_clean():
+    ok = _WRITER.format(
+        loop_body="with self._lock:\n                self.log.append(1)")
+    assert _lint(ok) == []
+
+
+def test_ckpt009_unlocked_caller_side_read_flags():
+    bad = """
+        import threading
+
+        class W:
+            def __init__(self):
+                self._cond = threading.Condition()
+                self._used = 0
+                self._thread = threading.Thread(target=self._loop)
+
+            def _loop(self):
+                with self._cond:
+                    self._used += 1
+
+            def peek(self):
+                return self._used
+    """
+    [finding] = _lint(bad)
+    assert finding.rule == "CKPT009"
+    assert finding.qualname == "W.peek"
+    assert "caller-side" in finding.message
+
+
+def test_ckpt009_queue_attrs_and_threadless_files_are_exempt():
+    ok = """
+        import queue
+        import threading
+
+        class W:
+            def __init__(self):
+                self._queue = queue.Queue()
+                self._thread = threading.Thread(target=self._loop)
+
+            def _loop(self):
+                self._queue.put(1)       # queue.Queue is thread-safe
+
+            def drain(self):
+                return self._queue.get()
+    """
+    assert _lint(ok) == []
+    no_thread = """
+        class W:
+            def __init__(self):
+                self.log = []
+
+            def loop(self):
+                self.log.append(1)       # no thread spawned: single-threaded
+    """
+    assert _lint(no_thread) == []
+
+
+# ================================================== CLI output surfaces (PR 9)
+def test_cli_json_output_round_trips(capsys):
+    assert main(["src", "benchmarks", "--root", str(_REPO), "--json"]) == 0
+    payload = json.loads(capsys.readouterr().out)
+    assert payload["clean"] is True and payload["findings"] == []
+    assert payload["files"] >= 70
+    assert payload["elapsed_seconds"] > 0
+    assert list(payload["rules"]) == list(ALL_RULES)
+
+
+def test_json_payload_round_trips_seeded_findings():
+    bad = """
+        @hot_path
+        def f(per_rank, R):
+            for r in range(R):
+                use(per_rank[r])
+    """
+    findings = _lint(bad)
+    payload = findings_to_json(findings, files=1, elapsed_seconds=0.5)
+    back = json.loads(json.dumps(payload))
+    assert back["clean"] is False
+    [f] = back["findings"]
+    assert f["rule"] == "CKPT001" and f["path"] == _CORE
+    assert f["key"] == findings[0].key and f["line"] == findings[0].line
+
+
+def test_cli_sarif_output_is_well_formed(capsys):
+    assert main(["src", "--root", str(_REPO), "--sarif"]) == 0
+    sarif = json.loads(capsys.readouterr().out)
+    assert sarif["version"] == "2.1.0"
+    driver = sarif["runs"][0]["tool"]["driver"]
+    assert driver["name"] == "ckptlint"
+    assert [r["id"] for r in driver["rules"]] == list(ALL_RULES)
+    assert sarif["runs"][0]["results"] == []
+
+
+def test_cli_graph_dump_lists_roots_and_reachability(capsys):
+    assert main(["src", "--root", str(_REPO), "--graph"]) == 0
+    out = capsys.readouterr().out
+    assert "# call graph (caller -> callee)" in out
+    assert "# hot roots" in out and "# hot-reachable (via chain)" in out
+    assert " -> " in out
+
+
+def test_explain_prints_rule_docs_and_matches_roadmap(capsys):
+    """Docs-drift gate: --explain output for every rule must appear
+    verbatim (whitespace-normalised) in ROADMAP's Static analysis
+    section."""
+    roadmap = " ".join((_REPO / "ROADMAP.md").read_text().split())
+    for rule in ALL_RULES:
+        assert main(["--explain", rule]) == 0
+        text = capsys.readouterr().out.strip()
+        assert text.startswith(f"{rule}:")
+        doc = " ".join(text[len(rule) + 1:].split())
+        assert doc == " ".join(RULE_DOCS[rule].split())
+        assert doc in roadmap, f"{rule} doc drifted from ROADMAP"
+
+
+def test_explain_unknown_rule_exits_2(capsys):
+    assert main(["--explain", "CKPT999"]) == 2
+    assert "unknown rule" in capsys.readouterr().err
+
+
+# ===================================================== analyzer latency smoke
+def test_whole_program_lint_timed_smoke():
+    """The whole-program pass (parse, call graph, reachability, oracle,
+    all rules over src+benchmarks) must stay within 20x the committed
+    baseline — only order-of-magnitude blowups (e.g. a quadratic
+    resolution loop) trip it."""
+    base = json.loads(
+        (_REPO / "tests/data/bench_ckptlint_baseline.json").read_text())
+    t0 = time.perf_counter()
+    findings, info = lint_program(
+        gather_sources(base["paths"], _REPO),
+        baseline=load_baseline(_DEFAULT_BASELINE))
+    wall = time.perf_counter() - t0
+    assert findings == [], "\n".join(str(f) for f in findings)
+    assert info.files >= base["min_files"]
+    assert wall < max(20.0 * base["seconds"], 2.0), \
+        f"whole-program lint took {wall:.2f}s vs baseline {base['seconds']}s"
+
+
+# ========================================= @hot_path metadata passthrough
+def test_hot_path_decorator_preserves_metadata():
+    from repro.analysis.markers import HOT_PATH_ATTR, hot_path
+
+    def sample(x):
+        """Sample doc."""
+        return x
+
+    decorated = hot_path(sample)
+    assert decorated is sample                   # identity, not a wrapper
+    assert decorated.__name__ == "sample"
+    assert decorated.__qualname__.endswith(
+        "test_hot_path_decorator_preserves_metadata.<locals>.sample")
+    assert decorated.__doc__ == "Sample doc."
+    assert getattr(decorated, HOT_PATH_ATTR) is True

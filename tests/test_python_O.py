@@ -101,6 +101,16 @@ raises(lambda: fck.load_mesh("m", Comm(2), exact_distribution=True),
        "exact_distribution with M != N")
 raises(lambda: FunctionSpace(plexes[0], Element("P", 1, "interval")),
        "element/mesh dimension mismatch")
+# PR 9: asserts converted to ValueError by the reachability pass must
+# still fire under -O (Element/Function/interpolate validation)
+raises(lambda: Element("Q", 1, "triangle"), "unknown element family")
+raises(lambda: Element("P", 0, "triangle"), "P0 is not continuous")
+raises(lambda: Element("DP", 99, "triangle"), "degree out of range")
+raises(lambda: interpolate(spaces[0], lambda pts: pts[:1, 0]),
+       "interpolate shape mismatch")
+from repro.fem.function import Function
+raises(lambda: Function(spaces[0], np.zeros(3)),
+       "Function/space DoF count mismatch")
 
 # ---- async round-trip + crash-mid-write recovery (PR 7) -------------------
 # the commit protocol must survive assert-stripping: validation on the
