@@ -24,6 +24,33 @@ def _print_table(title: str, rows: list[dict]):
         print(" | ".join(f"{str(r.get(k, '')):>14s}" for k in keys))
 
 
+def _ckptlint_cost() -> dict:
+    """Static-analyzer perf row for the trajectory record: whole-program
+    lint wall-time plus the shape of the ckptcost certificate (hot-root
+    count, max polynomial degree) so analyzer blowups and certificate
+    drift are diffable across PRs like the engine timings."""
+    import time
+
+    from repro.analysis.ckptlint import (
+        _DEFAULT_BASELINE, gather_sources, lint_program, load_baseline)
+    sources = gather_sources(["src", "benchmarks", "examples"], _REPO_ROOT)
+    t0 = time.perf_counter()
+    findings, info = lint_program(
+        sources, baseline=load_baseline(_DEFAULT_BASELINE))
+    lint_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    from repro.analysis.costmodel import compute_cost
+    report = compute_cost(info.index, info.roots, info.reach)
+    return {
+        "files": info.files,
+        "findings": len(findings),
+        "lint_seconds": round(lint_s, 3),
+        "cost_seconds": round(time.perf_counter() - t0, 3),
+        "hot_roots": report.hot_roots,
+        "max_degree": report.max_degree,
+    }
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
@@ -37,7 +64,7 @@ def main(argv=None):
         # hot-path invariant check only: the benches this driver runs are
         # exactly the code the rules protect, so give them a fast pre-flight
         from repro.analysis import ckptlint
-        return ckptlint.main(["src", "benchmarks",
+        return ckptlint.main(["src", "benchmarks", "examples",
                               "--root", str(_REPO_ROOT)])
 
     scale = 1 << 14 if args.quick else 1 << 17
@@ -100,6 +127,7 @@ def main(argv=None):
         "tensor_rank_scaling": tensor_rank_rows,
         "async_overlap": async_rows,
         "series_append": series_row,
+        "ckptlint_cost": _ckptlint_cost(),
     }
     out_path = _REPO_ROOT / ("BENCH_loadscale_quick.json" if args.quick
                              else "BENCH_loadscale.json")

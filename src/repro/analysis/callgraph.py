@@ -126,6 +126,7 @@ class ProgramIndex:
         # method name -> unique FuncKey, or None when ambiguous
         self._method_by_name: dict[str, FuncKey | None] = {}
         self._edges: dict[FuncKey, list[FuncKey]] | None = None
+        self._local_type_cache: dict[FuncKey, dict[str, str]] = {}
 
     # -------------------------------------------------------------- building
     def add_file(self, tree: ast.Module, path: str) -> None:
@@ -312,7 +313,9 @@ class ProgramIndex:
                         cls: ClassEntry | None,
                         fentry: FuncEntry | None) -> ClassEntry | None:
         """Static class of a call receiver: ``self.<typed attr>``, an
-        annotated parameter, or a local constructed from an indexed class."""
+        annotated parameter, or a typed local (``st = self.store``,
+        ``x: T = ...``, ``x = T(...)``, or a call whose return
+        annotation names an indexed class)."""
         if isinstance(recv, ast.Attribute) and \
                 isinstance(recv.value, ast.Name) and \
                 recv.value.id == "self" and cls is not None:
@@ -326,7 +329,107 @@ class ProgramIndex:
                     tname = _annotation_class(p.annotation)
                     if tname:
                         return self._class_named(tname)
+            tname = self._local_types(fentry, mod, cls).get(recv.id)
+            if tname:
+                return self._class_named(tname)
         return None
+
+    def _local_types(self, fentry: FuncEntry, mod: ModuleEntry,
+                     cls: ClassEntry | None) -> dict[str, str]:
+        """``local name -> class name`` for a function body (memoized).
+
+        Sound by construction: a name is typed only when EVERY binding of
+        it in the body infers to the same indexed class — one untypeable
+        rebinding (a ``for`` target, a ``with`` alias, an unresolvable
+        call) poisons the name rather than guessing.
+        """
+        cached = self._local_type_cache.get(fentry.key)
+        if cached is not None:
+            return cached
+        seen: dict[str, str | None] = {}
+
+        def record(name: str, tname: str | None) -> None:
+            if name in seen and seen[name] != tname:
+                seen[name] = None
+            else:
+                seen[name] = tname
+
+        for node in ast.walk(fentry.node):
+            if isinstance(node, ast.Assign):
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name):
+                        record(tgt.id,
+                               self._value_class(node.value, mod, cls))
+                    elif isinstance(tgt, ast.Tuple) and \
+                            isinstance(node.value, ast.Tuple) and \
+                            len(tgt.elts) == len(node.value.elts) and \
+                            all(isinstance(e, ast.Name) for e in tgt.elts):
+                        # parallel unpack: st, N = self.store, comm.nranks
+                        for e, v in zip(tgt.elts, node.value.elts):
+                            record(e.id, self._value_class(v, mod, cls))
+                    else:                    # opaque unpack: poison names
+                        for n in ast.walk(tgt):
+                            if isinstance(n, ast.Name):
+                                record(n.id, None)
+            elif isinstance(node, ast.AnnAssign) and \
+                    isinstance(node.target, ast.Name):
+                record(node.target.id, _annotation_class(node.annotation))
+            elif isinstance(node, (ast.For, ast.AsyncFor)):
+                for n in ast.walk(node.target):
+                    if isinstance(n, ast.Name):
+                        record(n.id, None)
+            elif isinstance(node, (ast.With, ast.AsyncWith)):
+                for item in node.items:
+                    if isinstance(item.optional_vars, ast.Name):
+                        record(item.optional_vars.id, None)
+            elif isinstance(node, ast.NamedExpr) and \
+                    isinstance(node.target, ast.Name):
+                record(node.target.id, None)
+        out = {k: v for k, v in seen.items()
+               if v and self._class_named(v) is not None}
+        self._local_type_cache[fentry.key] = out
+        return out
+
+    def _value_class(self, val: ast.AST, mod: ModuleEntry,
+                     cls: ClassEntry | None) -> str | None:
+        """Class name an assigned value statically has, if derivable."""
+        # st = self.store
+        if isinstance(val, ast.Attribute) and \
+                isinstance(val.value, ast.Name) and \
+                val.value.id == "self" and cls is not None:
+            return cls.attr_types.get(val.attr)
+        if not isinstance(val, ast.Call):
+            return None
+        f = val.func
+        # x = ClassName(...)
+        if isinstance(f, ast.Name):
+            if f.id in mod.classes or (
+                    f.id in mod.from_imports
+                    and self._class_named(f.id) is not None
+                    and mod.from_imports[f.id][1] == f.id):
+                return f.id
+            target = mod.functions.get(f.id)
+            return self._return_class(target)
+        # x = self.method(...) / x = self.attr.method(...): return annotation
+        if isinstance(f, ast.Attribute):
+            owner = None
+            if isinstance(f.value, ast.Name) and f.value.id == "self":
+                owner = cls
+            elif isinstance(f.value, ast.Attribute) and \
+                    isinstance(f.value.value, ast.Name) and \
+                    f.value.value.id == "self" and cls is not None:
+                tname = cls.attr_types.get(f.value.attr)
+                owner = self._class_named(tname) if tname else None
+            if owner is not None:
+                return self._return_class(owner.methods.get(f.attr))
+        return None
+
+    def _return_class(self, key: FuncKey | None) -> str | None:
+        entry = self.functions.get(key) if key is not None else None
+        if entry is None:
+            return None
+        tname = _annotation_class(entry.node.returns)
+        return tname if tname and self._class_named(tname) else None
 
     # ----------------------------------------------------------------- edges
     def edges(self) -> dict[FuncKey, list[FuncKey]]:
@@ -343,6 +446,23 @@ class ProgramIndex:
                             seen.append(tgt)
             out[key] = seen
         self._edges = out
+        return out
+
+    # -------------------------------------------------------- runtime lookup
+    def func_by_location(self) -> dict[tuple[str, int], FuncKey]:
+        """``(path, lineno) -> FuncKey`` for matching live code objects.
+
+        A code object's ``co_firstlineno`` is the ``def`` line for a plain
+        function but the *first decorator's* line for a decorated one, so
+        both are mapped.  Used by the ``sys.settrace`` soundness harness to
+        resolve observed frames back into this index without relying on
+        ``co_qualname`` (absent on Python 3.10).
+        """
+        out: dict[tuple[str, int], FuncKey] = {}
+        for key, entry in self.functions.items():
+            out[(key[0], entry.node.lineno)] = key
+            if entry.node.decorator_list:
+                out[(key[0], entry.node.decorator_list[0].lineno)] = key
         return out
 
 

@@ -59,6 +59,8 @@ from repro.analysis.callgraph import (
     build_index,
     propagate_hot,
 )
+from repro.analysis.costmodel import CostReport, compute_cost
+from repro.analysis.costmodel import RULE_DOCS as _COST_DOCS
 from repro.analysis.locks import check_locks
 from repro.analysis.locks import RULE_DOCS as _LOCK_DOCS
 from repro.analysis.protocol import check_protocol
@@ -74,7 +76,8 @@ from repro.analysis.rules import (
 
 #: rule id -> doc paragraph, aggregated across the rule modules; the CLI's
 #: ``--explain`` prints these and ROADMAP embeds the same text.
-RULE_DOCS: dict[str, str] = {**_RULE_DOCS, **_PROTO_DOCS, **_LOCK_DOCS}
+RULE_DOCS: dict[str, str] = {**_RULE_DOCS, **_PROTO_DOCS, **_LOCK_DOCS,
+                             **_COST_DOCS}
 
 _SUPPRESS_RE = re.compile(r"#\s*ckptlint:\s*disable=([A-Z0-9_, ]+)")
 _DEFAULT_BASELINE = Path(__file__).with_name("baseline.json")
@@ -154,6 +157,7 @@ class ProgramInfo:
     roots: list[FuncKey]
     reach: dict[FuncKey, ReachInfo]
     files: int = 0
+    cost: CostReport | None = None
 
 
 def _reach_in_scope(key: FuncKey) -> bool:
@@ -206,6 +210,13 @@ def lint_program(sources: list[tuple[str, str]], *,
     oracle.compute(checked)
     ctx = _ProgramCtx(oracle)
 
+    # ckptcost pass: symbolic op-count certificates + CKPT010/011 findings
+    # (filtered below through the same per-file suppression machinery)
+    cost = compute_cost(index, roots, reach, oracle=oracle)
+    cost_by_path: dict[str, list[Finding]] = {}
+    for f in cost.findings:
+        cost_by_path.setdefault(f.path, []).append(f)
+
     findings: list[Finding] = []
     root_set = set(roots)
     for path, (tree, source, funcs, owner) in per_file.items():
@@ -250,6 +261,7 @@ def lint_program(sources: list[tuple[str, str]], *,
         _check_ckpt005(tree, path, qualname_of, shims, file_findings)
         check_protocol(funcs, path, file_findings)
         check_locks(tree, path, funcs, index, file_findings)
+        file_findings.extend(cost_by_path.get(path, ()))
 
         sup = _suppressions(source)
         findings.extend(f for f in file_findings
@@ -257,7 +269,7 @@ def lint_program(sources: list[tuple[str, str]], *,
                         and f.key not in baseline)
 
     findings.sort(key=lambda f: (f.path, f.line, f.rule))
-    info = ProgramInfo(index, roots, reach, files=len(per_file))
+    info = ProgramInfo(index, roots, reach, files=len(per_file), cost=cost)
     return findings, info
 
 
@@ -338,8 +350,19 @@ def findings_to_json(findings: list[Finding], *, files: int,
     }
 
 
+#: stable per-rule documentation anchors for SARIF ``helpUri`` — the
+#: ROADMAP "Static analysis" section embeds every rule's doc paragraph.
+_HELP_URI_BASE = "https://github.com/paper-repro/ntom-checkpoint" \
+                 "/blob/main/ROADMAP.md#static-analysis"
+
+
+def rule_help_uri(rule: str) -> str:
+    return f"{_HELP_URI_BASE}-{rule.lower()}"
+
+
 def findings_to_sarif(findings: list[Finding]) -> dict:
-    """Minimal SARIF 2.1.0 log for editor/CI integration."""
+    """SARIF 2.1.0 log for editor/CI integration (per-rule help URIs and
+    the full rule text ride along so CI annotations are self-contained)."""
     return {
         "version": "2.1.0",
         "$schema": ("https://raw.githubusercontent.com/oasis-tcs/"
@@ -348,7 +371,9 @@ def findings_to_sarif(findings: list[Finding]) -> dict:
             "tool": {"driver": {
                 "name": "ckptlint",
                 "rules": [{"id": r,
-                           "shortDescription": {"text": RULE_DOCS[r]}}
+                           "shortDescription": {"text": RULE_DOCS[r]},
+                           "fullDescription": {"text": RULE_DOCS[r]},
+                           "helpUri": rule_help_uri(r)}
                           for r in ALL_RULES],
             }},
             "results": [{
@@ -386,19 +411,26 @@ def main(argv: list[str] | None = None) -> int:
         description="Enforce the rank-flat checkpoint engine's invariants "
                     "(rules %s) with whole-program hot-path reachability."
                     % ", ".join(ALL_RULES))
-    ap.add_argument("paths", nargs="*", default=["src", "benchmarks"],
+    ap.add_argument("paths", nargs="*",
+                    default=["src", "benchmarks", "examples"],
                     help="files or directories to lint "
-                         "(default: src benchmarks)")
+                         "(default: src benchmarks examples)")
     ap.add_argument("--root", default=".",
                     help="repo root paths are resolved against")
     ap.add_argument("--baseline", type=Path, default=_DEFAULT_BASELINE,
                     help="JSON baseline of grandfathered findings")
     ap.add_argument("--no-baseline", action="store_true",
                     help="ignore the baseline file")
-    ap.add_argument("--json", action="store_true", dest="as_json",
-                    help="machine-readable JSON findings on stdout")
-    ap.add_argument("--sarif", action="store_true",
-                    help="SARIF 2.1.0 log on stdout")
+    fmt = ap.add_mutually_exclusive_group()
+    fmt.add_argument("--json", action="store_true", dest="as_json",
+                     help="machine-readable JSON findings on stdout")
+    fmt.add_argument("--sarif", action="store_true",
+                     help="SARIF 2.1.0 log on stdout")
+    fmt.add_argument("--cost", action="store_true",
+                     help="per-hot-root symbolic op-count certificates "
+                          "(ckptcost) on stdout")
+    fmt.add_argument("--cost-json", action="store_true", dest="cost_json",
+                     help="the ckptcost report as JSON on stdout")
     ap.add_argument("--graph", action="store_true",
                     help="dump the call graph, hot roots and reachability")
     ap.add_argument("--explain", metavar="CKPTnnn",
@@ -428,12 +460,22 @@ def main(argv: list[str] | None = None) -> int:
             findings, files=info.files, elapsed_seconds=elapsed), indent=2))
     elif args.sarif:
         print(json.dumps(findings_to_sarif(findings), indent=2))
+    elif args.cost_json:
+        print(json.dumps(info.cost.as_json(elapsed_seconds=elapsed),
+                         indent=2))
+    elif args.cost:
+        print(info.cost.render_text())
+        for f in findings:
+            print(f)
     else:
         for f in findings:
             print(f)
     status = "clean" if not findings else f"{len(findings)} finding(s)"
+    extra = (f", {info.cost.hot_roots} hot root(s), cost degree "
+             f"{info.cost.max_degree}") if (args.cost or args.cost_json) \
+        else ""
     print(f"ckptlint: {status} across {info.files} file(s) "
-          f"in {elapsed:.2f}s", file=sys.stderr)
+          f"in {elapsed:.2f}s{extra}", file=sys.stderr)
     return 1 if findings else 0
 
 

@@ -1,0 +1,579 @@
+"""``ckptcost`` — static I/O/comm complexity certification (CKPT010/011).
+
+The repo's rank-flat claim — checkpoint traffic independent of process
+count — is enforced dynamically by the IOStats pins (13 writes / 32 reads
+per FE round-trip) and the CommStats seed fixture.  This module derives the
+same counts *statically*: an abstract interpreter over the
+:class:`~repro.analysis.callgraph.ProgramIndex` call graph assigns every
+hot root a symbolic operation-count polynomial over the scale variables
+
+    ``1``  constants        (straight-line effect calls)
+    ``R``  rank/chunk count (the variable the engine must stay flat in)
+    ``E``  entity/id space  (mesh points, DoFs — legitimate data scale)
+    ``S``  series steps     (time-series append loops)
+
+plus two families of *bounded* symbols with no scale of their own:
+
+    ``K[qual@src]``  trip count of a loop whose iteration space is not a
+                     scale variable (BFS rounds, label sets, dict items);
+    ``G[qual@src]``  execution count of a conditionally-taken branch.
+
+Semantics, chosen so the derived polynomial matches what ``IOStats``
+actually counts:
+
+* an effect call contributes the product of its enclosing loop/branch
+  factors; loop iterables and guard tests are evaluated once per entry, so
+  effects there take only the *outer* context (mirrors CKPT006);
+* calls are inlined interprocedurally via memoized per-function summaries
+  (constructor dispatch sums ``__init__`` + ``__post_init__``; recursive
+  cycles are truncated to zero and surfaced in the symbol legend);
+* a call whose method name *is* an effect op counts as exactly one op and
+  is not inlined further — ``staged_write`` internally calling
+  ``write_plan`` and ``alltoallv_packed`` internally calling
+  ``neighbor_alltoallv`` must not double-count;
+* a ``G`` symbol counts the branch's total executions *in the enclosing
+  calling context*, so multiplying it by a bounded ``K`` loop factor
+  absorbs the ``K`` (the guard-true total already ranges over the loop) —
+  but scale variables ``R``/``E``/``S`` always multiply through: gating a
+  store call cannot launder its rank dependence.
+
+Two rules fall out of the accumulated polynomials:
+
+* **CKPT010** — a hot path's store-op count has a non-zero ``R``
+  coefficient (the static mirror of the IOStats gate);
+* **CKPT011** — a collective executes inside an ``R``- or ``E``-scale
+  loop (comm rounds must be O(closure depth), not O(R) or O(E)).
+
+Findings anchor at the site where the scale variable enters (the effect
+call or the call site inside the scale loop) and deduplicate by
+(path, line, rule) across roots.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+
+from repro.analysis.callgraph import FuncKey, ProgramIndex, ReachInfo
+from repro.analysis.rules import (
+    ID,
+    RANK,
+    RANK_COUNT_NAMES,
+    Finding,
+    _call_name,
+    _names_in,
+    _tokens,
+)
+
+#: store effect ops, split by direction (attr-matched syntactically, like
+#: CKPT006 — the receiver is duck-typed on every engine path).
+WRITE_OPS = frozenset({
+    "write_plan", "write_rows", "write_rows_at",
+    "staged_write", "stage_dataset", "stage_carry",
+})
+READ_OPS = frozenset({"read_plan", "read_rows", "read_rows_at"})
+#: collective comm ops (one op = one exchange round)
+COMM_OPS = frozenset({
+    "alltoallv_packed", "neighbor_alltoallv", "bcast", "reduce",
+})
+_EFFECT_OPS = WRITE_OPS | READ_OPS | COMM_OPS
+
+#: the scale variables of the certificate (everything else is bounded)
+SCALE_VARS = ("R", "E", "S")
+
+#: loop iterables denoting the series-step space
+_STEP_TOKENS = frozenset({"step", "steps", "nsteps"})
+
+_SRC_TRUNC = 40                  # max chars of unparsed source in a symbol
+
+
+# ------------------------------------------------------------------ polynomial
+Monomial = tuple[str, ...]       # sorted variable names; repeats are powers
+
+
+class Poly:
+    """Integer-coefficient polynomial over scale vars + bounded symbols."""
+
+    __slots__ = ("terms",)
+
+    def __init__(self, terms: dict[Monomial, int] | None = None) -> None:
+        self.terms: dict[Monomial, int] = {
+            m: c for m, c in (terms or {}).items() if c}
+
+    @classmethod
+    def const(cls, n: int) -> "Poly":
+        return cls({(): n})
+
+    def __bool__(self) -> bool:
+        return bool(self.terms)
+
+    def __add__(self, other: "Poly") -> "Poly":
+        out = dict(self.terms)
+        for m, c in other.terms.items():
+            out[m] = out.get(m, 0) + c
+        return Poly(out)
+
+    def has_var(self, var: str) -> bool:
+        return any(var in m for m in self.terms)
+
+    @property
+    def degree(self) -> int:
+        return max((len(m) for m in self.terms), default=0)
+
+    def variables(self) -> set[str]:
+        out: set[str] = set()
+        for m in self.terms:
+            out.update(m)
+        return out
+
+    def as_terms(self) -> list[dict]:
+        """JSON form: ``[{"coeff": c, "vars": [...]}]``, canonically sorted."""
+        return [{"coeff": c, "vars": list(m)}
+                for m, c in sorted(self.terms.items(),
+                                   key=lambda kv: (len(kv[0]), kv[0]))]
+
+    def __str__(self) -> str:
+        if not self.terms:
+            return "0"
+        parts = []
+        for m, c in sorted(self.terms.items(),
+                           key=lambda kv: (len(kv[0]), kv[0])):
+            if not m:
+                parts.append(str(c))
+            elif c == 1:
+                parts.append("*".join(m))
+            else:
+                parts.append(f"{c}*" + "*".join(m))
+        return " + ".join(parts)
+
+
+# context factor: ("const", n) or ("var", name)
+Factor = tuple[str, object]
+
+
+def _apply_context(poly: Poly, factors: list[Factor]) -> Poly:
+    """Multiply ``poly`` by an enclosing loop/branch context.
+
+    ``K`` factors are absorbed when a ``G`` appears further in (deeper
+    than) the context, or inside the monomial itself: the guard total
+    already counts across the bounded loop.  Scale variables and constants
+    always multiply through.
+    """
+    const = 1
+    var_factors: list[str] = []
+    for kind, val in factors:
+        if kind == "const":
+            const *= val            # type: ignore[operator]
+        else:
+            var_factors.append(val)  # type: ignore[arg-type]
+    out: dict[Monomial, int] = {}
+    for mono, coeff in poly.terms.items():
+        mono_has_g = any(v.startswith("G[") for v in mono)
+        kept: list[str] = []
+        for i, v in enumerate(var_factors):
+            if v.startswith("K[") and (mono_has_g or any(
+                    w.startswith("G[") for w in var_factors[i + 1:])):
+                continue
+            kept.append(v)
+        new = tuple(sorted(kept + list(mono)))
+        out[new] = out.get(new, 0) + const * coeff
+    return Poly(out)
+
+
+def evaluate_terms(terms: list[dict], subs: dict[str, int],
+                   default: int = 0) -> int:
+    """Evaluate a JSON-form polynomial under a symbol substitution.
+
+    ``subs`` maps a variable name *or unambiguous substring of one* to its
+    value (exact keys win, then first substring match in ``subs`` order);
+    unmatched variables take ``default``.  This is the test-side helper the
+    static-vs-dynamic cross-check uses to ground the bounded ``K``/``G``
+    symbols in one concrete workload.
+    """
+    total = 0
+    for t in terms:
+        prod = t["coeff"]
+        for v in t["vars"]:
+            if v in subs:
+                val = subs[v]
+            else:
+                val = next((x for pat, x in subs.items() if pat in v),
+                           default)
+            prod *= val
+        total += prod
+    return total
+
+
+# ------------------------------------------------------------------- summaries
+@dataclasses.dataclass
+class CostSummary:
+    """Per-function effect-count polynomials (one graph node's summary)."""
+    writes: Poly = dataclasses.field(default_factory=Poly)
+    reads: Poly = dataclasses.field(default_factory=Poly)
+    comm: Poly = dataclasses.field(default_factory=Poly)
+
+    def __add__(self, other: "CostSummary") -> "CostSummary":
+        return CostSummary(self.writes + other.writes,
+                           self.reads + other.reads,
+                           self.comm + other.comm)
+
+    def scaled(self, factors: list[Factor]) -> "CostSummary":
+        return CostSummary(_apply_context(self.writes, factors),
+                           _apply_context(self.reads, factors),
+                           _apply_context(self.comm, factors))
+
+    @property
+    def store(self) -> Poly:
+        return self.writes + self.reads
+
+    @property
+    def degree(self) -> int:
+        return max(self.writes.degree, self.reads.degree, self.comm.degree)
+
+
+def _src_of(node: ast.AST) -> str:
+    try:
+        txt = " ".join(ast.unparse(node).split())
+    except Exception:              # pragma: no cover — unparse total on 3.10
+        txt = "?"
+    return txt[:_SRC_TRUNC] + ("..." if len(txt) > _SRC_TRUNC else "")
+
+
+class CostModel:
+    """Memoized bottom-up cost summaries over the whole-program graph."""
+
+    def __init__(self, index: ProgramIndex, oracle=None) -> None:
+        self.index = index
+        self.oracle = oracle
+        self.summaries: dict[FuncKey, CostSummary] = {}
+        self.findings: dict[tuple[str, int, str], Finding] = {}
+        self.symbols: dict[str, str] = {}
+        self._on_stack: set[FuncKey] = set()
+
+    # ------------------------------------------------------------- symbols
+    def _sym(self, kind: str, key: FuncKey, node: ast.AST,
+             what: str, src: str | None = None) -> str:
+        name = f"{kind}[{key[1]}@{_src_of(node) if src is None else src}]"
+        self.symbols.setdefault(
+            name, f"{what} at {key[0]}:{node.lineno}")
+        return name
+
+    # ------------------------------------------------- loop classification
+    def _scale_env(self, key: FuncKey):
+        if self.oracle is not None:
+            return self.oracle.env_for(key)
+        from repro.analysis.rules import _ScaleEnv
+        return _ScaleEnv()
+
+    def _iter_factor(self, it: ast.AST, key: FuncKey, env) -> Factor:
+        """Classify a ``for`` iterable into R/E/S, a constant, or a K."""
+        if isinstance(it, (ast.Tuple, ast.List, ast.Set)) and not any(
+                isinstance(e, ast.Starred) for e in it.elts):
+            return ("const", len(it.elts))
+        cname = _call_name(it) if isinstance(it, ast.Call) else ""
+        probe = it.args if cname in ("range", "enumerate", "zip",
+                                     "reversed", "sorted") else [it]
+        pnames: set[str] = set()
+        for a in probe:
+            pnames |= set(_names_in(a))
+        if pnames & RANK_COUNT_NAMES or any("per_rank" in n for n in pnames):
+            return ("var", "R")
+        if any(_tokens(n) & _STEP_TOKENS for n in pnames) or "S" in pnames:
+            return ("var", "S")
+        if cname == "range":
+            if it.args and all(isinstance(a, ast.Constant) and
+                               isinstance(a.value, int) for a in it.args):
+                try:
+                    return ("const",
+                            len(range(*[a.value for a in it.args])))
+                except (TypeError, ValueError):
+                    pass
+            # the CKPT004 scale lattice classifies the extent expression
+            scales = {env.scale(a) for a in it.args}
+            if RANK in scales:
+                return ("var", "R")
+            if ID in scales:
+                return ("var", "E")
+        return ("var", self._sym(
+            "K", key, it, f"bounded trip count of `for ... in {_src_of(it)}`"))
+
+    # ----------------------------------------------------------- summaries
+    def summary(self, key: FuncKey) -> CostSummary:
+        got = self.summaries.get(key)
+        if got is not None:
+            return got
+        entry = self.index.functions.get(key)
+        if entry is None or key in self._on_stack:
+            if key in self._on_stack:
+                self.symbols.setdefault(
+                    f"REC[{key[1]}]",
+                    f"recursive cycle truncated at {key[0]} (its repeated "
+                    f"contribution is not counted)")
+            return CostSummary()
+        self._on_stack.add(key)
+        try:
+            summary = self._walk_function(key, entry.node)
+        finally:
+            self._on_stack.discard(key)
+        self.summaries[key] = summary
+        return summary
+
+    def _walk_function(self, key: FuncKey, fn: ast.AST) -> CostSummary:
+        acc = CostSummary()
+        env = self._scale_env(key)
+
+        def contribute(cs: CostSummary, stack: list[Factor]) -> None:
+            nonlocal acc
+            acc = acc + cs.scaled(stack)
+
+        def stack_has(stack: list[Factor], *vars_: str) -> str | None:
+            for kind, val in stack:
+                if kind == "var" and val in vars_:
+                    return str(val)
+            return None
+
+        def handle_call(node: ast.Call, stack: list[Factor]) -> None:
+            attr = node.func.attr \
+                if isinstance(node.func, ast.Attribute) else None
+            if attr in _EFFECT_OPS:
+                one = CostSummary()
+                if attr in WRITE_OPS:
+                    one.writes = Poly.const(1)
+                elif attr in READ_OPS:
+                    one.reads = Poly.const(1)
+                else:
+                    one.comm = Poly.const(1)
+                contribute(one, stack)
+                if attr in COMM_OPS:
+                    hit = stack_has(stack, "R", "E")
+                    if hit:
+                        self._find(key, node.lineno, "CKPT011",
+                                   f"collective .{attr} inside an {hit}-scale "
+                                   f"loop — comm rounds grow with "
+                                   f"{'process count' if hit == 'R' else 'entity count'}; "
+                                   f"batch into one packed exchange per phase")
+                elif stack_has(stack, "R"):
+                    self._find(key, node.lineno, "CKPT010",
+                               f"store .{attr} inside an R-scale loop makes "
+                               f"the coalesced-call count rank-dependent — "
+                               f"the rank-flat contract requires one plan "
+                               f"per dataset per phase; batch the segments")
+                return
+            targets = self.index.resolve_call(node, key)
+            if not targets:
+                return
+            agg = CostSummary()
+            for tgt in targets:
+                agg = agg + self.summary(tgt)
+            if not (agg.writes or agg.reads or agg.comm):
+                return
+            contribute(agg, stack)
+            callee = targets[0][1]
+            if stack_has(stack, "R") and agg.store:
+                self._find(key, node.lineno, "CKPT010",
+                           f"call to {callee} (store ops inside: "
+                           f"{agg.store}) under an R-scale loop makes the "
+                           f"derived store-op count rank-dependent — hoist "
+                           f"the call or batch across ranks")
+            hit = stack_has(stack, "R", "E")
+            if hit and agg.comm:
+                self._find(key, node.lineno, "CKPT011",
+                           f"call to {callee} (collectives inside: "
+                           f"{agg.comm}) under an {hit}-scale loop — comm "
+                           f"rounds must stay O(closure depth)")
+
+        def guard(node: ast.AST, branch: str = "") -> Factor:
+            src = (branch + _src_of(node))[:_SRC_TRUNC + 6]
+            return ("var", self._sym(
+                "G", key, node,
+                f"executions of the branch guarded by `{src}`", src=src))
+
+        def walk(node: ast.AST, stack: list[Factor]) -> None:
+            if isinstance(node, (ast.For, ast.AsyncFor)):
+                walk(node.iter, stack)       # iterable evaluated once
+                inner = stack + [self._iter_factor(node.iter, key, env)]
+                for child in node.body:
+                    walk(child, inner)
+                for child in node.orelse:
+                    walk(child, stack)
+                return
+            if isinstance(node, ast.While):
+                inner = stack + [("var", self._sym(
+                    "K", key, node.test,
+                    f"bounded trip count of `while {_src_of(node.test)}`"))]
+                walk(node.test, inner)       # test re-evaluated per round
+                for child in node.body:
+                    walk(child, inner)
+                for child in node.orelse:
+                    walk(child, stack)
+                return
+            if isinstance(node, ast.If):
+                walk(node.test, stack)
+                then = stack + [guard(node.test)]
+                for child in node.body:
+                    walk(child, then)
+                if node.orelse:
+                    other = stack + [guard(node.test, "else:")]
+                    for child in node.orelse:
+                        walk(child, other)
+                return
+            if isinstance(node, ast.IfExp):
+                walk(node.test, stack)
+                walk(node.body, stack + [guard(node.test)])
+                walk(node.orelse, stack + [guard(node.test, "else:")])
+                return
+            if isinstance(node, (ast.Try, getattr(ast, "TryStar", ast.Try))):
+                for child in node.body + node.orelse + node.finalbody:
+                    walk(child, stack)
+                for h in node.handlers:
+                    h_stack = stack + [guard(h.type or h, "except:")]
+                    for child in h.body:
+                        walk(child, h_stack)
+                return
+            if isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                                 ast.GeneratorExp)):
+                inner = list(stack)
+                for gen in node.generators:
+                    walk(gen.iter, inner)    # nested iters see outer factors
+                    inner = inner + [self._iter_factor(gen.iter, key, env)]
+                    for cond in gen.ifs:
+                        walk(cond, inner)
+                        inner = inner + [guard(cond)]
+                if isinstance(node, ast.DictComp):
+                    walk(node.key, inner)
+                    walk(node.value, inner)
+                else:
+                    walk(node.elt, inner)
+                return
+            if isinstance(node, ast.Call):
+                for child in ast.iter_child_nodes(node):
+                    walk(child, stack)
+                handle_call(node, stack)
+                return
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                # a nested def (deferred-commit closures): its effects run
+                # in the def-site context, once per scheduling
+                for child in node.body:
+                    walk(child, stack)
+                return
+            if isinstance(node, ast.Lambda):
+                walk(node.body, stack)
+                return
+            for child in ast.iter_child_nodes(node):
+                walk(child, stack)
+
+        for child in fn.body:
+            walk(child, [])
+        return acc
+
+    def _find(self, key: FuncKey, line: int, rule: str, message: str) -> None:
+        fkey = (key[0], line, rule)
+        if fkey not in self.findings:
+            self.findings[fkey] = Finding(key[0], line, rule, key[1], message)
+
+
+# --------------------------------------------------------------------- report
+@dataclasses.dataclass
+class CostReport:
+    """Per-hot-root cost certificates + the CKPT010/011 findings."""
+    roots: dict[FuncKey, CostSummary]
+    symbols: dict[str, str]
+    findings: list[Finding]
+
+    @property
+    def hot_roots(self) -> int:
+        return len(self.roots)
+
+    @property
+    def max_degree(self) -> int:
+        return max((s.degree for s in self.roots.values()), default=0)
+
+    def root_json(self) -> dict[str, dict]:
+        out: dict[str, dict] = {}
+        for key in sorted(self.roots):
+            s = self.roots[key]
+            out[f"{key[0]}::{key[1]}"] = {
+                "store_writes": s.writes.as_terms(),
+                "store_reads": s.reads.as_terms(),
+                "comm": s.comm.as_terms(),
+                "degree": s.degree,
+                "r_free": not s.store.has_var("R"),
+            }
+        return out
+
+    def as_json(self, *, elapsed_seconds: float) -> dict:
+        used: set[str] = set()
+        for s in self.roots.values():
+            used |= (s.writes.variables() | s.reads.variables()
+                     | s.comm.variables())
+        return {
+            "tool": "ckptcost",
+            "scale_vars": list(SCALE_VARS),
+            "elapsed_seconds": elapsed_seconds,
+            "hot_roots": self.hot_roots,
+            "max_degree": self.max_degree,
+            "clean": not self.findings,
+            "roots": self.root_json(),
+            "symbols": {k: v for k, v in sorted(self.symbols.items())
+                        if k in used},
+        }
+
+    def render_text(self) -> str:
+        lines = ["# ckptcost: symbolic op-count certificates over "
+                 "{1, R, E, S} (+ bounded K/G symbols)"]
+        for key in sorted(self.roots):
+            s = self.roots[key]
+            flag = "" if not s.store.has_var("R") else "  !! R-dependent"
+            lines.append(f"{key[0]}::{key[1]}{flag}")
+            lines.append(f"  writes: {s.writes}")
+            lines.append(f"  reads:  {s.reads}")
+            lines.append(f"  comm:   {s.comm}")
+        lines.append("# symbols")
+        used: set[str] = set()
+        for s in self.roots.values():
+            used |= (s.writes.variables() | s.reads.variables()
+                     | s.comm.variables())
+        for name in sorted(used):
+            if name in self.symbols:
+                lines.append(f"  {name}: {self.symbols[name]}")
+        return "\n".join(lines)
+
+
+def compute_cost(index: ProgramIndex, roots: list[FuncKey],
+                 reach: dict[FuncKey, ReachInfo] | None = None,
+                 oracle=None) -> CostReport:
+    """Summarize every hot root and collect the CKPT010/011 findings.
+
+    ``reach`` (from :func:`~repro.analysis.callgraph.propagate_hot`) tags
+    findings in reachable helpers with their root call chain, exactly like
+    the hot-path rules.
+    """
+    model = CostModel(index, oracle=oracle)
+    root_costs = {key: model.summary(key) for key in sorted(set(roots))}
+    reach = reach or {}
+    findings = []
+    for f in model.findings.values():
+        info = reach.get((f.path, f.qualname))
+        findings.append(dataclasses.replace(f, via=info.via) if info else f)
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return CostReport(root_costs, model.symbols, findings)
+
+
+RULE_DOCS = {
+    "CKPT010": (
+        "rank-dependent store traffic: every hot root's derived store-op "
+        "count (write_plan/read_plan/read_rows*/write_rows*/staged_write/"
+        "stage_dataset/stage_carry, accumulated interprocedurally over the "
+        "call graph) must have a zero R coefficient — the static mirror of "
+        "the dynamic IOStats pins; a store op or store-calling helper "
+        "under a rank-scale loop (statement loop OR comprehension) makes "
+        "checkpoint I/O grow with process count, which is exactly what the "
+        "N-to-M engine exists to avoid."),
+    "CKPT011": (
+        "collective inside a rank- or entity-scale loop: bcast/reduce/"
+        "alltoallv_packed/neighbor_alltoallv executed O(R) or O(E) times "
+        "means communication rounds grow with process count or mesh size — "
+        "comm rounds on a hot path must stay O(closure depth), a small "
+        "bounded constant; batch the exchange into one packed collective "
+        "per phase."),
+}

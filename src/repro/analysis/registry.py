@@ -38,3 +38,22 @@ HOT_PATH_REGISTRY: dict[str, tuple[str, ...]] = {
 }
 
 ALLTOALLV_SHIMS: frozenset[tuple[str, str]] = frozenset()
+
+#: ``(caller_qualname, callee_qualname)`` pairs the runtime call-graph
+#: soundness harness (``tests/test_callgraph_soundness.py``) accepts even
+#: though the static :class:`repro.analysis.callgraph.ProgramIndex` cannot
+#: derive them — dynamic dispatch through function *values* rather than
+#: names.  Every entry must say why the static resolver is blind to it;
+#: an empty set means the traced workloads exercise no dynamic dispatch.
+#: Keep this list short: each entry is a hole in CKPT010/011's coverage.
+DYNAMIC_EDGE_ALLOWLIST: frozenset[tuple[str, str]] = frozenset({
+    # _read_store feature-probes series support via
+    # ``getattr(st, "has_step", None)`` and then calls the *value* — a
+    # call through a variable the AST resolver cannot name.
+    ("TensorCheckpoint._read_store", "DatasetStore.has_step"),
+    # _load_array's ``st`` parameter is deliberately polymorphic
+    # (DatasetStore and StepView share the read surface), so no single
+    # static class types the receiver.  ``read_rows`` is an effect op —
+    # ckptcost still counts it by name; only the graph edge is lost.
+    ("TensorCheckpoint._load_array", "DatasetStore.read_rows"),
+})

@@ -483,7 +483,8 @@ HOT_RULES = {
 }
 
 ALL_RULES = ("CKPT001", "CKPT002", "CKPT003", "CKPT004", "CKPT005",
-             "CKPT006", "CKPT007", "CKPT008", "CKPT009")
+             "CKPT006", "CKPT007", "CKPT008", "CKPT009", "CKPT010",
+             "CKPT011")
 
 #: one-paragraph rule docs; ``ckptlint --explain`` prints these and the
 #: ROADMAP "Static analysis" section embeds the same text (a test asserts

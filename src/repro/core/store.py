@@ -637,7 +637,9 @@ class DatasetStore:
         t0 = time.perf_counter()
         f = self._reader(name)
         for a, b in zip(starts[:-1], starts[1:]):
-            f.seek(int(sorted_idx[a]) * rb)
+            # row index arrives id-scale from the closure loaders; mix the
+            # byte offset in uint64 so the product cannot wrap int64
+            f.seek(int(np.uint64(sorted_idx[a]) * np.uint64(rb)))
             raw = f.read((b - a) * rb)
             self.stats.read_calls += 1
             self.stats.bytes_read += len(raw)

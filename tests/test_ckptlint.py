@@ -51,13 +51,16 @@ def _rules(findings):
 
 # ===================================================== the tree gate (tier 1)
 def test_committed_tree_lints_clean():
-    findings = lint_paths(["src", "benchmarks"], root=_REPO,
+    """src + benchmarks + examples (PR 10: the restart/postprocess recipes
+    users copy obey the same file-wide protocol rules as the engines)."""
+    findings = lint_paths(["src", "benchmarks", "examples"], root=_REPO,
                           baseline=load_baseline(_DEFAULT_BASELINE))
     assert findings == [], "\n".join(str(f) for f in findings)
 
 
 def test_cli_exit_status_on_clean_tree(capsys):
-    assert main(["src", "benchmarks", "--root", str(_REPO)]) == 0
+    assert main(["src", "benchmarks", "examples",
+                 "--root", str(_REPO)]) == 0
     assert "clean" in capsys.readouterr().err
 
 
@@ -746,6 +749,195 @@ def test_ckpt009_queue_attrs_and_threadless_files_are_exempt():
     assert _lint(no_thread) == []
 
 
+# ============== CKPT010: rank-dependent store traffic (ckptcost, PR 10)
+def test_ckpt010_flags_store_op_in_rank_loop_exactly_once():
+    bad = """
+        @hot_path
+        def f(st, names, starts, rows, R):
+            for r in range(R):
+                st.write_plan(names[r], starts, rows)
+    """
+    rules = _rules(_lint(bad))
+    assert rules.count("CKPT010") == 1
+    assert "CKPT001" in rules          # the statement loop is banned anyway
+
+
+def test_ckpt010_catches_the_comprehension_escape_hatch():
+    """CKPT001 sanctions comprehensions (building views is fine) — but a
+    store op *inside* one still executes O(R) times; only the derived
+    cost polynomial sees that."""
+    bad = """
+        @hot_path
+        def f(st, names, starts, rows, R):
+            return [st.write_plan(names[r], starts, rows)
+                    for r in range(R)]
+    """
+    assert _rules(_lint(bad)) == ["CKPT010"]
+
+
+def test_ckpt010_enters_through_call_sites_with_via_chain():
+    bad = """
+        @hot_path
+        def root(st, names, starts, rows, R):
+            helper(st, names, starts, rows, R)
+
+        def helper(st, names, starts, rows, R):
+            for r in range(R):
+                st.write_plan(names[r], starts, rows)
+    """
+    [finding] = [f for f in _lint(bad) if f.rule == "CKPT010"]
+    assert finding.qualname == "helper"
+    assert finding.via == "root -> helper"
+
+
+def test_ckpt010_guard_does_not_launder_rank_dependence():
+    bad = """
+        @hot_path
+        def f(st, names, starts, rows, R, verbose):
+            for r in range(R):
+                if verbose:
+                    st.write_plan(names[r], starts, rows)
+    """
+    assert _rules(_lint(bad)).count("CKPT010") == 1
+
+
+def test_ckpt010_bounded_and_step_loops_stay_clean():
+    ok = """
+        @hot_path
+        def f(st, names, steps, starts, rows):
+            for name in names:                      # bounded K space
+                st.write_plan(name, starts, rows)
+            for k in steps:                         # series S space
+                st.write_plan(f"s{k}/vec", starts, rows)
+    """
+    assert _lint(ok) == []
+
+
+# ========== CKPT011: collective inside a rank/entity-scale loop (PR 10)
+def test_ckpt011_flags_collective_in_rank_loop_exactly_once():
+    bad = """
+        @hot_path
+        def f(comm, payloads, R):
+            for r in range(R):
+                comm.bcast(payloads[r], root=0)
+    """
+    assert _rules(_lint(bad)).count("CKPT011") == 1
+
+
+def test_ckpt011_flags_collective_in_entity_scale_loop():
+    bad = """
+        @hot_path
+        def f(sf, vals, E):
+            return [sf.reduce(vals) for e in range(E)]
+    """
+    assert _rules(_lint(bad)) == ["CKPT011"]
+
+
+def test_ckpt011_bounded_round_loops_are_the_sanctioned_shape():
+    ok = """
+        @hot_path
+        def f(sf, vals, frontier):
+            while frontier.size:                    # closure-depth rounds
+                vals = sf.bcast(vals)
+                frontier = grow(frontier)
+            return vals
+    """
+    assert _lint(ok) == []
+
+
+# ================================== ckptcost certificate report (PR 10)
+def _cost_of(body: str, qualname: str, path: str = _CORE):
+    _findings, info = lint_program([(textwrap.dedent(body), path)])
+    return info.cost.roots[(path, qualname)]
+
+
+def test_cost_effect_op_calls_count_once_and_are_not_inlined():
+    """staged_write internally calls write_plan — counting both would
+    double the certificate against what IOStats measures."""
+    src = """
+        class Store:
+            def staged_write(self, name, *a):
+                return self.write_plan(name, a)
+
+            def write_plan(self, name, a):
+                pass
+
+        @hot_path
+        def f(st: Store, starts, rows):
+            st.staged_write("ds", starts, rows)
+    """
+    cost = _cost_of(src, "f")
+    assert str(cost.writes) == "1"
+
+
+def test_cost_guard_symbol_absorbs_bounded_loops_only():
+    """A guarded effect inside a bounded loop counts as the guard-true
+    total (G), not G*K — that is exactly how the closing-BFS-round read
+    elision stays representable; a scale variable multiplies through."""
+    src = """
+        @hot_path
+        def f(st, frontier, names, steps, starts, rows):
+            while frontier.size:
+                if frontier.ready:
+                    st.read_plan("ds/G", starts, rows)
+                frontier = grow(frontier)
+            for k in steps:
+                if k:
+                    st.write_plan(f"s{k}", starts, rows)
+    """
+    cost = _cost_of(src, "f")
+    reads = str(cost.reads)
+    assert reads.startswith("G[") and "K[" not in reads
+    writes = str(cost.writes)
+    assert "S" in writes and "G[" in writes     # S never absorbed
+
+
+def test_cost_literal_tuple_loop_is_a_constant_multiplier():
+    src = """
+        @hot_path
+        def f(st, h, starts, rows):
+            for part in ("G", "DOF", "OFF"):
+                st.stage_carry(f"sec/{part}")
+    """
+    assert str(_cost_of(src, "f").writes) == "3"
+
+
+def test_cost_evaluate_terms_substitutes_by_substring():
+    from repro.analysis.costmodel import evaluate_terms
+    terms = [{"coeff": 6, "vars": []},
+             {"coeff": 2, "vars": ["K[f@while x]"]},
+             {"coeff": 3, "vars": ["G[f@cond]"]}]
+    assert evaluate_terms(terms, {"K[f@while x]": 3, "@cond": 1}) == 15
+    assert evaluate_terms(terms, {}, default=0) == 6
+
+
+def test_cost_json_committed_tree_roots_are_rank_free(capsys):
+    """The acceptance gate: every committed hot root's store-op
+    polynomial has a zero R coefficient."""
+    assert main(["src", "benchmarks", "examples", "--root", str(_REPO),
+                 "--cost-json"]) == 0
+    payload = json.loads(capsys.readouterr().out)
+    assert payload["tool"] == "ckptcost"
+    assert payload["scale_vars"] == ["R", "E", "S"]
+    assert payload["clean"] is True
+    assert payload["elapsed_seconds"] > 0
+    assert payload["hot_roots"] == len(payload["roots"]) > 30
+    assert all(r["r_free"] for r in payload["roots"].values())
+    fem = payload["roots"][
+        "src/repro/fem/checkpoint.py::FEMCheckpoint.load_mesh"]
+    assert fem["store_reads"], "load_mesh must derive a read polynomial"
+    assert payload["max_degree"] >= 2
+    assert payload["symbols"]
+
+
+def test_cli_cost_text_report_lists_roots(capsys):
+    assert main(["src", "--root", str(_REPO), "--cost"]) == 0
+    out = capsys.readouterr().out
+    assert "# ckptcost" in out
+    assert "FEMCheckpoint.save_mesh" in out
+    assert "writes:" in out and "# symbols" in out
+
+
 # ================================================== CLI output surfaces (PR 9)
 def test_cli_json_output_round_trips(capsys):
     assert main(["src", "benchmarks", "--root", str(_REPO), "--json"]) == 0
@@ -782,6 +974,31 @@ def test_cli_sarif_output_is_well_formed(capsys):
     assert sarif["runs"][0]["results"] == []
 
 
+def test_cli_sarif_rules_carry_help_uris_and_full_text():
+    from repro.analysis.ckptlint import findings_to_sarif, rule_help_uri
+
+    driver = findings_to_sarif([])["runs"][0]["tool"]["driver"]
+    for rule in driver["rules"]:
+        assert rule["helpUri"] == rule_help_uri(rule["id"])
+        assert rule["helpUri"].startswith("https://")
+        assert rule["helpUri"].endswith(rule["id"].lower())
+        assert rule["fullDescription"]["text"] == RULE_DOCS[rule["id"]]
+        assert rule["shortDescription"]["text"]
+
+
+def test_cli_rejects_combined_output_formats(capsys):
+    """--json + --sarif used to be last-flag-wins; now it is a usage
+    error, as is any other pairing of the four output formats."""
+    import pytest
+
+    for combo in (["--json", "--sarif"], ["--sarif", "--cost"],
+                  ["--cost", "--cost-json"], ["--json", "--cost-json"]):
+        with pytest.raises(SystemExit) as exc:
+            main(["src", "--root", str(_REPO), *combo])
+        assert exc.value.code == 2
+        assert "not allowed with" in capsys.readouterr().err
+
+
 def test_cli_graph_dump_lists_roots_and_reachability(capsys):
     assert main(["src", "--root", str(_REPO), "--graph"]) == 0
     out = capsys.readouterr().out
@@ -804,9 +1021,12 @@ def test_explain_prints_rule_docs_and_matches_roadmap(capsys):
         assert doc in roadmap, f"{rule} doc drifted from ROADMAP"
 
 
-def test_explain_unknown_rule_exits_2(capsys):
+def test_explain_unknown_rule_exits_2_listing_valid_ids(capsys):
     assert main(["--explain", "CKPT999"]) == 2
-    assert "unknown rule" in capsys.readouterr().err
+    err = capsys.readouterr().err
+    assert "unknown rule" in err
+    for rule in ALL_RULES:
+        assert rule in err
 
 
 # ===================================================== analyzer latency smoke
@@ -826,6 +1046,27 @@ def test_whole_program_lint_timed_smoke():
     assert info.files >= base["min_files"]
     assert wall < max(20.0 * base["seconds"], 2.0), \
         f"whole-program lint took {wall:.2f}s vs baseline {base['seconds']}s"
+
+
+def test_ckptcost_timed_smoke():
+    """The cost pass alone (abstract interpretation + summaries over the
+    full hot region) re-run on a prebuilt index must stay within 20x its
+    committed baseline, and its certificate shape must match."""
+    from repro.analysis.costmodel import compute_cost
+
+    base = json.loads(
+        (_REPO / "tests/data/bench_ckptcost_baseline.json").read_text())
+    _findings, info = lint_program(
+        gather_sources(base["paths"], _REPO),
+        baseline=load_baseline(_DEFAULT_BASELINE))
+    t0 = time.perf_counter()
+    report = compute_cost(info.index, info.roots, info.reach)
+    wall = time.perf_counter() - t0
+    assert report.hot_roots >= base["min_hot_roots"]
+    assert report.max_degree == base["max_degree"]
+    assert not report.findings
+    assert wall < max(20.0 * base["seconds"], 2.0), \
+        f"ckptcost pass took {wall:.2f}s vs baseline {base['seconds']}s"
 
 
 # ========================================= @hot_path metadata passthrough

@@ -157,3 +157,59 @@ def test_series_per_step_store_calls_are_rank_independent(tmp_path, R):
         f"per-step read_calls {reads} at R={R} (M={M_LOAD}): expected "
         f"{EXPECTED_PER_STEP_READ_CALLS} per step — a step view is "
         f"re-reading deduped datasets")
+
+
+# ------------------ static cost certificate cross-check (ckptcost, PR 10)
+def test_static_cost_certificate_matches_dynamic_counts():
+    """ckptcost's symbolic store-op polynomials, evaluated at this
+    workload's concrete guard/loop values, must reproduce the dynamically
+    pinned 13 writes / 32 reads — and contain no R variable at all (the
+    static form of the rank-independence gate above).  If either side
+    moves without the other, the abstract interpreter has diverged from
+    the engine it certifies."""
+    import pathlib
+
+    from repro.analysis.ckptlint import (
+        _DEFAULT_BASELINE,
+        gather_sources,
+        lint_program,
+        load_baseline,
+    )
+    from repro.analysis.costmodel import evaluate_terms
+
+    repo = pathlib.Path(__file__).resolve().parents[1]
+    _findings, info = lint_program(
+        gather_sources(["src"], repo),
+        baseline=load_baseline(_DEFAULT_BASELINE))
+    roots = info.cost.root_json()
+
+    for name, entry in roots.items():
+        assert entry["r_free"], \
+            f"{name} derived an R-dependent store polynomial"
+
+    # Concrete iteration space of _roundtrip_counts on tri_mesh(10, 10):
+    # the coordinate and pending-step guards fire (-> 1), the closure BFS
+    # runs K[_close_forest@f_key.size] = 3 rounds, the scattered cones
+    # read fires in 2 of them (the closing frontier is empty — the store
+    # would not count the empty read either), and the plex carries no
+    # labels (every unlisted symbol -> 0 via the default).
+    write_subs = {"vcoords": 1, "pending_step": 1}
+    read_subs = {
+        "K[FEMCheckpoint._close_forest@f_key.size]": 3,
+        "G[FEMCheckpoint._fetch_entities@rows.size]": 2,
+        "__coordinates": 1,
+    }
+
+    fem = "src/repro/fem/checkpoint.py::FEMCheckpoint."
+    writes = sum(
+        evaluate_terms(roots[fem + q]["store_writes"], write_subs, default=0)
+        for q in ("save_mesh", "save_function"))
+    reads = sum(
+        evaluate_terms(roots[fem + q]["store_reads"], read_subs, default=0)
+        for q in ("load_mesh", "load_function"))
+    assert writes == EXPECTED_WRITE_CALLS, (
+        f"static write certificate evaluates to {writes}, dynamic pin is "
+        f"{EXPECTED_WRITE_CALLS}")
+    assert reads == EXPECTED_READ_CALLS, (
+        f"static read certificate evaluates to {reads}, dynamic pin is "
+        f"{EXPECTED_READ_CALLS}")
